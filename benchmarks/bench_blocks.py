@@ -1,0 +1,47 @@
+"""Paper Tables 4/5 + Figure 1 analog: ablation on the number of diffusion
+blocks (1, 2, 4 blocks of a fixed 16-token response)."""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+from .common import build_tables, emit, get_trained_model
+
+
+def run(quick: bool = True, n_problems: int = 5, train_steps: int = 300):
+    from repro.config import ServeConfig
+    from repro.data import synthetic
+    from repro.diffusion import DiffusionEngine
+
+    tok, cfg, params = get_trained_model("math", steps=train_steps)
+    td, tables = build_tables(tok, synthetic.MATH_REGEX)
+    rng = random.Random(11)
+    problems = [synthetic.gen_math_example(rng) for _ in range(n_problems)]
+    gen_len = 16
+
+    for n_blocks in (1, 2, 4):
+        bs = gen_len // n_blocks
+        for method in ("unconstrained", "dingo") if quick else ("unconstrained", "greedy", "dingo"):
+            scfg = ServeConfig(gen_len=gen_len, block_size=bs,
+                               diffusion_steps_per_block=max(2, 8 // n_blocks),
+                               decode=method)
+            eng = DiffusionEngine(params, cfg, scfg, tok.mask_token_id,
+                                  tables if method != "unconstrained" else None)
+            n_parse = n_acc = 0
+            t0 = time.perf_counter()
+            for ex in problems:
+                prompt = np.asarray([tok.encode(ex.prompt + " ")], np.int32)
+                res = eng.generate(prompt, seed=0)
+                expr = synthetic.extract_math_expr(tok.decode(res.tokens[0]))
+                parsed = expr is not None and (method == "unconstrained" or bool(res.valid[0]))
+                n_parse += bool(parsed)
+                n_acc += bool(parsed and expr and synthetic.expr_equivalent(expr, ex.meta["expr"]))
+            us = (time.perf_counter() - t0) / len(problems) * 1e6
+            emit(f"blocks{n_blocks}_{method}", us,
+                 f"acc={100*n_acc/len(problems):.0f}%;parse={100*n_parse/len(problems):.0f}%")
+
+
+if __name__ == "__main__":
+    run(quick=False, n_problems=15, train_steps=150)

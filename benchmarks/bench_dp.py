@@ -1,0 +1,59 @@
+"""DINGO DP complexity benchmark (paper §4.4: O(d·|Q|·(|Q|+|V|))).
+
+Times the jitted DP over block length d, DFA states Q, vocab V, and compares
+the pure-jnp stages against the Pallas kernels (interpret mode on CPU — kernel
+numbers are correctness-path timings, not TPU perf)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    import jax.numpy as jnp
+
+    from repro.core import DingoTables, dingo_decode
+
+    rng = np.random.default_rng(0)
+
+    def make_tables(q, c, v):
+        cnext = rng.integers(0, q, size=(q, c)).astype(np.int32)
+        return DingoTables(
+            class_id=jnp.asarray(rng.integers(0, c, size=v).astype(np.int32)),
+            cnext=jnp.asarray(cnext),
+            mask_reach=jnp.asarray(rng.random((q, q)) < 0.2),
+            live=jnp.asarray(rng.random(q) < 0.5),
+            start=jnp.asarray(0, jnp.int32),
+            mask_token_id=jnp.asarray(v - 1, jnp.int32),
+        )
+
+    sweeps = [
+        # (d, Q, C, V) — paper Table 3 regimes: GSM Q=40, JSON Q<=455
+        (16, 40, 64, 4096),
+        (32, 40, 64, 4096),
+        (64, 40, 64, 4096),
+        (32, 170, 256, 4096),
+        (32, 40, 64, 32768),
+        (32, 40, 64, 131072),
+    ]
+    if quick:
+        sweeps = sweeps[:4]
+    base = None
+    for d, q, c, v in sweeps:
+        tables = make_tables(q, c, v)
+        logp = jnp.asarray(np.log(rng.dirichlet(np.ones(v), size=d) + 1e-9).astype(np.float32))
+        us = timeit(lambda lp: dingo_decode(lp, tables), logp, iters=5)
+        if base is None:
+            base = us
+        emit(f"dingo_dp_d{d}_Q{q}_V{v}", us, f"x{us/base:.2f}_vs_base")
+        # paper Algorithm 3 (Appendix C): transitions for all d in parallel
+        us_p = timeit(
+            lambda lp: dingo_decode(lp, tables, parallel_transitions=True),
+            logp, iters=5,
+        )
+        emit(f"dingo_dp_alg3_d{d}_Q{q}_V{v}", us_p, f"x{us_p/us:.2f}_vs_alg1")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference for the
+DINGO hot loops and the remasking/attention kernels. On CPU the interpret-mode
+numbers validate the code path; TPU timings come from the same wrappers."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+
+    v, c = (32768, 512) if not quick else (8192, 256)
+    logits = jnp.asarray(rng.normal(size=(v,)).astype(np.float32))
+    cid = jnp.asarray(rng.integers(0, c, size=v).astype(np.int32))
+    emit("class_max_jnp", timeit(lambda: ref.class_max_ref(logits, cid, c)), f"V={v};C={c}")
+    emit("class_max_pallas_interp", timeit(lambda: ops.class_max(logits, cid, c)), f"V={v};C={c}")
+
+    q = 256
+    w = jnp.asarray(rng.normal(size=(q,)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(q, q)).astype(np.float32))
+    tk = jnp.asarray(rng.integers(0, v, size=(q, q)).astype(np.int32))
+    emit("maxplus_jnp", timeit(lambda: ref.maxplus_dp_ref(w, e, tk)), f"Q={q}")
+    emit("maxplus_pallas_interp", timeit(lambda: ops.maxplus_dp(w, e, tk)), f"Q={q}")
+
+    d = 32
+    x = jnp.asarray(rng.normal(size=(d, v)).astype(np.float32))
+    emit("softmax_stats_jnp", timeit(lambda: ref.softmax_stats_ref(x)), f"d={d};V={v}")
+    emit("softmax_stats_pallas_interp", timeit(lambda: ops.softmax_stats(x)), f"d={d};V={v}")
+
+    b, h, kvh, dh, s = 2, 8, 2, 64, 2048 if not quick else 512
+    qq = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    emit("decode_attn_jnp", timeit(lambda: ref.decode_attention_ref(qq, kk, vv)), f"S={s}")
+    emit("decode_attn_pallas_interp", timeit(lambda: ops.decode_attention(qq, kk, vv)), f"S={s}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,39 @@
+"""Paper Table 3 analog: DFA construction + token-transition precompute time
+and automaton sizes, per task regex × vocab size."""
+from __future__ import annotations
+
+import time
+
+from .common import emit
+
+
+def run(quick: bool = True):
+    from repro.core import build_token_dfa, compile_pattern
+    from repro.data import synthetic
+    from repro.tokenizer import default_tokenizer
+
+    cases = [("gsm", synthetic.MATH_REGEX_NL)]
+    for idx, (fields, kind) in enumerate(synthetic.JSON_SCHEMAS):
+        cases.append((f"json_{kind}", synthetic.json_schema_regex(fields)))
+
+    vocabs = [None, 4096] if quick else [None, 4096, 32768]
+    for vname in vocabs:
+        tok = default_tokenizer(vname)
+        for name, regex in cases:
+            t0 = time.perf_counter()
+            char_dfa = compile_pattern(regex)
+            t_char = time.perf_counter() - t0
+            td = build_token_dfa(
+                char_dfa, tok.token_bytes,
+                mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
+                special_token_ids=tok.special_token_ids,
+            )
+            emit(
+                f"precompute_{name}_V{td.vocab_size}",
+                (t_char + td.build_time_s) * 1e6,
+                f"Q={td.num_states};C={td.num_classes}",
+            )
+
+
+if __name__ == "__main__":
+    run(quick=False)

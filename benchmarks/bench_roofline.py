@@ -1,0 +1,41 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts in
+experiments/dryrun/ and prints the three terms + bottleneck per
+(arch × shape × mesh). The dry-run must have been run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(quick: bool = True, out_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if not rec.get("ok"):
+            emit(f"roofline_{tag}", 0.0, f"FAILED:{rec.get('error','?')[:60]}")
+            continue
+        r = rec["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+        emit(
+            f"roofline_{tag}",
+            r[dom] * 1e6,  # dominant term in us = the step-time bound
+            f"bottleneck={r['bottleneck']};c={r['compute_s']*1e3:.2f}ms;"
+            f"m={r['memory_s']*1e3:.2f}ms;x={r['collective_s']*1e3:.2f}ms;"
+            f"useful={r['useful_ratio'] if r['useful_ratio'] is None else round(r['useful_ratio'],3)};"
+            f"mem_dev={rec['memory']['bytes_per_device']/2**30:.2f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    run(quick=False)

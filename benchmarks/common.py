@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: timing, CSV emission, cached tiny-model training."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import jax
+import numpy as np
+
+CACHE_DIR = "experiments/.bench_cache"
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def get_trained_model(task: str, steps: int = 80, seed: int = 0):
+    """Train (once, cached) the small e2e diffusion LM on a synthetic task."""
+    from repro.config import TrainConfig
+    from repro.configs.llada_repro import e2e_config
+    from repro.data.loader import TaskDataLoader
+    from repro.models import init_model
+    from repro.tokenizer import default_tokenizer
+    from repro.training import checkpoint, init_train_state, make_train_step
+
+    tok = default_tokenizer()
+    cfg = e2e_config(tok.vocab_size)
+    path = os.path.join(CACHE_DIR, f"{task}_{steps}")
+    if os.path.exists(path + ".npz"):
+        params = checkpoint.restore(
+            path, jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+        )
+        return tok, cfg, params
+    tcfg = TrainConfig(
+        global_batch=8, seq_len=48 if task == "math" else 64, lr=1e-3,
+        warmup_steps=10, total_steps=steps, remat=False, mask_ratio_min=0.15,
+    )
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, tcfg, tok.mask_token_id))
+    loader = TaskDataLoader(task, tok, cfg, tcfg.global_batch, tcfg.seq_len, seed=seed)
+    for _, batch in zip(range(steps), loader):
+        state, _ = step_fn(state, batch)
+    checkpoint.save(path, state.params, meta={"task": task, "steps": steps})
+    return tok, cfg, state.params
+
+
+def build_tables(tok, regex: str):
+    from repro.core import build_token_dfa, compile_pattern, tables_from_tokendfa
+
+    td = build_token_dfa(
+        compile_pattern(regex), tok.token_bytes,
+        mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+    return td, tables_from_tokendfa(td)

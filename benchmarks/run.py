@@ -1,0 +1,58 @@
+"""Benchmark runner: one bench per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Quality tables (gsm/json/blocks/steps) train a tiny diffusion LM once and
+cache it under experiments/.bench_cache.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger sweeps (slower)")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from . import (
+        bench_blocks,
+        bench_dp,
+        bench_gsm,
+        bench_json,
+        bench_kernels,
+        bench_precompute,
+        bench_roofline,
+        bench_steps,
+    )
+
+    benches = {
+        "precompute": bench_precompute,   # paper Table 3
+        "dp": bench_dp,                   # paper §4.4 complexity
+        "kernels": bench_kernels,         # Pallas vs ref
+        "gsm": bench_gsm,                 # paper Table 1
+        "json": bench_json,               # paper Table 2
+        "blocks": bench_blocks,           # paper Tables 4/5 + Fig 1
+        "steps": bench_steps,             # paper Tables 6/7
+        "roofline": bench_roofline,       # §Roofline (from dry-run artifacts)
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            mod.run(quick=not args.full)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benches failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: constrained generation with a diffusion LM in ~40 lines.
+
+Builds a tiny LLaDA-style masked-diffusion model (untrained — DINGO's
+guarantees are decoding-time, so they hold regardless), compiles a regex to a
+token-level DFA, and generates with all three decoders from the paper.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.core import build_token_dfa, compile_pattern, tables_from_tokendfa
+from repro.diffusion import DiffusionEngine
+from repro.models import init_model
+from repro.tokenizer import default_tokenizer
+
+
+def main():
+    tok = default_tokenizer()
+    cfg = e2e_config(tok.vocab_size)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    # user-specified regular expression (paper §3): symbolic-math answers
+    regex = r"<<[a-j]( (\+|\-|\*) [a-j])*>>"
+    td = build_token_dfa(
+        compile_pattern(regex),
+        tok.token_bytes,
+        mask_token_id=tok.mask_token_id,
+        eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+    tables = tables_from_tokendfa(td)
+    print(f"regex -> DFA: {td.num_states} states, {td.num_classes} token classes "
+          f"over |V|={td.vocab_size} (built in {td.build_time_s*1e3:.1f} ms)")
+
+    prompt = np.asarray([tok.encode("q: add up a and b a: ")], np.int32)
+    for method in ("unconstrained", "greedy", "dingo"):
+        scfg = ServeConfig(
+            gen_len=16, block_size=16, diffusion_steps_per_block=8, decode=method
+        )
+        eng = DiffusionEngine(
+            params, cfg, scfg, tok.mask_token_id,
+            tables if method != "unconstrained" else None,
+        )
+        res = eng.generate(prompt, seed=0)
+        text = tok.decode(res.tokens[0])
+        print(f"{method:14s} valid={bool(res.valid[0])!s:5s} -> {text!r}")
+
+
+if __name__ == "__main__":
+    main()

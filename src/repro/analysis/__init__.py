@@ -1,0 +1,7 @@
+from .hlo import HloAnalysis, Totals, analyze_hlo_text
+from .roofline import Roofline, analyze, model_flops_for, parse_collective_bytes
+
+__all__ = [
+    "HloAnalysis", "Totals", "analyze_hlo_text",
+    "Roofline", "analyze", "model_flops_for", "parse_collective_bytes",
+]

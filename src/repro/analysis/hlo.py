@@ -1,0 +1,295 @@
+"""Optimized-HLO text analyzer — the dry-run "profiler" (DESIGN.md §Roofline).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+which silently undercounts a scanned-layer transformer by its depth. This
+module parses ``compiled.as_text()`` into per-computation instruction tables
+and evaluates the module with **loop trip counts multiplied through** (nested
+loops compose), producing:
+
+  * flops             — from dot/convolution ops (2 · prod(out) · contracted)
+  * traffic bytes     — Σ (operand bytes + output bytes) per instruction at
+                        fusion granularity (post-fusion HLO boundaries are the
+                        real HBM round-trips)
+  * collective bytes  — per type (all-reduce / all-gather / reduce-scatter /
+                        all-to-all / collective-permute), output-shape bytes
+  * per-op aggregates — for the §Perf iteration log (what dominates, where)
+
+Trip counts come from the loop condition's comparison constant (the scan
+length), the standard shape XLA emits for lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_OPERAND_RE = re.compile(r"(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_text: str
+    op: str
+    rest: str          # everything after the opening paren (operands + attrs)
+    out_bytes: int
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collective: Optional[Dict[str, float]] = None
+    op_flops: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.collective is None:
+            self.collective = defaultdict(float)
+        if self.op_flops is None:
+            self.op_flops = defaultdict(float)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.collective.items():
+            self.collective[k] += v * mult
+        for k, v in other.op_flops.items():
+            self.op_flops[k] += v * mult
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._shape_of: Dict[Tuple[str, str], str] = {}
+        for cname, instrs in self.computations.items():
+            for ins in instrs:
+                self._shape_of[(cname, ins.name)] = ins.out_text
+        self._totals_cache: Dict[str, Totals] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                # computation headers sit at column 0 and end with "{";
+                # instructions are indented (robust against '=' and parens
+                # inside parameter signatures / layout comments)
+                if line and not line[0].isspace() and line.endswith("{"):
+                    body = line[len("ENTRY "):] if line.startswith("ENTRY") else line
+                    m = re.match(r"\s*(%?[\w\.\-]+)", body)
+                    if m:
+                        cur = m.group(1).lstrip("%")
+                        if line.startswith("ENTRY"):
+                            self.entry = cur
+                        self.computations[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, out_text, op, rest = m.groups()
+            self.computations[cur].append(
+                Instr(
+                    name=name.lstrip("%"),
+                    out_text=out_text,
+                    op=op,
+                    rest=rest,
+                    out_bytes=_shape_bytes(out_text),
+                )
+            )
+
+    # ------------------------------------------------------------------
+    def _operands(self, ins: Instr, cname: str) -> List[str]:
+        # operand names appear before attribute keywords; just take all %refs
+        # in the call parens segment (attrs like to_apply=%x excluded by
+        # cutting at '), ' boundary when present)
+        paren = ins.rest
+        depth = 1
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    paren = paren[:i]
+                    break
+        return [o.lstrip("%") for o in _OPERAND_RE.findall(paren)]
+
+    def _operand_bytes(self, ins: Instr, cname: str) -> int:
+        total = 0
+        for o in self._operands(ins, cname):
+            st = self._shape_of.get((cname, o))
+            if st:
+                total += _shape_bytes(st)
+        return total
+
+    def _dot_flops(self, ins: Instr, cname: str) -> float:
+        ops = self._operands(ins, cname)
+        if not ops:
+            return 0.0
+        lhs_text = self._shape_of.get((cname, ops[0]))
+        if lhs_text is None:
+            return 0.0
+        shapes = _parse_shapes(lhs_text)
+        if not shapes:
+            return 0.0
+        lhs_dims = shapes[0][1]
+        mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        contracted = 1
+        if mm and mm.group(1):
+            for idx in mm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contracted *= lhs_dims[i]
+        out_elems = 0
+        for _, dims in _parse_shapes(ins.out_text):
+            n = 1
+            for d in dims:
+                n *= d
+            out_elems += n
+        return 2.0 * out_elems * contracted
+
+    def _trip_count(self, ins: Instr, cond_name: Optional[str]) -> float:
+        # XLA annotates scan-derived loops: backend_config={"known_trip_count":{"n":"8"}}
+        m = re.search(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)', ins.rest)
+        if m:
+            return float(m.group(1))
+        # fallback: largest integer constant in the condition computation
+        best = 1
+        for ci in self.computations.get(cond_name or "", []):
+            if ci.op == "constant":
+                mm = re.match(r"\s*(\d+)\)", ci.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return float(best)
+
+    def _attr_computation(self, ins: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=(%[\w\.\-]+)", ins.rest)
+        return m.group(1).lstrip("%") if m else None
+
+    # ------------------------------------------------------------------
+    def totals_for(self, cname: str) -> Totals:
+        if cname in self._totals_cache:
+            return self._totals_cache[cname]
+        t = Totals()
+        self._totals_cache[cname] = t  # cycle guard
+        for ins in self.computations.get(cname, []):
+            op = ins.op
+            base = op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                t.collective[base] += ins.out_bytes
+                t.traffic += ins.out_bytes + self._operand_bytes(ins, cname)
+                continue
+            if op == "while":
+                body = self._attr_computation(ins, "body")
+                cond = self._attr_computation(ins, "condition")
+                trips = self._trip_count(ins, cond)
+                if body:
+                    t.add(self.totals_for(body), trips)
+                continue
+            if op in ("call", "custom-call", "async-start"):
+                callee = self._attr_computation(ins, "to_apply") or self._attr_computation(
+                    ins, "called_computation"
+                )
+                if callee:
+                    t.add(self.totals_for(callee))
+                t.traffic += ins.out_bytes + self._operand_bytes(ins, cname)
+                continue
+            if op == "conditional":
+                # take the max branch cost
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|%[\w\.\-]+)", ins.rest)
+                continue
+            if op in ("dot", "convolution"):
+                f = self._dot_flops(ins, cname)
+                t.flops += f
+                t.op_flops["dot"] += f
+            if op == "fusion":
+                # fusion internals: count dot flops inside the fused computation
+                callee = self._attr_computation(ins, "calls")
+                if callee:
+                    inner = self.totals_for(callee)
+                    t.flops += inner.flops
+                    for k, v in inner.op_flops.items():
+                        t.op_flops[k] += v
+                # slice-aware traffic: a parameter consumed only via
+                # dynamic-slice/gather reads its SLICE, not the whole array
+                # (scan passes the full stacked weights/caches as operands)
+                t.traffic += ins.out_bytes + (
+                    self._fusion_param_bytes(callee) if callee
+                    else self._operand_bytes(ins, cname)
+                )
+                continue
+            # HBM traffic at fusion/instruction granularity
+            if op not in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+                t.traffic += ins.out_bytes + self._operand_bytes(ins, cname)
+        return t
+
+    def _fusion_param_bytes(self, callee: str) -> int:
+        """Bytes read from a fusion's parameters, counting only the sliced
+        portion for params consumed exclusively by dynamic-slice / gather."""
+        instrs = self.computations.get(callee, [])
+        params = {i.name: i for i in instrs if i.op == "parameter"}
+        consumed_by: Dict[str, List[Instr]] = {p: [] for p in params}
+        for ins in instrs:
+            if ins.op == "parameter":
+                continue
+            for o in self._operands(ins, callee):
+                if o in consumed_by:
+                    consumed_by[o].append(ins)
+        total = 0
+        for pname, consumers in consumed_by.items():
+            if consumers and all(
+                c.op in ("dynamic-slice", "gather", "slice") for c in consumers
+            ):
+                total += sum(c.out_bytes for c in consumers)
+            else:
+                total += params[pname].out_bytes
+        return total
+
+    def module_totals(self) -> Totals:
+        assert self.entry, "no ENTRY computation found"
+        return self.totals_for(self.entry)
+
+
+def analyze_hlo_text(text: str) -> Totals:
+    return HloAnalysis(text).module_totals()

@@ -1,0 +1,137 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds **per executed step**:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs      (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes_per_device / HBM_bw          (819 GB/s)
+  collective = collective_bytes_per_device / link_bw  (50 GB/s/link ICI)
+
+``compiled.cost_analysis()`` reports the per-device partitioned module's flops
+and bytes. Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO text and sum the OUTPUT shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (methodology note: output
+bytes ≈ bytes moved per device for AG/AR; a mild undercount for ragged cases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.config import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# "  %x = TYPE[...] op-name(" or fusion-wrapped "...= (TYPE[..], TYPE[..]) op-name("
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?P<lhs>.*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(lhs: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-type output bytes summed over the module (per-device program).
+
+    ``-start``/``-done`` async pairs are counted once (on -start)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        out[m.group("op")] += _shape_bytes(m.group("lhs"))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    bytes_accessed: float         # per device
+    collective_bytes: float       # per device
+    collective_by_type: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None   # 6·N·D (global), active params for MoE
+    useful_ratio: Optional[float] = None  # model_flops / (flops × chips)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    cost: dict,
+    hlo_text: str,
+    *,
+    chips: int,
+    model_flops_global: Optional[float] = None,
+    peak_flops: float = V5E_PEAK_FLOPS_BF16,
+    hbm_bw: float = V5E_HBM_BW,
+    ici_bw: float = V5E_ICI_BW,
+) -> Roofline:
+    """Roofline from the trip-count-aware HLO analyzer (analysis/hlo.py);
+    falls back to raw cost_analysis numbers if parsing fails. XLA's own
+    cost_analysis counts while bodies once — see DESIGN.md §Roofline."""
+    try:
+        from .hlo import analyze_hlo_text
+
+        totals = analyze_hlo_text(hlo_text)
+        flops = float(totals.flops)
+        bts = float(totals.traffic)
+        coll = {k: int(v) for k, v in totals.collective.items()}
+    except Exception:
+        flops = float(cost.get("flops", 0.0))
+        bts = float(cost.get("bytes accessed", 0.0))
+        coll = parse_collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    compute_s = flops / peak_flops
+    memory_s = bts / hbm_bw
+    collective_s = coll_total / ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = None
+    if model_flops_global and flops > 0:
+        useful = model_flops_global / (flops * chips)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=bts,
+        collective_bytes=coll_total,
+        collective_by_type=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_ratio=useful,
+    )
+
+
+def model_flops_for(cfg, kind: str, tokens: int) -> float:
+    """6·N_active·tokens for train (fwd+bwd), 2·N_active·tokens for inference."""
+    n_active = cfg.active_params()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,209 @@
+"""Configuration system: model / training / serving / mesh configs.
+
+Every assigned architecture gets a module in ``repro/configs/`` exporting
+``CONFIG: ModelConfig`` (full scale, dry-run only) and ``smoke_config()``
+(reduced variant runnable on CPU). ``repro.configs.get_config(name)`` resolves
+by id (``--arch`` flag in the launchers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    router_score: str = "softmax"      # softmax | sigmoid (deepseek-v3)
+    aux_loss_coef: float = 0.01
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0        # deepseek: leading dense layers
+    moe_every: int = 1                 # jamba: MoE on layers where i % moe_every == moe_offset
+    moe_offset: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    activation: str = "swiglu"         # swiglu | gelu | relu2
+    use_qk_norm: bool = False
+    rope_type: str = "rope"            # rope | mrope | none
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None         # native SWA (mixtral)
+    sliding_window_serve: Optional[int] = None   # serving variant for long_500k
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_period: int = 0        # jamba: 1 attention layer per this many
+    hybrid_attn_offset: int = 0
+    encoder_layers: int = 0            # >0: encoder-decoder (seamless)
+    frontend: Optional[str] = None     # vision | audio (stubbed embeddings)
+    num_frontend_tokens: int = 0       # patches / frames supplied by the stub
+    mtp: bool = False                  # deepseek multi-token prediction head
+    dtype: str = "bfloat16"
+    block_size: int = 32               # diffusion block length (serving)
+    attn_chunk: int = 4096             # online-softmax KV chunk for long seq
+    source: str = ""                   # citation
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'ssm' for decoder layer i."""
+        if self.arch_type == "ssm":
+            return "ssm"
+        if self.hybrid_attn_period:
+            return "attn" if i % self.hybrid_attn_period == self.hybrid_attn_offset else "ssm"
+        return "attn"
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        if i < self.moe.first_dense_layers:
+            return False
+        return (i % self.moe.moe_every) == self.moe.moe_offset
+
+    def active_params(self) -> int:
+        """Approximate active parameter count (MoE: only routed-active experts)."""
+        return _param_count(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_count(self, active_only=False)
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    if cfg.activation == "swiglu":
+        return 3 * cfg.d_model * d_ff
+    return 2 * cfg.d_model * d_ff
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    if cfg.mla is not None:
+        m = cfg.mla
+        p = cfg.d_model * m.q_lora_rank
+        p += m.q_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        p += cfg.d_model * (m.kv_lora_rank + m.qk_rope_head_dim)
+        p += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        p += cfg.num_heads * m.v_head_dim * cfg.d_model
+        return p
+    q = cfg.d_model * cfg.num_heads * cfg.head_dim
+    kv = 2 * cfg.d_model * cfg.num_kv_heads * cfg.head_dim
+    o = cfg.num_heads * cfg.head_dim * cfg.d_model
+    return q + kv + o
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    in_p = cfg.d_model * (2 * d_inner + 2 * s.n_groups * s.d_state + n_heads)
+    conv = (d_inner + 2 * s.n_groups * s.d_state) * s.d_conv
+    out = d_inner * cfg.d_model
+    return in_p + conv + out + 2 * n_heads + d_inner
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    total = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    layers = cfg.num_layers + cfg.encoder_layers
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_kind(i)
+        total += _attn_params(cfg) if kind == "attn" else _ssm_params(cfg)
+        if cfg.is_moe_layer(i):
+            m = cfg.moe
+            n_act = (m.top_k if active_only else m.num_experts) + m.num_shared_experts
+            total += n_act * _ffn_params(cfg, m.d_ff_expert)
+            total += cfg.d_model * m.num_experts  # router
+        elif kind == "attn" or cfg.arch_type != "ssm":
+            total += _ffn_params(cfg, cfg.d_ff) if cfg.d_ff else 0
+        total += 2 * cfg.d_model  # norms
+    for _ in range(cfg.encoder_layers):
+        total += _attn_params(cfg) + _ffn_params(cfg, cfg.d_ff) + 2 * cfg.d_model
+        if cfg.encoder_layers and cfg.is_encdec:
+            total += _attn_params(cfg)  # cross attention (decoder side, approx)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    mask_ratio_min: float = 0.1    # masked-diffusion training noise range
+    mask_ratio_max: float = 1.0
+    zero1: bool = True             # shard optimizer state
+    remat: bool = True             # activation checkpoint per layer
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 32
+    prompt_len: int = 96
+    gen_len: int = 128
+    block_size: int = 32
+    diffusion_steps_per_block: int = 16
+    remask: str = "top_prob"       # random | top_prob | entropy
+    decode: str = "dingo"          # unconstrained | greedy | dingo
+    kernel_impl: str = "jnp"       # jnp | pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+# TPU v5e hardware constants for the roofline model (per chip)
+V5E_PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+V5E_HBM_BW = 819e9                # bytes/s
+V5E_ICI_BW = 50e9                 # bytes/s per link

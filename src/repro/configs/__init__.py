@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture (+ the paper's
+own LLaDA-style model). ``get_config(name)`` resolves the full-scale config;
+``get_smoke_config(name)`` the reduced CPU-runnable variant."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "deepseek-v3-671b",
+    "starcoder2-7b",
+    "mixtral-8x7b",
+    "nemotron-4-340b",
+    "moonshot-v1-16b-a3b",
+    "jamba-v0.1-52b",
+    "qwen2-vl-7b",
+    "seamless-m4t-medium",
+    "qwen3-0.6b",
+    "mamba2-2.7b",
+    "llada-repro",
+]
+
+_MODULES: Dict[str, str] = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "starcoder2-7b": "starcoder2_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "llada-repro": "llada_repro",
+}
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _mod(name).smoke_config()

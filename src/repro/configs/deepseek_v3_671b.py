@@ -1,0 +1,60 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP
+[arXiv:2412.19437]. 61L d_model=7168 128H (GQA kv=128) d_ff_expert=2048
+vocab=129280, MoE 256e top-8, first 3 layers dense."""
+import dataclasses
+
+from repro.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=128,                 # effective (MLA overrides per-component dims)
+    d_ff=18432,                   # dense-prefix layer FFN (DSv3 dense d_ff)
+    vocab_size=129280,
+    activation="swiglu",
+    rope_type="rope",
+    rope_theta=1e4,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        router_score="sigmoid",
+        first_dense_layers=3,
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    mtp=True,
+    sliding_window_serve=8192,    # long_500k serving variant (DESIGN.md §3)
+    source="arXiv:2412.19437",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        moe=dataclasses.replace(
+            CONFIG.moe, num_experts=4, top_k=2, d_ff_expert=64, first_dense_layers=1
+        ),
+        mla=MLAConfig(
+            q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=32,
+            qk_rope_head_dim=16, v_head_dim=32,
+        ),
+        dtype="float32",
+    )

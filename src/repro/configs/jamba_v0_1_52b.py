@@ -1,0 +1,37 @@
+"""jamba-v0.1-52b [hybrid] — Mamba + attention 1:7 interleave, MoE 16e top-2
+on alternating layers [arXiv:2403.19887]. 32L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=65536."""
+import dataclasses
+
+from repro.config import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    activation="swiglu",
+    rope_type="none",             # jamba uses no positional encoding
+    hybrid_attn_period=8,         # 1 attention layer per 8 (offset 4 in paper)
+    hybrid_attn_offset=4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336, moe_every=2, moe_offset=1),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, chunk_size=128),
+    source="arXiv:2403.19887",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=8,             # one full period
+        d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512,
+        moe=dataclasses.replace(CONFIG.moe, num_experts=4, top_k=2, d_ff_expert=64),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32, chunk_size=32),
+        dtype="float32",
+    )

@@ -1,0 +1,40 @@
+"""llada-repro — the paper's own model family (LLaDA, arXiv:2502.09992) at a
+reproduction scale we can train in this container: a dense bidirectional
+transformer trained with the masked-diffusion objective. Full config mirrors
+LLaDA-8B's shape; the smoke/e2e variants are what the quality tables use."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llada-repro",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=126464,
+    activation="swiglu",
+    rope_type="rope",
+    sliding_window_serve=8192,
+    source="arXiv:2502.09992",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=256, vocab_size=512, dtype="float32",
+    )
+
+
+def e2e_config(vocab_size: int) -> ModelConfig:
+    """~2-5M-param model for the end-to-end quality experiments (CPU-trainable)."""
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=4, d_model=192, num_heads=6, num_kv_heads=6, head_dim=32,
+        d_ff=512, vocab_size=vocab_size, dtype="float32", block_size=16,
+    )

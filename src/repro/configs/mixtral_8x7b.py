@@ -1,0 +1,34 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, native sliding-window attention
+[arXiv:2401.04088]. 32L d_model=4096 32H (GQA kv=8) d_ff_expert=14336
+vocab=32000."""
+import dataclasses
+
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    arch_type="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    activation="swiglu",
+    rope_type="rope",
+    rope_theta=1e6,
+    sliding_window=4096,          # native SWA -> long_500k runs natively
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14336),
+    source="arXiv:2401.04088",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, sliding_window=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+        dtype="float32",
+    )

@@ -1,0 +1,46 @@
+"""moonshot-v1-16b-a3b — Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B].
+48L d_model=2048 16H (kv=16) d_ff_expert=1408 vocab=163840, MoE 64e top-6.
+Pool tag says "[dense]" but the spec gives 64 experts top-6 (Moonlight is a
+DeepSeek-V3-style MoE with 2 shared experts); we implement the MoE per the
+spec — recorded in DESIGN.md §3."""
+import dataclasses
+
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    arch_type="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=11264,                   # dense-prefix layer FFN (Moonlight)
+    vocab_size=163840,
+    activation="swiglu",
+    rope_type="rope",
+    rope_theta=5e4,
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        num_shared_experts=2,
+        router_score="sigmoid",
+        first_dense_layers=1,
+    ),
+    sliding_window_serve=8192,
+    source="hf:moonshotai/Moonlight-16B-A3B",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=256, vocab_size=512,
+        moe=dataclasses.replace(
+            CONFIG.moe, num_experts=4, top_k=2, d_ff_expert=64, first_dense_layers=1,
+            num_shared_experts=1,
+        ),
+        dtype="float32",
+    )

@@ -1,0 +1,30 @@
+"""nemotron-4-340b [dense] — GQA kv=8, squared-ReLU MLP [arXiv:2402.16819].
+96L d_model=18432 96H d_ff=73728 vocab=256000."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    arch_type="dense",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    activation="relu2",
+    rope_type="rope",
+    rope_theta=1e4,
+    sliding_window_serve=8192,
+    source="arXiv:2402.16819",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=192, num_heads=8, num_kv_heads=2, head_dim=24,
+        d_ff=384, vocab_size=512, dtype="float32",
+    )

@@ -1,0 +1,34 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064. The ViT vision
+frontend is a STUB per the assignment carve-out: ``input_specs()`` supplies
+pre-computed patch embeddings (B, P, d_model) + 3-axis M-RoPE position ids."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    activation="swiglu",
+    rope_type="mrope",
+    rope_theta=1e6,
+    frontend="vision",
+    num_frontend_tokens=256,      # patch embeddings prepended to the sequence
+    sliding_window_serve=8192,
+    source="arXiv:2409.12191",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, num_frontend_tokens=16, dtype="float32",
+    )

@@ -1,0 +1,32 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA kv=8, tied embeddings [hf:Qwen/Qwen3-8B].
+28L d_model=1024 16H d_ff=3072 vocab=151936."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    activation="swiglu",
+    use_qk_norm=True,
+    rope_type="rope",
+    rope_theta=1e6,
+    tie_embeddings=True,
+    sliding_window_serve=8192,
+    source="hf:Qwen/Qwen3-8B",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, dtype="float32",
+    )

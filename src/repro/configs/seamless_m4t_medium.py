@@ -1,0 +1,36 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal
+[arXiv:2308.11596]. 12L (12 enc + 12 dec) d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206. The mel-spectrogram/conformer audio frontend is a STUB per the
+assignment carve-out: ``input_specs()`` supplies frame embeddings
+(B, F, d_model) consumed by the text decoder via cross-attention."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    num_layers=12,                # decoder layers
+    encoder_layers=12,            # audio encoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    activation="gelu",
+    rope_type="rope",
+    frontend="audio",
+    num_frontend_tokens=512,      # audio frames from the stub frontend
+    sliding_window_serve=8192,
+    source="arXiv:2308.11596",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, encoder_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=256, vocab_size=512, num_frontend_tokens=24,
+        dtype="float32",
+    )

@@ -1,0 +1,30 @@
+"""starcoder2-7b [dense] — GQA kv=4, RoPE, GELU MLP [arXiv:2402.19173].
+32L d_model=4608 36H d_ff=18432 vocab=49152."""
+import dataclasses
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    activation="gelu",
+    rope_type="rope",
+    rope_theta=1e5,
+    sliding_window_serve=8192,
+    source="arXiv:2402.19173",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2, d_model=144, num_heads=6, num_kv_heads=2, head_dim=24,
+        d_ff=288, vocab_size=512, dtype="float32",
+    )

@@ -1,0 +1,22 @@
+"""DINGO core: regex -> DFA -> token-level DFA -> constrained decoders."""
+from .dfa import DFA, compile_pattern
+from .dingo import (
+    NEG_INF,
+    DingoResult,
+    DingoTables,
+    brute_force_decode,
+    dingo_decode,
+    pad_tables,
+    stack_tables,
+    tables_from_tokendfa,
+)
+from .greedy import GreedyResult, greedy_decode, unconstrained_decode
+from .tokendfa import TokenDFA, build_token_dfa
+from . import decoders
+
+__all__ = [
+    "DFA", "compile_pattern", "NEG_INF", "DingoResult", "DingoTables",
+    "brute_force_decode", "dingo_decode", "pad_tables", "stack_tables", "tables_from_tokendfa",
+    "GreedyResult", "greedy_decode", "unconstrained_decode",
+    "TokenDFA", "build_token_dfa", "decoders",
+]

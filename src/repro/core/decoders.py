@@ -1,0 +1,68 @@
+"""Decoder plug-ins for the diffusion engine.
+
+A decoder consumes the post-remask per-position log distribution of the current
+block (committed positions are one-hot; remasked positions are one-hot on ⊥) and
+returns the block's token string for this diffusion step, plus carry state for
+semi-autoregressive threading (paper Appendix D).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dingo import NEG_INF, DingoResult, DingoTables, dingo_decode
+from .greedy import greedy_decode, unconstrained_decode
+
+UNCONSTRAINED = "unconstrained"
+GREEDY = "greedy"
+DINGO = "dingo"
+
+
+class DecodeOut(NamedTuple):
+    tokens: jax.Array    # (d,) int32
+    valid: jax.Array     # () bool
+    q_final: jax.Array   # () int32 (DINGO; -1 otherwise)
+    logprob: jax.Array   # () f32
+
+
+def decode_block(
+    method: str,
+    logp: jax.Array,
+    tables: Optional[DingoTables],
+    w0: Optional[jax.Array] = None,
+    reach0: Optional[jax.Array] = None,
+    *,
+    impl: str = "jnp",
+) -> DecodeOut:
+    if method == UNCONSTRAINED:
+        toks = unconstrained_decode(logp)
+        lp = jnp.take_along_axis(logp, toks[:, None], axis=1).sum()
+        return DecodeOut(toks, jnp.array(True), jnp.array(-1, jnp.int32), lp)
+    if tables is None:
+        raise ValueError(f"method {method!r} requires DINGO tables")
+    if method == GREEDY:
+        r = greedy_decode(logp, tables, reach0)
+        return DecodeOut(r.tokens, r.valid, jnp.array(-1, jnp.int32), r.logprob)
+    if method == DINGO:
+        r = dingo_decode(logp, tables, w0, impl=impl)
+        return DecodeOut(r.tokens, r.valid, r.q_final, r.logprob)
+    raise ValueError(f"unknown decode method {method!r}")
+
+
+def initial_w0(tables: DingoTables, dtype=jnp.float32) -> jax.Array:
+    q = tables.cnext.shape[0]
+    return jnp.where(jnp.arange(q) == tables.start, 0.0, NEG_INF).astype(dtype)
+
+
+def w0_from_state(tables: DingoTables, state: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Semi-AR: restart the DP from a carried DFA state (paper Appendix D)."""
+    q = tables.cnext.shape[0]
+    return jnp.where(jnp.arange(q) == state, 0.0, NEG_INF).astype(dtype)
+
+
+def reach_from_state(tables: DingoTables, state: jax.Array) -> jax.Array:
+    q = tables.cnext.shape[0]
+    return jnp.arange(q) == state

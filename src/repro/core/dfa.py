@@ -1,0 +1,175 @@
+"""DFA: subset construction from NFA, minimization, live states.
+
+The DFA is *complete* over the byte alphabet: transitions are stored as a dense
+``(num_states, 256)`` int32 numpy array. State 0..n-1; missing transitions go to an
+explicit dead (sink) state so every row is total. We additionally expose:
+
+- ``accepting``: bool[n]
+- ``live``: bool[n] — state can reach an accepting state (Definition 2.6)
+- ``start``: int
+
+Minimization is Moore partition refinement (O(n^2 * 256) worst case — fine at the
+regex sizes the paper uses: tens to hundreds of states).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List
+
+import numpy as np
+
+from . import nfa as nfa_mod
+from . import regex as rx
+
+ALPHABET = 256
+
+
+@dataclasses.dataclass
+class DFA:
+    start: int
+    trans: np.ndarray      # (n, 256) int32, complete
+    accepting: np.ndarray  # (n,) bool
+    live: np.ndarray       # (n,) bool
+
+    @property
+    def num_states(self) -> int:
+        return self.trans.shape[0]
+
+    # -- string API (bytes) -------------------------------------------------
+    def step(self, state: int, byte: int) -> int:
+        return int(self.trans[state, byte])
+
+    def run(self, data: bytes, state: int | None = None) -> int:
+        q = self.start if state is None else state
+        for b in data:
+            q = int(self.trans[q, b])
+        return q
+
+    def accepts(self, data: bytes) -> bool:
+        return bool(self.accepting[self.run(data)])
+
+    def is_valid_prefix(self, data: bytes) -> bool:
+        """True iff ``data`` can be extended into an accepted string."""
+        return bool(self.live[self.run(data)])
+
+
+def _compute_live(trans: np.ndarray, accepting: np.ndarray) -> np.ndarray:
+    """Backward reachability from accepting states."""
+    n = trans.shape[0]
+    live = accepting.copy()
+    # build reverse adjacency as sets
+    preds: List[set] = [set() for _ in range(n)]
+    for s in range(n):
+        for t in set(trans[s].tolist()):
+            preds[t].add(s)
+    stack = [s for s in range(n) if live[s]]
+    while stack:
+        t = stack.pop()
+        for s in preds[t]:
+            if not live[s]:
+                live[s] = True
+                stack.append(s)
+    return live
+
+
+def determinize(n: nfa_mod.NFA) -> DFA:
+    """Subset construction. Dead sink state appended last (if needed)."""
+    start_set = n.eps_closure({n.start})
+    index: Dict[FrozenSet[int], int] = {start_set: 0}
+    order: List[FrozenSet[int]] = [start_set]
+    rows: List[np.ndarray] = []
+    work = [start_set]
+    while work:
+        cur = work.pop()
+        row = np.zeros(ALPHABET, dtype=np.int64)
+        # group characters by identical NFA move sets for speed
+        # collect relevant charsets from member states
+        char_targets: Dict[int, set] = {}
+        for s in cur:
+            for cs, t in n.edges[s]:
+                if cs is None:
+                    continue
+                for ch in cs:
+                    char_targets.setdefault(ch, set()).add(t)
+        for ch in range(ALPHABET):
+            tgt = char_targets.get(ch)
+            if not tgt:
+                row[ch] = -1
+                continue
+            closed = n.eps_closure(set(tgt))
+            if closed not in index:
+                index[closed] = len(order)
+                order.append(closed)
+                work.append(closed)
+            row[ch] = index[closed]
+        rows.append((cur, row))
+    # rows were appended in pop order; rebuild aligned to `order`
+    row_by_set = {id(cs): r for cs, r in rows}
+    trans_list = []
+    for cs in order:
+        trans_list.append(row_by_set[id(cs)])
+    nstates = len(order)
+    # dead state
+    dead = nstates
+    trans = np.full((nstates + 1, ALPHABET), dead, dtype=np.int64)
+    for i, row in enumerate(trans_list):
+        r = row.copy()
+        r[r == -1] = dead
+        trans[i] = r
+    accepting = np.zeros(nstates + 1, dtype=bool)
+    for i, cs in enumerate(order):
+        accepting[i] = n.accept in cs
+    live = _compute_live(trans, accepting)
+    return DFA(start=0, trans=trans.astype(np.int32), accepting=accepting, live=live)
+
+
+def minimize(d: DFA) -> DFA:
+    """Moore partition refinement, then drop unreachable states.
+
+    Keeps exactly one dead state (if the language is not total)."""
+    n = d.num_states
+    # initial partition: accepting vs not
+    part = d.accepting.astype(np.int64).copy()
+    nparts = len(np.unique(part))
+    while True:
+        # signature: (own part, parts of successors); refinement only splits,
+        # so a fixed part-count means a fixed point.
+        sig = np.concatenate([part[:, None], part[d.trans]], axis=1)
+        uniq, new_part = np.unique(sig, axis=0, return_inverse=True)
+        part = new_part.astype(np.int64).reshape(-1)
+        if len(uniq) == nparts:
+            break
+        nparts = len(uniq)
+    # build quotient
+    rep_trans = np.zeros((nparts, ALPHABET), dtype=np.int32)
+    rep_acc = np.zeros(nparts, dtype=bool)
+    for s in range(n):
+        p = part[s]
+        rep_trans[p] = part[d.trans[s]]
+        rep_acc[p] = d.accepting[s]
+    start = int(part[d.start])
+    # drop unreachable
+    reach = np.zeros(nparts, dtype=bool)
+    stack = [start]
+    reach[start] = True
+    while stack:
+        s = stack.pop()
+        for t in set(rep_trans[s].tolist()):
+            if not reach[t]:
+                reach[t] = True
+                stack.append(t)
+    remap = -np.ones(nparts, dtype=np.int64)
+    remap[reach] = np.arange(int(reach.sum()))
+    trans = rep_trans[reach]
+    trans = remap[trans].astype(np.int32)
+    acc = rep_acc[reach]
+    live = _compute_live(trans, acc)
+    return DFA(start=int(remap[start]), trans=trans, accepting=acc, live=live)
+
+
+def compile_pattern(pattern: str, *, do_minimize: bool = True) -> DFA:
+    """regex pattern -> (minimized) complete DFA over bytes.
+
+    The pattern is matched against the *whole* string (like ``re.fullmatch``)."""
+    d = determinize(nfa_mod.from_pattern(pattern))
+    return minimize(d) if do_minimize else d

@@ -1,0 +1,285 @@
+"""DINGO dynamic-programming constrained decoder (paper Algorithm 1 / 3).
+
+Log-space (max-plus) Viterbi over (block position × DFA state):
+
+    W[i, q] = max over token sequences t_1..t_i with δ*(t_1..t_i, q0) = q
+              of  Σ_j log v_j[t_j]
+
+with backpointers ``(prev_state, token)`` per (i, q), then backward path
+reconstruction from the best *live* end state (Observations 1–2 in the paper).
+
+The per-position transition scores use the token-class decomposition
+(``tokendfa.py``): stage 1 is a segment-max of the position's log-probs into C
+class bins (the O(V) hot loop — Pallas kernel ``class_max``); stage 2 is a
+max-plus update over the small (Q, C) / (Q, Q) tables (Pallas kernel
+``maxplus_dp``). A pure-jnp path is used by default so everything runs on CPU;
+``impl='pallas'`` routes stage 1/2 through the kernels (interpret mode on CPU).
+
+Everything here is jit-able with static (d, Q, C, V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tokendfa import TokenDFA
+
+NEG_INF = -1e30
+
+
+class DingoTables(NamedTuple):
+    """Device-side packed DINGO tables (a pytree; all jnp arrays)."""
+
+    class_id: jax.Array   # (V,) int32
+    cnext: jax.Array      # (Q, C) int32
+    mask_reach: jax.Array  # (Q, Q) bool
+    live: jax.Array       # (Q,) bool
+    start: jax.Array      # () int32
+    mask_token_id: jax.Array  # () int32
+
+    @property
+    def num_states(self) -> int:
+        return self.cnext.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.cnext.shape[1]
+
+
+def tables_from_tokendfa(td: TokenDFA) -> DingoTables:
+    return DingoTables(
+        class_id=jnp.asarray(td.class_id, jnp.int32),
+        cnext=jnp.asarray(td.cnext, jnp.int32),
+        mask_reach=jnp.asarray(td.mask_reach),
+        live=jnp.asarray(td.live),
+        start=jnp.asarray(td.start, jnp.int32),
+        mask_token_id=jnp.asarray(td.mask_token_id, jnp.int32),
+    )
+
+
+def stack_tables(tds) -> DingoTables:
+    """Stack heterogeneous requests' tables into one batched DingoTables
+    (leading batch axis on every leaf) by padding to the max (Q, C) — lets a
+    single vmapped serve_step decode a batch where every request carries a
+    DIFFERENT regex (e.g. per-request JSON schemas, paper §5)."""
+    q_pad = max(td.num_states for td in tds)
+    c_pad = max(td.num_classes for td in tds)
+    padded = [pad_tables(td, q_pad, c_pad) for td in tds]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def pad_tables(td: TokenDFA, q_pad: int, c_pad: int) -> DingoTables:
+    """Pad tables to (q_pad, c_pad) so heterogeneous requests can be stacked.
+
+    Padding states are dead (non-live, unreachable); padding classes map every
+    state to the dead state and are never selected because no token maps to them
+    (class_id stays within the real range).
+    """
+    Q, C = td.cnext.shape
+    if q_pad < Q or c_pad < C:
+        raise ValueError(f"pad sizes ({q_pad},{c_pad}) below actual ({Q},{C})")
+    cnext = np.full((q_pad, c_pad), td.dead, dtype=np.int32)
+    cnext[:Q, :C] = td.cnext
+    mask_reach = np.zeros((q_pad, q_pad), dtype=bool)
+    mask_reach[:Q, :Q] = td.mask_reach
+    live = np.zeros(q_pad, dtype=bool)
+    live[:Q] = td.live
+    return DingoTables(
+        class_id=jnp.asarray(td.class_id, jnp.int32),
+        cnext=jnp.asarray(cnext, jnp.int32),
+        mask_reach=jnp.asarray(mask_reach),
+        live=jnp.asarray(live),
+        start=jnp.asarray(td.start, jnp.int32),
+        mask_token_id=jnp.asarray(td.mask_token_id, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# stage 1: class max  (V,) -> (C,), (C,)
+# ---------------------------------------------------------------------------
+def class_max_jnp(logits: jax.Array, class_id: jax.Array, num_classes: int):
+    """cmax[c] = max_{t: class_id[t]=c} logits[t]; carg[c] = that argmax token."""
+    cmax = jax.ops.segment_max(logits, class_id, num_segments=num_classes)
+    cmax = jnp.maximum(cmax, NEG_INF)  # empty segments -> -inf; clamp for safety
+    v = logits.shape[0]
+    hit = logits >= cmax[class_id]
+    cand = jnp.where(hit, jnp.arange(v, dtype=jnp.int32), v)
+    carg = jax.ops.segment_min(cand, class_id, num_segments=num_classes)
+    carg = jnp.where(carg >= v, 0, carg).astype(jnp.int32)
+    return cmax, carg
+
+
+def _class_max(logits, class_id, num_classes, impl: str):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.class_max(logits, class_id, num_classes)
+    return class_max_jnp(logits, class_id, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# stage 2a: per-position edge scores E[q', q] + token backpointers
+# ---------------------------------------------------------------------------
+def edge_scores(
+    cmax: jax.Array, carg: jax.Array, logp_mask: jax.Array, tables: DingoTables
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-level edge matrix for one position.
+
+    E[q', q]   = best log-prob of any single token moving q' -> q
+                 (including the mask pseudo-token via δ_⊥)
+    tok[q', q] = the corresponding token id (mask_token_id for mask edges)
+    """
+    Q, C = tables.cnext.shape
+    seg = (jnp.arange(Q, dtype=jnp.int32)[:, None] * Q + tables.cnext).reshape(-1)
+    vals = jnp.broadcast_to(cmax[None, :], (Q, C)).reshape(-1)
+    e_tok = jax.ops.segment_max(vals, seg, num_segments=Q * Q)
+    e_tok = jnp.maximum(e_tok, NEG_INF).reshape(Q, Q)
+    # argmax class per (q', q): smallest class index attaining the max
+    hit = vals >= e_tok.reshape(-1)[seg]
+    cls = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None, :], (Q, C)).reshape(-1)
+    cand = jnp.where(hit, cls, C)
+    amin_c = jax.ops.segment_min(cand, seg, num_segments=Q * Q).reshape(Q, Q)
+    tok = carg[jnp.clip(amin_c, 0, C - 1)]
+    # mask pseudo-token edges
+    e_mask = jnp.where(tables.mask_reach, logp_mask, NEG_INF)
+    use_mask = e_mask > e_tok
+    e = jnp.where(use_mask, e_mask, e_tok)
+    tok = jnp.where(use_mask, tables.mask_token_id, tok).astype(jnp.int32)
+    return e, tok
+
+
+def maxplus_update_jnp(w: jax.Array, e: jax.Array, tok: jax.Array):
+    """W'[q] = max_{q'} W[q'] + E[q', q], with (prev-state, token) backpointers."""
+    scores = w[:, None] + e           # (Q, Q)
+    wnew = scores.max(axis=0)
+    bq = scores.argmax(axis=0).astype(jnp.int32)
+    btok = tok[bq, jnp.arange(tok.shape[1], dtype=jnp.int32)]
+    wnew = jnp.maximum(wnew, NEG_INF)
+    return wnew, bq, btok
+
+
+def _maxplus_update(w, e, tok, impl: str):
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.maxplus_dp(w, e, tok)
+    return maxplus_update_jnp(w, e, tok)
+
+
+# ---------------------------------------------------------------------------
+# full DP
+# ---------------------------------------------------------------------------
+class DingoResult(NamedTuple):
+    tokens: jax.Array    # (d,) int32 — optimal string (may contain mask tokens)
+    valid: jax.Array     # () bool — a live end state was reachable
+    logprob: jax.Array   # () f32 — log prob of the optimal string
+    q_final: jax.Array   # () int32 — end DFA state (for semi-AR threading)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "parallel_transitions"))
+def dingo_decode(
+    logp: jax.Array,            # (d, V) per-position log-probs (incl. mask col)
+    tables: DingoTables,
+    w0: Optional[jax.Array] = None,  # (Q,) initial log-weights; default: start state
+    *,
+    impl: str = "jnp",
+    parallel_transitions: bool = False,
+) -> DingoResult:
+    """Paper Algorithm 1 (sequential) or Algorithm 3 (Appendix C) when
+    ``parallel_transitions``: the O(d·|Q|·(|Q|+|V|)) transition-cost stage is
+    computed for ALL d positions in parallel (vmap — on TPU, d-way batched
+    class-max/edge kernels), leaving only the O(d·|Q|²) max-plus chain
+    sequential: computational depth O(|Q|²+|Q|·|V|) + O(d·|Q|²)."""
+    d, V = logp.shape
+    Q, C = tables.cnext.shape
+    if w0 is None:
+        w0 = jnp.where(
+            jnp.arange(Q) == tables.start, 0.0, NEG_INF
+        ).astype(logp.dtype)
+
+    if parallel_transitions:
+        def trans_for(logp_i):
+            cmax, carg = _class_max(logp_i, tables.class_id, C, impl)
+            return edge_scores(cmax, carg, logp_i[tables.mask_token_id], tables)
+
+        e_all, tok_all = jax.vmap(trans_for)(logp)        # (d, Q, Q) each
+
+        def step(w, et):
+            e, tok = et
+            wnew, bq, btok = _maxplus_update(w, e, tok, impl)
+            return wnew, (bq, btok)
+
+        w_final, (bqs, btoks) = jax.lax.scan(step, w0, (e_all, tok_all))
+    else:
+        def step(w, logp_i):
+            cmax, carg = _class_max(logp_i, tables.class_id, C, impl)
+            e, tok = edge_scores(cmax, carg, logp_i[tables.mask_token_id], tables)
+            wnew, bq, btok = _maxplus_update(w, e, tok, impl)
+            return wnew, (bq, btok)
+
+        w_final, (bqs, btoks) = jax.lax.scan(step, w0, logp)
+
+    w_live = jnp.where(tables.live, w_final, NEG_INF)
+    q_max = jnp.argmax(w_live).astype(jnp.int32)
+    valid = w_live[q_max] > NEG_INF / 2
+
+    def back(q, bp):
+        bq, btok = bp
+        return bq[q], btok[q]
+
+    _, tokens = jax.lax.scan(back, q_max, (bqs, btoks), reverse=True)
+    return DingoResult(
+        tokens=tokens.astype(jnp.int32),
+        valid=valid,
+        logprob=w_live[q_max],
+        q_final=q_max,
+    )
+
+
+# vmapped variant for batched serving (shared tables)
+dingo_decode_batch = jax.jit(
+    jax.vmap(lambda lp, t, w0: dingo_decode(lp, t, w0), in_axes=(0, None, 0)),
+)
+
+
+def brute_force_decode(
+    logp: np.ndarray, td: TokenDFA, w0_state: Optional[int] = None
+) -> Tuple[Optional[list], float]:
+    """Exhaustive-enumeration oracle for tests: argmax over all |V|^d strings
+    (mask token included) whose substitution set intersects L_P(R). Exponential —
+    only for tiny V, d."""
+    import itertools
+
+    d, V = logp.shape
+    start = td.start if w0_state is None else w0_state
+    best, best_lp = None, -np.inf
+    mask = td.mask_token_id
+    for combo in itertools.product(range(V), repeat=d):
+        lp = sum(logp[i, t] for i, t in enumerate(combo))
+        if lp <= best_lp:
+            continue
+        # run (NFA-style for masks)
+        states = {start}
+        ok = True
+        for t in combo:
+            if t == mask:
+                nxt = set()
+                for q in states:
+                    nxt |= set(np.where(td.mask_reach[q])[0].tolist())
+            else:
+                nxt = {int(td.trans[q, t]) for q in states}
+            nxt = {q for q in nxt if q != td.dead}
+            if not nxt:
+                ok = False
+                break
+            states = nxt
+        if not ok:
+            continue
+        if any(td.live[q] for q in states):
+            best, best_lp = list(combo), lp
+    return best, best_lp

@@ -1,0 +1,76 @@
+"""Greedy-constrained baseline (paper §5 "Greedy Constrained").
+
+Mirrors autoregressive constrained decoding: iterate positions left-to-right,
+maintain the set of DFA states reachable given the choices so far (mask tokens
+contribute via δ_⊥, exactly like an NFA step), and at each position zero out
+tokens that cannot move any reachable state to a *live* state. Decode argmax on
+the masked distribution. As the paper shows, this is sound per-position but
+neither complete (can strand in a state with no length-d completion) nor optimal.
+
+Implemented as a jit-able scan so it can run inside ``serve_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .dingo import NEG_INF, DingoTables
+
+
+class GreedyResult(NamedTuple):
+    tokens: jax.Array   # (d,) int32
+    valid: jax.Array    # () bool — True iff a live state remains reachable at the end
+    logprob: jax.Array  # () f32 under the *unmasked* distribution
+
+
+@functools.partial(jax.jit, static_argnames=())
+def greedy_decode(
+    logp: jax.Array,          # (d, V) log-probs (mask column included)
+    tables: DingoTables,
+    reach0: Optional[jax.Array] = None,  # (Q,) bool initial reachable set
+) -> GreedyResult:
+    d, V = logp.shape
+    Q, C = tables.cnext.shape
+    if reach0 is None:
+        reach0 = jnp.arange(Q) == tables.start
+
+    # next-state liveness per (q, class): live[cnext]
+    cnext_live = tables.live[tables.cnext]          # (Q, C) bool
+
+    def step(carry, logp_i):
+        reach, lp_acc = carry
+        # token validity: some reachable state moves to a live state on t's class
+        class_ok = (reach[:, None] & cnext_live).any(0)        # (C,)
+        tok_ok = class_ok[tables.class_id]                     # (V,)
+        # the mask token is always allowed if any reachable state has a live
+        # mask-successor (i.e. the position can stay masked)
+        mask_ok = (reach[:, None] & tables.mask_reach & tables.live[None, :]).any()
+        tok_ok = tok_ok.at[tables.mask_token_id].set(mask_ok)
+        masked = jnp.where(tok_ok, logp_i, NEG_INF)
+        t = jnp.argmax(masked).astype(jnp.int32)
+        any_ok = tok_ok.any()
+        # advance the reachable set
+        is_mask = t == tables.mask_token_id
+        next_tok = jnp.take(tables.cnext, tables.class_id[t], axis=1)  # (Q,)
+        reach_tok = (
+            jnp.zeros((Q,), jnp.int32).at[next_tok].max(reach.astype(jnp.int32)) > 0
+        )
+        reach_tok = reach_tok & tables.live  # prune dead/non-live
+        reach_mask = (reach[:, None] & tables.mask_reach).any(0) & tables.live
+        reach_new = jnp.where(is_mask, reach_mask, reach_tok)
+        reach_new = jnp.where(any_ok, reach_new, reach)  # stuck: keep (invalid run)
+        lp_acc = lp_acc + jnp.where(any_ok, logp_i[t], NEG_INF)
+        return (reach_new, lp_acc), (t, any_ok)
+
+    (reach_f, lp), (tokens, oks) = jax.lax.scan(step, (reach0, jnp.array(0.0, logp.dtype)), logp)
+    valid = oks.all() & (reach_f & tables.live).any()
+    return GreedyResult(tokens=tokens, valid=valid, logprob=lp)
+
+
+@jax.jit
+def unconstrained_decode(logp: jax.Array) -> jax.Array:
+    """(d, V) -> (d,) argmax tokens (the paper's Unconstrained baseline)."""
+    return jnp.argmax(logp, axis=-1).astype(jnp.int32)

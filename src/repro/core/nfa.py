@@ -1,0 +1,118 @@
+"""Thompson construction: regex AST -> epsilon-NFA.
+
+States are integers. Transitions are stored per state as a list of
+``(charset_or_None, target)`` pairs where ``None`` denotes an epsilon edge.
+Character sets are frozensets of byte values (see ``repro.core.regex``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from . import regex as rx
+
+
+@dataclasses.dataclass
+class NFA:
+    start: int
+    accept: int
+    # edges[s] = [(charset | None, target), ...]
+    edges: List[List[Tuple[Optional[FrozenSet[int]], int]]]
+
+    @property
+    def num_states(self) -> int:
+        return len(self.edges)
+
+    def eps_closure(self, states: Set[int]) -> FrozenSet[int]:
+        stack = list(states)
+        seen = set(states)
+        while stack:
+            s = stack.pop()
+            for cs, t in self.edges[s]:
+                if cs is None and t not in seen:
+                    seen.add(t)
+                    stack.append(t)
+        return frozenset(seen)
+
+    def move(self, states: FrozenSet[int], ch: int) -> Set[int]:
+        out: Set[int] = set()
+        for s in states:
+            for cs, t in self.edges[s]:
+                if cs is not None and ch in cs:
+                    out.add(t)
+        return out
+
+
+class _Builder:
+    def __init__(self):
+        self.edges: List[List[Tuple[Optional[FrozenSet[int]], int]]] = []
+
+    def new_state(self) -> int:
+        self.edges.append([])
+        return len(self.edges) - 1
+
+    def add(self, s: int, cs: Optional[FrozenSet[int]], t: int) -> None:
+        self.edges[s].append((cs, t))
+
+    # returns (start, accept)
+    def build(self, node: rx.Node) -> Tuple[int, int]:
+        if isinstance(node, rx.Epsilon):
+            s, a = self.new_state(), self.new_state()
+            self.add(s, None, a)
+            return s, a
+        if isinstance(node, rx.CharSet):
+            s, a = self.new_state(), self.new_state()
+            if node.chars:
+                self.add(s, node.chars, a)
+            return s, a  # empty charset: dead fragment (never matches)
+        if isinstance(node, rx.Concat):
+            first_s, prev_a = self.build(node.parts[0])
+            for part in node.parts[1:]:
+                ns, na = self.build(part)
+                self.add(prev_a, None, ns)
+                prev_a = na
+            return first_s, prev_a
+        if isinstance(node, rx.Alt):
+            s, a = self.new_state(), self.new_state()
+            for opt in node.options:
+                os_, oa = self.build(opt)
+                self.add(s, None, os_)
+                self.add(oa, None, a)
+            return s, a
+        if isinstance(node, rx.Star):
+            s, a = self.new_state(), self.new_state()
+            is_, ia = self.build(node.inner)
+            self.add(s, None, is_)
+            self.add(s, None, a)
+            self.add(ia, None, is_)
+            self.add(ia, None, a)
+            return s, a
+        if isinstance(node, rx.Plus):
+            return self.build(rx.Concat((node.inner, rx.Star(node.inner))))
+        if isinstance(node, rx.Opt):
+            s, a = self.new_state(), self.new_state()
+            is_, ia = self.build(node.inner)
+            self.add(s, None, is_)
+            self.add(s, None, a)
+            self.add(ia, None, a)
+            return s, a
+        if isinstance(node, rx.Repeat):
+            parts: List[rx.Node] = [node.inner] * node.lo
+            if node.hi == -1:
+                parts.append(rx.Star(node.inner))
+            else:
+                parts.extend([rx.Opt(node.inner)] * (node.hi - node.lo))
+            if not parts:
+                return self.build(rx.Epsilon())
+            return self.build(rx.Concat(tuple(parts)) if len(parts) > 1 else parts[0])
+        raise TypeError(f"unknown AST node {node!r}")
+
+
+def from_ast(node: rx.Node) -> NFA:
+    b = _Builder()
+    start, accept = b.build(node)
+    return NFA(start=start, accept=accept, edges=b.edges)
+
+
+def from_pattern(pattern: str) -> NFA:
+    return from_ast(rx.parse(pattern))

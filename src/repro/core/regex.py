@@ -1,0 +1,298 @@
+"""Regular-expression parser.
+
+Produces an AST consumed by the Thompson NFA builder (``repro.core.nfa``).
+
+Supported syntax (the subset used by the paper's GSM-Symbolic / JSON regexes):
+
+    literals            a b c ...
+    escapes             \\n \\t \\r \\\\ \\. \\* \\+ \\? \\( \\) \\[ \\] \\{ \\} \\| \\- \\d \\w \\s \\D \\W \\S \\x41
+    any                 .          (any char except newline, like ``re``)
+    classes             [a-z0-9_]  [^a-z]
+    grouping            ( ... )    (?: ... )   (capture semantics are irrelevant here)
+    alternation         a|b
+    repetition          *  +  ?  {m}  {m,}  {m,n}
+
+The alphabet is bytes 0..255 (we operate on UTF-8 byte strings, matching how a
+tokenizer's tokens decompose into bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Tuple, Union
+
+MAX_CHAR = 0xFF  # byte alphabet
+
+
+# ---------------------------------------------------------------------------
+# AST node types
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Epsilon:
+    """Matches the empty string."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CharSet:
+    """A set of byte values, stored as a frozenset of ints."""
+
+    chars: FrozenSet[int]
+
+    def __post_init__(self):
+        if not isinstance(self.chars, frozenset):
+            object.__setattr__(self, "chars", frozenset(self.chars))
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat:
+    parts: Tuple["Node", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Alt:
+    options: Tuple["Node", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Star:
+    inner: "Node"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plus:
+    inner: "Node"
+
+
+@dataclasses.dataclass(frozen=True)
+class Opt:
+    inner: "Node"
+
+
+@dataclasses.dataclass(frozen=True)
+class Repeat:
+    inner: "Node"
+    lo: int
+    hi: int  # -1 == unbounded
+
+
+Node = Union[Epsilon, CharSet, Concat, Alt, Star, Plus, Opt, Repeat]
+
+_DIGITS = frozenset(range(ord("0"), ord("9") + 1))
+_WORD = frozenset(
+    list(range(ord("a"), ord("z") + 1))
+    + list(range(ord("A"), ord("Z") + 1))
+    + list(range(ord("0"), ord("9") + 1))
+    + [ord("_")]
+)
+_SPACE = frozenset(ord(c) for c in " \t\n\r\f\v")
+_ALL = frozenset(range(MAX_CHAR + 1))
+_DOT = _ALL - {ord("\n")}
+
+_CLASS_ESCAPES = {
+    "d": _DIGITS,
+    "D": _ALL - _DIGITS,
+    "w": _WORD,
+    "W": _ALL - _WORD,
+    "s": _SPACE,
+    "S": _ALL - _SPACE,
+}
+_CHAR_ESCAPES = {
+    "n": ord("\n"),
+    "t": ord("\t"),
+    "r": ord("\r"),
+    "f": ord("\f"),
+    "v": ord("\v"),
+    "0": 0,
+    "a": 0x07,
+    "b": 0x08,
+}
+
+
+class RegexError(ValueError):
+    pass
+
+
+class _Parser:
+    def __init__(self, pattern: str):
+        self.src = pattern
+        self.pos = 0
+
+    # -- low-level cursor ---------------------------------------------------
+    def peek(self) -> str:
+        return self.src[self.pos] if self.pos < len(self.src) else ""
+
+    def next(self) -> str:
+        ch = self.peek()
+        if not ch:
+            raise RegexError(f"unexpected end of pattern at {self.pos}")
+        self.pos += 1
+        return ch
+
+    def eat(self, ch: str) -> None:
+        got = self.next()
+        if got != ch:
+            raise RegexError(f"expected {ch!r} at {self.pos - 1}, got {got!r}")
+
+    # -- grammar ------------------------------------------------------------
+    def parse(self) -> Node:
+        node = self._alt()
+        if self.pos != len(self.src):
+            raise RegexError(f"trailing input at {self.pos}: {self.src[self.pos:]!r}")
+        return node
+
+    def _alt(self) -> Node:
+        opts = [self._concat()]
+        while self.peek() == "|":
+            self.next()
+            opts.append(self._concat())
+        return opts[0] if len(opts) == 1 else Alt(tuple(opts))
+
+    def _concat(self) -> Node:
+        parts = []
+        while self.peek() not in ("", "|", ")"):
+            parts.append(self._repeat())
+        if not parts:
+            return Epsilon()
+        return parts[0] if len(parts) == 1 else Concat(tuple(parts))
+
+    def _repeat(self) -> Node:
+        atom = self._atom()
+        while True:
+            ch = self.peek()
+            if ch == "*":
+                self.next()
+                atom = Star(atom)
+            elif ch == "+":
+                self.next()
+                atom = Plus(atom)
+            elif ch == "?":
+                self.next()
+                atom = Opt(atom)
+            elif ch == "{":
+                save = self.pos
+                rep = self._try_braces()
+                if rep is None:
+                    self.pos = save
+                    break
+                lo, hi = rep
+                atom = Repeat(atom, lo, hi)
+            else:
+                break
+        return atom
+
+    def _try_braces(self):
+        # at '{'; returns (lo, hi) or None if not a valid counted repeat
+        self.eat("{")
+        num1 = ""
+        while self.peek().isdigit():
+            num1 += self.next()
+        if not num1:
+            return None
+        if self.peek() == "}":
+            self.next()
+            n = int(num1)
+            return (n, n)
+        if self.peek() != ",":
+            return None
+        self.next()
+        num2 = ""
+        while self.peek().isdigit():
+            num2 += self.next()
+        if self.peek() != "}":
+            return None
+        self.next()
+        lo = int(num1)
+        hi = int(num2) if num2 else -1
+        if hi != -1 and hi < lo:
+            raise RegexError(f"bad repeat bounds {{{lo},{hi}}}")
+        return (lo, hi)
+
+    def _atom(self) -> Node:
+        ch = self.peek()
+        if ch == "(":
+            self.next()
+            if self.peek() == "?":
+                self.next()
+                ch2 = self.next()
+                if ch2 != ":":
+                    raise RegexError(f"unsupported group (?{ch2}...)")
+            node = self._alt()
+            self.eat(")")
+            return node
+        if ch == "[":
+            return self._char_class()
+        if ch == ".":
+            self.next()
+            return CharSet(_DOT)
+        if ch == "\\":
+            self.next()
+            return self._escape()
+        if ch in ("*", "+", "?", "|", ")"):
+            raise RegexError(f"unexpected {ch!r} at {self.pos}")
+        self.next()
+        return CharSet(frozenset({ord(ch)}))
+
+    def _escape(self) -> Node:
+        ch = self.next()
+        if ch in _CLASS_ESCAPES:
+            return CharSet(_CLASS_ESCAPES[ch])
+        if ch in _CHAR_ESCAPES:
+            return CharSet(frozenset({_CHAR_ESCAPES[ch]}))
+        if ch == "x":
+            hexs = self.next() + self.next()
+            return CharSet(frozenset({int(hexs, 16)}))
+        # any other escaped char is a literal
+        return CharSet(frozenset({ord(ch)}))
+
+    def _char_class(self) -> Node:
+        self.eat("[")
+        negate = False
+        if self.peek() == "^":
+            self.next()
+            negate = True
+        chars: set = set()
+        first = True
+        while True:
+            ch = self.peek()
+            if ch == "":
+                raise RegexError("unterminated character class")
+            if ch == "]" and not first:
+                self.next()
+                break
+            first = False
+            lo = self._class_char()
+            if isinstance(lo, frozenset):  # \d etc inside class
+                chars |= lo
+                continue
+            if self.peek() == "-" and self.pos + 1 < len(self.src) and self.src[self.pos + 1] != "]":
+                self.next()
+                hi = self._class_char()
+                if isinstance(hi, frozenset):
+                    raise RegexError("bad range endpoint")
+                if hi < lo:
+                    raise RegexError(f"reversed range {chr(lo)}-{chr(hi)}")
+                chars |= set(range(lo, hi + 1))
+            else:
+                chars.add(lo)
+        out = frozenset(chars)
+        if negate:
+            out = _ALL - out
+        return CharSet(out)
+
+    def _class_char(self):
+        ch = self.next()
+        if ch == "\\":
+            esc = self.next()
+            if esc in _CLASS_ESCAPES:
+                return _CLASS_ESCAPES[esc]
+            if esc in _CHAR_ESCAPES:
+                return _CHAR_ESCAPES[esc]
+            if esc == "x":
+                hexs = self.next() + self.next()
+                return int(hexs, 16)
+            return ord(esc)
+        return ord(ch)
+
+
+def parse(pattern: str) -> Node:
+    """Parse ``pattern`` into an AST."""
+    return _Parser(pattern).parse()

@@ -1,0 +1,201 @@
+"""Token-level DFA over a tokenizer vocabulary (paper §4.1).
+
+Given a character(byte)-level DFA ``D_R`` and a vocabulary (list of byte strings),
+builds:
+
+- ``trans``  (Q, V) int32 — token-level transition ``δ_t`` (complete; includes a
+  dead sink state).
+- ``mask_reach`` (Q, Q) bool — the mask transition ``δ_⊥``: ``mask_reach[q, q']``
+  iff some non-special token moves q → q'.
+- token **equivalence classes**: tokens with identical ``δ_t`` columns share a
+  class. ``class_id`` (V,) int32 and ``cnext`` (Q, C) int32 reproduce ``trans``
+  exactly: ``trans[q, t] == cnext[q, class_id[t]]``. This is the TPU-friendly
+  packed layout (DESIGN.md §4.1): the O(V) online work reduces to a segment-max
+  into C bins; the DP then runs on (Q, C)/(Q, Q) tables.
+
+Special tokens (mask/pad/bos) are routed to the dead state so constrained decoders
+never emit them; the mask token is handled separately via ``δ_⊥``. EOS is given
+*terminator* semantics (beyond-paper practicality, DESIGN.md §7): accepting states
+transition on EOS into a dedicated live+accepting loop state, so a model can finish
+a match and pad the remainder of the block with EOS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .dfa import DFA
+
+
+@dataclasses.dataclass
+class TokenDFA:
+    start: int
+    dead: int
+    trans: np.ndarray        # (Q, V) int32
+    accepting: np.ndarray    # (Q,) bool
+    live: np.ndarray         # (Q,) bool
+    mask_reach: np.ndarray   # (Q, Q) bool
+    class_id: np.ndarray     # (V,) int32
+    cnext: np.ndarray        # (Q, C) int32
+    mask_token_id: int
+    eos_token_id: Optional[int]
+    build_time_s: float
+
+    @property
+    def num_states(self) -> int:
+        return self.trans.shape[0]
+
+    @property
+    def vocab_size(self) -> int:
+        return self.trans.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return self.cnext.shape[1]
+
+    # ---- reference semantics (used by tests / host-side decoding) ---------
+    def step(self, state: int, token: int) -> int:
+        return int(self.trans[state, token])
+
+    def run(self, tokens: Sequence[int], state: int | None = None) -> int:
+        q = self.start if state is None else state
+        for t in tokens:
+            q = int(self.trans[q, t])
+        return q
+
+    def is_valid_prefix(self, tokens: Sequence[int], state: int | None = None) -> bool:
+        return bool(self.live[self.run(tokens, state)])
+
+    def valid_token_mask(self, reach: np.ndarray) -> np.ndarray:
+        """(V,) bool: tokens leading some reachable state to a live state."""
+        # reach: (Q,) bool
+        nxt_live = self.live[self.trans]          # (Q, V) bool
+        return (reach[:, None] & nxt_live).any(0)
+
+
+def build_token_dfa(
+    char_dfa: DFA,
+    token_bytes: List[Optional[bytes]],
+    *,
+    mask_token_id: int,
+    eos_token_id: Optional[int] = None,
+    special_token_ids: Sequence[int] = (),
+) -> TokenDFA:
+    """Construct the token-level DFA.
+
+    ``token_bytes[t]`` is the byte string of token ``t`` (``None`` for special
+    tokens with no surface form). Construction is vectorized: all tokens advance
+    through the char DFA position-by-position, O(max_len) gathers of (Q, V).
+    """
+    t0 = time.perf_counter()
+    V = len(token_bytes)
+    cq = char_dfa.num_states
+    # char-level dead detection: a state is char-dead if not live
+    char_live = char_dfa.live
+
+    # pad token byte matrix
+    lens = np.array([len(b) if b else 0 for b in token_bytes], dtype=np.int32)
+    maxlen = max(1, int(lens.max()))
+    bytemat = np.zeros((maxlen, V), dtype=np.int32)
+    for t, b in enumerate(token_bytes):
+        if b:
+            bytemat[: len(b), t] = np.frombuffer(b, dtype=np.uint8)
+
+    # advance every (state, token) pair through the char DFA
+    cur = np.broadcast_to(np.arange(cq, dtype=np.int64)[:, None], (cq, V)).copy()
+    for p in range(maxlen):
+        active = p < lens  # (V,)
+        stepped = char_dfa.trans[cur, bytemat[p][None, :]]
+        cur = np.where(active[None, :], stepped, cur)
+
+    # token-level states = char-level states + appended dead + (optional) eos-loop
+    special = set(int(s) for s in special_token_ids)
+    special.add(int(mask_token_id))
+    if eos_token_id is not None:
+        special.add(int(eos_token_id))
+    zero_len = lens == 0
+
+    Q = cq + 1 + (1 if eos_token_id is not None else 0)
+    dead = cq
+    eos_state = cq + 1 if eos_token_id is not None else -1
+
+    trans = np.full((Q, V), dead, dtype=np.int32)
+    # normal tokens: result of running chars; dead if char-level target not live
+    tgt = cur.astype(np.int32)
+    tgt = np.where(char_live[tgt], tgt, dead)
+    trans[:cq] = tgt
+    # zero-length tokens or special tokens never advance the automaton
+    kill = np.zeros(V, dtype=bool)
+    kill[list(special)] = True
+    kill |= zero_len
+    trans[:, kill] = dead
+
+    accepting = np.zeros(Q, dtype=bool)
+    accepting[:cq] = char_dfa.accepting
+
+    if eos_token_id is not None:
+        # accepting char-states --EOS--> eos_state; eos_state --EOS--> eos_state
+        acc_rows = np.where(char_dfa.accepting)[0]
+        trans[acc_rows, eos_token_id] = eos_state
+        trans[eos_state, eos_token_id] = eos_state
+        accepting[eos_state] = True
+
+    # live states at token level: can reach accepting via token transitions
+    live = _token_live(trans, accepting)
+
+    # mask transition δ_⊥ (non-special tokens only, paper: t ∈ V∖⊥; EOS included
+    # since the model may legitimately pad with EOS under our terminator extension)
+    mask_reach = np.zeros((Q, Q), dtype=bool)
+    for q in range(Q):
+        nxt = np.unique(trans[q, ~kill]) if (~kill).any() else np.array([], dtype=np.int32)
+        mask_reach[q, nxt] = True
+        if eos_token_id is not None:
+            mask_reach[q, trans[q, eos_token_id]] = True
+    # the dead sink never helps
+    mask_reach[:, dead] = False
+
+    # token equivalence classes: unique columns of trans
+    cols = np.ascontiguousarray(trans.T)  # (V, Q)
+    _, class_id, first_idx = _unique_rows(cols)
+    C = int(class_id.max()) + 1
+    cnext = trans[:, first_idx].astype(np.int32)  # (Q, C)
+
+    return TokenDFA(
+        start=char_dfa.start,
+        dead=dead,
+        trans=trans,
+        accepting=accepting,
+        live=live,
+        mask_reach=mask_reach,
+        class_id=class_id.astype(np.int32),
+        cnext=cnext,
+        mask_token_id=int(mask_token_id),
+        eos_token_id=None if eos_token_id is None else int(eos_token_id),
+        build_time_s=time.perf_counter() - t0,
+    )
+
+
+def _unique_rows(a: np.ndarray):
+    """np.unique(axis=0) with inverse + index of first representative."""
+    uniq, idx, inv = np.unique(a, axis=0, return_index=True, return_inverse=True)
+    return uniq, inv.reshape(-1), idx
+
+
+def _token_live(trans: np.ndarray, accepting: np.ndarray) -> np.ndarray:
+    Q = trans.shape[0]
+    live = accepting.copy()
+    preds: List[set] = [set() for _ in range(Q)]
+    for q in range(Q):
+        for t in np.unique(trans[q]):
+            preds[int(t)].add(q)
+    stack = [q for q in range(Q) if live[q]]
+    while stack:
+        t = stack.pop()
+        for s in preds[t]:
+            if not live[s]:
+                live[s] = True
+                stack.append(s)
+    return live

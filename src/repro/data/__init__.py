@@ -1,0 +1,4 @@
+from . import synthetic
+from .loader import TaskDataLoader
+
+__all__ = ["synthetic", "TaskDataLoader"]

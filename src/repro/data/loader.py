@@ -1,0 +1,71 @@
+"""Deterministic host-side data loader feeding the train loop.
+
+Generates synthetic task batches (seeded, reproducible) and yields
+``training.Batch`` pytrees; the launcher device_puts them with the batch
+sharding. A real deployment would swap a file-backed source behind the same
+iterator interface.
+"""
+from __future__ import annotations
+
+import random
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.training import Batch
+
+from . import synthetic
+
+
+class TaskDataLoader:
+    """Iterator of Batch for a synthetic task ('math' | 'json' | 'lm')."""
+
+    def __init__(
+        self,
+        task: str,
+        tokenizer,
+        cfg: ModelConfig,
+        batch_size: int,
+        seq_len: int,
+        seed: int = 0,
+    ):
+        self.task = task
+        self.tok = tokenizer
+        self.cfg = cfg
+        self.b = batch_size
+        self.s = seq_len
+        self.rng = random.Random(seed)
+        self.nprng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[Batch]:
+        return self
+
+    def __next__(self) -> Batch:
+        if self.task == "lm":
+            toks = synthetic.random_lm_batch(self.nprng, self.cfg.vocab_size, self.b, self.s)
+            return Batch(tokens=jnp.asarray(toks), loss_mask=jnp.ones((self.b, self.s), bool))
+        gen = synthetic.gen_math_example if self.task == "math" else synthetic.gen_json_example
+        exs = [gen(self.rng) for _ in range(self.b)]
+        toks, mask, _ = synthetic.build_batch(exs, self.tok, self.s)
+        vis = enc = None
+        if self.cfg.frontend == "vision":
+            p = self.cfg.num_frontend_tokens
+            vis = jnp.asarray(
+                self.nprng.normal(size=(self.b, p, self.cfg.d_model)), jnp.float32
+            )
+            mask[:, :p] = False
+        if self.cfg.frontend == "audio":
+            enc = jnp.asarray(
+                self.nprng.normal(
+                    size=(self.b, self.cfg.num_frontend_tokens, self.cfg.d_model)
+                ),
+                jnp.float32,
+            )
+        return Batch(
+            tokens=jnp.asarray(toks),
+            loss_mask=jnp.asarray(mask),
+            vision_embeds=vis,
+            encoder_embeds=enc,
+        )

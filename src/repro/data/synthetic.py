@@ -1,0 +1,174 @@
+"""Synthetic structured-output tasks — the small-scale analogs of the paper's
+GSM-Symbolic and JSON-Mode-Eval benchmarks (repro band 2: we train our own
+models on these instead of running 8B checkpoints).
+
+symbolic-math task:
+    prompt:  "q: <a short word problem using vars a..j> a:"
+    answer:  "<<a + b>>"-style expression wrapped in << >> (paper §5 regex),
+             optionally followed by a period.
+    Functional correctness = expression equivalence under random assignments
+    (the Z3-free analog of the paper's solver check).
+
+json task:
+    prompt:  "make json name=<w> id=<n>:"
+    answer:  {"name": "<w>", "id": <n>} matching a per-schema regex
+             (paper Appendix G).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+VARS = "abcdefghij"
+OPS = ["+", "-", "*"]
+
+MATH_REGEX = r"<<[a-j]( (\+|\-|\*) [a-j])*>>(\.)?"
+MATH_REGEX_NL = r"[a-z ]*<<[a-j]( (\+|\-|\*) [a-j])*>>(\.)?"
+
+WORDS = ["sun", "cat", "tree", "book", "lake", "bird", "rock", "leaf", "moon", "fish"]
+
+
+@dataclasses.dataclass
+class Example:
+    prompt: str
+    answer: str
+    meta: dict
+
+
+def gen_math_example(rng: random.Random, max_terms: int = 3) -> Example:
+    n = rng.randint(1, max_terms)
+    vars_ = [rng.choice(VARS) for _ in range(n)]
+    ops = [rng.choice(OPS) for _ in range(n - 1)]
+    expr = vars_[0]
+    for o, v in zip(ops, vars_[1:]):
+        expr += f" {o} {v}"
+    templates = [
+        "q: add up {} a:",
+        "q: how many {} a:",
+        "q: total of {} a:",
+    ]
+    prompt = rng.choice(templates).format(" and ".join(vars_))
+    answer = f"<<{expr}>>"
+    return Example(prompt=prompt, answer=answer, meta={"expr": expr, "vars": vars_, "ops": ops})
+
+
+def expr_equivalent(e1: str, e2: str, trials: int = 8, seed: int = 0) -> bool:
+    """Functional equivalence by random evaluation (the Z3 stand-in)."""
+    rng = random.Random(seed)
+    env_vars = {v: 0 for v in VARS}
+    for _ in range(trials):
+        for v in VARS:
+            env_vars[v] = rng.randint(1, 97)
+        try:
+            if eval(e1, {"__builtins__": {}}, dict(env_vars)) != eval(
+                e2, {"__builtins__": {}}, dict(env_vars)
+            ):
+                return False
+        except Exception:
+            return False
+    return True
+
+
+def extract_math_expr(text: str) -> Optional[str]:
+    """Pull the last << ... >> span; None if absent/ill-formed."""
+    start = text.rfind("<<")
+    if start < 0:
+        return None
+    end = text.find(">>", start)
+    if end < 0:
+        return None
+    return text[start + 2 : end]
+
+
+# ---------------------------------------------------------------------------
+# JSON task
+# ---------------------------------------------------------------------------
+def json_schema_regex(fields: Sequence[Tuple[str, str]]) -> str:
+    """fields: (name, kind) with kind in {str, int}; regex per Appendix G."""
+    parts = []
+    for name, kind in fields:
+        if kind == "str":
+            val = r'"[a-z]+"'
+        else:
+            val = r"[0-9]{1,4}"
+        parts.append(f'"{name}": {val}')
+    body = ", ".join(parts)
+    return r"\{" + body + r"\}"
+
+
+JSON_SCHEMAS: List[Tuple[Tuple[Tuple[str, str], ...], str]] = [
+    ((("name", "str"), ("id", "int")), "record"),
+    ((("city", "str"), ("pop", "int")), "place"),
+    ((("item", "str"), ("qty", "int"), ("tag", "str")), "order"),
+]
+
+
+def gen_json_example(rng: random.Random, schema_idx: Optional[int] = None) -> Example:
+    idx = rng.randrange(len(JSON_SCHEMAS)) if schema_idx is None else schema_idx
+    fields, kind = JSON_SCHEMAS[idx]
+    vals = {}
+    parts = []
+    for name, k in fields:
+        if k == "str":
+            v = rng.choice(WORDS)
+            parts.append(f'"{name}": "{v}"')
+        else:
+            v = rng.randint(0, 9999)
+            parts.append(f'"{name}": {v}')
+        vals[name] = v
+    prompt = f"make {kind} " + " ".join(f"{n}={vals[n]}" for n, _ in fields) + ":"
+    answer = "{" + ", ".join(parts) + "}"
+    return Example(prompt=prompt, answer=answer, meta={"schema": idx, "vals": vals})
+
+
+def validate_json_answer(text: str, schema_idx: int) -> Tuple[bool, bool]:
+    """(parses, schema_valid) — mirrors the paper's Parse% / Acc% columns."""
+    import json as _json
+
+    text = text.strip()
+    end = text.find("}")
+    if end >= 0:
+        text = text[: end + 1]
+    try:
+        obj = _json.loads(text)
+    except Exception:
+        return False, False
+    fields, _ = JSON_SCHEMAS[schema_idx]
+    ok = isinstance(obj, dict) and set(obj) == {n for n, _ in fields}
+    if ok:
+        for n, k in fields:
+            ok &= isinstance(obj[n], str if k == "str" else int)
+    return True, bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# token batching
+# ---------------------------------------------------------------------------
+def build_batch(
+    examples: Sequence[Example], tokenizer, seq_len: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (tokens (B,S), loss_mask (B,S), prompt_lens (B,)). Sequences are
+    prompt+answer padded with EOS; loss covers the answer span + one EOS."""
+    b = len(examples)
+    toks = np.full((b, seq_len), tokenizer.eos_token_id, np.int32)
+    mask = np.zeros((b, seq_len), bool)
+    plens = np.zeros((b,), np.int32)
+    for i, ex in enumerate(examples):
+        p = tokenizer.encode(ex.prompt + " ")
+        a = tokenizer.encode(ex.answer)
+        seq = (p + a)[: seq_len - 1] + [tokenizer.eos_token_id]
+        toks[i, : len(seq)] = seq
+        lo = min(len(p), seq_len - 1)
+        hi = min(len(p) + len(a) + 1, seq_len)
+        mask[i, lo:hi] = True
+        plens[i] = lo
+    return toks, mask, plens
+
+
+def random_lm_batch(rng: np.random.Generator, vocab: int, b: int, s: int):
+    """Zipf-ish random LM stream for throughput/perf benchmarking."""
+    ranks = rng.zipf(1.3, size=(b, s)).astype(np.int64)
+    return ((ranks - 1) % max(1, vocab - 4) + 4).astype(np.int32)

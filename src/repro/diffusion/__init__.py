@@ -1,0 +1,8 @@
+from .engine import DiffusionEngine, GenerationResult
+from .remask import confidence, select_commits
+from .schedule import masked_count, unmask_counts
+
+__all__ = [
+    "DiffusionEngine", "GenerationResult", "confidence", "select_commits",
+    "masked_count", "unmask_counts",
+]

@@ -1,0 +1,249 @@
+"""Block-diffusion generation engine with constrained decoding (paper Alg 4/5).
+
+Semi-autoregressive loop: prefill the prompt into the KV/SSM caches, then for
+each block run T diffusion steps. Each step:
+
+  1. forward the current block (masked positions hold ⊥) against the caches;
+  2. mask-prediction: pick which masked positions to commit this step
+     (random / top-prob / entropy — Appendix A), per the linear schedule;
+  3. decoder: build the post-remask per-position distributions (committed ->
+     one-hot, still-masked -> δ_⊥) and decode the whole block with
+     Unconstrained / Greedy-Constrained / DINGO.
+
+DINGO/greedy thread their DFA state across blocks (Appendix D). All inner
+steps are jit'd; the block/step loop runs on host (step count is static).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core import NEG_INF, DingoTables
+from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
+from repro.core.dingo import dingo_decode
+from repro.core.greedy import greedy_decode
+from repro.models import ModelInputs, forward, init_caches
+
+from .remask import confidence, select_commits
+from .schedule import masked_count
+
+
+class GenerationResult(NamedTuple):
+    tokens: np.ndarray       # (B, gen_len)
+    valid: np.ndarray        # (B,) constraint satisfied (True for unconstrained)
+    time_s: float
+    steps: int
+
+
+def _positions(cfg: ModelConfig, batch: int, start, length: int):
+    base = start + jnp.arange(length, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(base, (batch, length))
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, length))
+    return pos
+
+
+class DiffusionEngine:
+    """Host-side engine wrapping jit'd prefill / step / commit functions."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        scfg: ServeConfig,
+        mask_token_id: int,
+        tables: Optional[DingoTables] = None,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.mask_id = mask_token_id
+        self.tables = tables
+        if scfg.decode != UNCONSTRAINED and tables is None:
+            raise ValueError(f"decode={scfg.decode} requires DINGO tables")
+
+        cfg_ = cfg
+
+        @functools.partial(jax.jit, static_argnames=("attend_cache",))
+        def prefill(params, caches, tokens, start, attend_cache=False):
+            pos = _positions(cfg_, tokens.shape[0], start, tokens.shape[1])
+            _, caches, _, _ = forward(
+                params, cfg_, ModelInputs(tokens, pos), caches, commit=True,
+                attend_cache=attend_cache,
+            )
+            return caches
+
+        @jax.jit
+        def block_logits(params, caches, block_tokens, start):
+            pos = _positions(cfg_, block_tokens.shape[0], start, block_tokens.shape[1])
+            logits, _, _, _ = forward(
+                params, cfg_, ModelInputs(block_tokens, pos), caches, commit=False
+            )
+            return logits
+
+        self._prefill = prefill
+        self._block_logits = block_logits
+        self._decode_fns = self._build_decoders()
+
+    @property
+    def _batched_tables(self) -> bool:
+        """True when tables carry a leading per-request batch axis
+        (``core.stack_tables`` — heterogeneous regexes in one batch)."""
+        return self.tables is not None and self.tables.cnext.ndim == 3
+
+    def _build_decoders(self):
+        method = self.scfg.decode
+        impl = self.scfg.kernel_impl
+        t_ax = 0 if self._batched_tables else None
+
+        if method == UNCONSTRAINED:
+            @jax.jit
+            def dec(logp, w0):
+                toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
+                b = logp.shape[0]
+                return toks, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32)
+            return dec
+        if method == DINGO:
+            tables = self.tables
+
+            @jax.jit
+            def dec(logp, w0):
+                res = jax.vmap(
+                    lambda lp, t, w: dingo_decode(lp, t, w, impl=impl),
+                    in_axes=(0, t_ax, 0),
+                )(logp, tables, w0)
+                return res.tokens, res.valid, res.q_final
+            return dec
+        if method == GREEDY:
+            tables = self.tables
+
+            @jax.jit
+            def dec(logp, reach0):
+                res = jax.vmap(
+                    lambda lp, t, r: greedy_decode(lp, t, r), in_axes=(0, t_ax, 0)
+                )(logp, tables, reach0)
+                return res.tokens, res.valid, jnp.zeros((logp.shape[0],), jnp.int32)
+            return dec
+        raise ValueError(method)
+
+    # ------------------------------------------------------------------
+    def _decoder_logp(self, logits, block_tokens, committed, to_commit):
+        """Post-remask distributions (B, d, V) in log space."""
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        v = logp.shape[-1]
+        logp = logp.at[..., self.mask_id].set(NEG_INF)
+        logp = jnp.maximum(logp, NEG_INF)
+        onehot_tok = jnp.where(
+            jax.nn.one_hot(block_tokens, v, dtype=bool), 0.0, NEG_INF
+        )
+        onehot_mask = jnp.where(
+            jax.nn.one_hot(jnp.full_like(block_tokens, self.mask_id), v, dtype=bool),
+            0.0,
+            NEG_INF,
+        )
+        out = jnp.where(committed[..., None], onehot_tok, NEG_INF)
+        out = jnp.where((to_commit & ~committed)[..., None], logp, out)
+        still_masked = ~(committed | to_commit)
+        out = jnp.where(still_masked[..., None], onehot_mask, out)
+        return out
+
+    def _carry0(self, batch: int):
+        if self.scfg.decode not in (DINGO, GREEDY):
+            return jnp.zeros((batch, 1))
+        q = self.tables.cnext.shape[-2]
+        start = jnp.broadcast_to(jnp.asarray(self.tables.start), (batch,))
+        onehot = jnp.arange(q)[None, :] == start[:, None]          # (B, Q)
+        if self.scfg.decode == DINGO:
+            return jnp.where(onehot, 0.0, NEG_INF)
+        return onehot
+
+    def _carry_next(self, q_final, valid):
+        if self.scfg.decode == DINGO:
+            q = self.tables.cnext.shape[0]
+            w0 = jnp.where(jax.nn.one_hot(q_final, q, dtype=bool), 0.0, NEG_INF)
+            return w0
+        if self.scfg.decode == GREEDY:
+            # greedy threads the reachable set implicitly: rerun from tokens is
+            # costly, so we keep the per-block reach final — handled in generate()
+            return None
+        return None
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt_tokens: np.ndarray, seed: int = 0) -> GenerationResult:
+        cfg, scfg = self.cfg, self.scfg
+        b, m = prompt_tokens.shape
+        d = scfg.block_size
+        assert scfg.gen_len % d == 0
+        n_blocks = scfg.gen_len // d
+        steps_per_block = max(1, scfg.diffusion_steps_per_block)
+        max_len = m + scfg.gen_len
+        t0 = time.perf_counter()
+
+        caches = init_caches(cfg, b, max_len)
+        caches = self._prefill(self.params, caches, jnp.asarray(prompt_tokens, jnp.int32),
+                               jnp.asarray(0, jnp.int32))
+
+        rng = jax.random.PRNGKey(seed)
+        carry = self._carry0(b)
+        reach_carry = carry if scfg.decode == GREEDY else None
+        all_tokens = []
+        all_valid = np.ones((b,), bool)
+
+        for blk in range(n_blocks):
+            start = jnp.asarray(m + blk * d, jnp.int32)
+            block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
+            committed = jnp.zeros((b, d), bool)
+            q_final = jnp.zeros((b,), jnp.int32)
+            valid = jnp.ones((b,), bool)
+            for i in range(1, steps_per_block + 1):
+                rng, sub = jax.random.split(rng)
+                logits = self._block_logits(self.params, caches, block_tokens, start)
+                n_mask_after = masked_count(d, steps_per_block, i)
+                conf = confidence(logits, scfg.remask, sub, impl=scfg.kernel_impl)
+                new_committed = select_commits(conf, committed, d - n_mask_after)
+                logp = self._decoder_logp(logits, block_tokens, committed, new_committed)
+                dec_carry = reach_carry if scfg.decode == GREEDY else carry
+                toks, ok, qf = self._decode_fns(logp, dec_carry)
+                # keep mask token at still-masked positions for the next forward
+                block_tokens = jnp.where(new_committed, toks, self.mask_id)
+                committed = new_committed
+                q_final, valid = qf, ok
+            # commit block to caches (block attends the prefix it was decoded against)
+            caches = self._prefill(self.params, caches, block_tokens, start, attend_cache=True)
+            all_tokens.append(np.asarray(block_tokens))
+            all_valid &= np.asarray(valid)
+            if scfg.decode == DINGO:
+                carry = self._carry_next(q_final, valid)
+            elif scfg.decode == GREEDY:
+                # advance the reachable set through the committed block
+                reach_carry = self._advance_reach(reach_carry, block_tokens)
+        return GenerationResult(
+            tokens=np.concatenate(all_tokens, axis=1),
+            valid=all_valid,
+            time_s=time.perf_counter() - t0,
+            steps=n_blocks * steps_per_block,
+        )
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _advance_reach(self, reach, tokens):
+        tables = self.tables
+        t_ax = 0 if self._batched_tables else None
+
+        def per_seq(r, toks, tb):
+            def step(rr, t):
+                nxt = jnp.take(tb.cnext, tb.class_id[t], axis=1)  # (Q,)
+                q = rr.shape[0]
+                r_new = jnp.zeros((q,), jnp.int32).at[nxt].max(rr.astype(jnp.int32)) > 0
+                return r_new & tb.live, None
+
+            r_final, _ = jax.lax.scan(step, r, toks)
+            return r_final
+
+        return jax.vmap(per_seq, in_axes=(0, 0, t_ax))(reach, tokens, tables)

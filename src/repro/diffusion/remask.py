@@ -1,0 +1,48 @@
+"""Mask-prediction (remasking) strategies — paper Appendix A.
+
+Given block logits, decide WHICH currently-masked positions to commit this
+step. Confidence scores come from the fused ``softmax_stats`` kernel (max
+softmax prob / entropy) or a random draw:
+
+  random     — commit uniformly random masked positions [LLaDA]
+  top_prob   — commit positions whose top-token probability is highest [LLaDA]
+  entropy    — commit positions with the lowest distribution entropy [Dream]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def confidence(logits: jax.Array, strategy: str, rng=None, *, impl: str = "jnp"):
+    """logits (B, d, V) -> confidence (B, d); higher = commit sooner."""
+    b, d, v = logits.shape
+    if strategy == "random":
+        assert rng is not None
+        return jax.random.uniform(rng, (b, d))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        maxp, ent, _ = jax.vmap(kops.softmax_stats)(logits)
+    else:
+        from repro.kernels import ref as kref
+
+        maxp, ent, _ = jax.vmap(kref.softmax_stats_ref)(logits)
+    if strategy == "top_prob":
+        return maxp
+    if strategy == "entropy":
+        return -ent
+    raise ValueError(f"unknown remask strategy {strategy!r}")
+
+
+def select_commits(conf: jax.Array, committed: jax.Array, n_commit: int):
+    """Pick the ``n_commit`` highest-confidence currently-masked positions.
+
+    conf (B, d); committed (B, d) bool. Returns new committed mask (B, d)."""
+    b, d = conf.shape
+    masked_conf = jnp.where(committed, NEG_INF, conf)
+    order = jnp.argsort(-masked_conf, axis=-1)            # best-first
+    rank = jnp.argsort(order, axis=-1)                    # rank of each position
+    return committed | ((rank < n_commit) & ~committed)

@@ -1,0 +1,21 @@
+"""Diffusion unmasking schedule (paper Appendix A).
+
+At step 0 all d block positions are masked; the count decreases linearly to 0
+over T steps: n_masked(i) = floor(d * (T - i) / T) after step i (1-indexed)."""
+from __future__ import annotations
+
+
+def masked_count(d: int, total_steps: int, step: int) -> int:
+    """Number of positions still masked AFTER diffusion step ``step`` (1-based)."""
+    return (d * (total_steps - step)) // total_steps
+
+
+def unmask_counts(d: int, total_steps: int):
+    """Per-step number of positions committed at each step (sums to d)."""
+    prev = d
+    out = []
+    for i in range(1, total_steps + 1):
+        cur = masked_count(d, total_steps, i)
+        out.append(prev - cur)
+        prev = cur
+    return out

@@ -1,0 +1,91 @@
+"""Pure-function serving step for the dry-run / production launcher.
+
+``make_serve_step`` returns a jit-able function performing ONE diffusion step
+of the current block against the prefix caches — the diffusion analog of a
+decode step (DESIGN.md §3): backbone forward + mask-prediction (remask) +
+constrained block decode (Unconstrained / Greedy / DINGO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core import NEG_INF, DingoTables
+from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
+from repro.core.dingo import dingo_decode
+from repro.core.greedy import greedy_decode
+from repro.models import ModelInputs, forward
+
+from .remask import confidence, select_commits
+
+
+def decoder_logp(logits, block_tokens, committed, to_commit, mask_id: int):
+    """Post-remask per-position log distributions (B, d, V):
+    committed -> one-hot(token); newly committed -> model log-softmax (⊥
+    forbidden); still masked -> one-hot(⊥)."""
+    logits = logits.astype(jnp.float32)
+    tok_logit = jnp.take_along_axis(logits, block_tokens[..., None], axis=-1)[..., 0]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    logp = jnp.maximum(logits - lse[..., None], NEG_INF)
+    v = logits.shape[-1]
+    vocab_iota = jnp.arange(v, dtype=jnp.int32)
+    logp = jnp.where(vocab_iota[None, None, :] == mask_id, NEG_INF, logp)
+    onehot_tok = jnp.where(vocab_iota[None, None, :] == block_tokens[..., None], 0.0, NEG_INF)
+    onehot_mask = jnp.where(vocab_iota[None, None, :] == mask_id, 0.0, NEG_INF)
+    out = jnp.where(committed[..., None], onehot_tok, NEG_INF)
+    out = jnp.where((to_commit & ~committed)[..., None], logp, out)
+    out = jnp.where(~(committed | to_commit)[..., None], onehot_mask, out)
+    return out
+
+
+def make_serve_step(
+    cfg: ModelConfig,
+    scfg: ServeConfig,
+    mask_id: int,
+    tables: Optional[DingoTables] = None,
+    *,
+    n_commit: int = 4,
+):
+    """serve_step(params, caches, block_tokens, committed, w0, start, rng)
+    -> (block_tokens', committed', valid, q_final, caches)."""
+    method = scfg.decode
+    impl = scfg.kernel_impl
+
+    def serve_step(params, caches, block_tokens, committed, w0, start, rng, tables_arg=None):
+        tables_in = tables_arg if tables_arg is not None else tables
+        b, d = block_tokens.shape
+        base = start + jnp.arange(d, dtype=jnp.int32)[None]
+        pos = jnp.broadcast_to(base, (b, d))
+        if cfg.rope_type == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, d))
+        enc = None
+        if cfg.frontend == "audio":
+            enc = jnp.zeros((b, cfg.num_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        logits, caches, _, _ = forward(
+            params, cfg, ModelInputs(block_tokens, pos, encoder_embeds=enc),
+            caches, commit=False, window=None,
+        )
+        conf = confidence(logits, scfg.remask, rng, impl=impl)
+        new_committed = select_commits(conf, committed, n_commit)
+        logp = decoder_logp(logits, block_tokens, committed, new_committed, mask_id)
+        if method == UNCONSTRAINED:
+            toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
+            valid = jnp.ones((b,), bool)
+            qf = jnp.zeros((b,), jnp.int32)
+        elif method == DINGO:
+            res = jax.vmap(lambda lp, w: dingo_decode(lp, tables_in, w, impl=impl))(logp, w0)
+            toks, valid, qf = res.tokens, res.valid, res.q_final
+        elif method == GREEDY:
+            res = jax.vmap(lambda lp, r: greedy_decode(lp, tables_in, r))(logp, w0.astype(bool))
+            toks, valid = res.tokens, res.valid
+            qf = jnp.zeros((b,), jnp.int32)
+        else:
+            raise ValueError(method)
+        block_tokens = jnp.where(new_committed, toks, mask_id)
+        return block_tokens, new_committed, valid, qf, caches
+
+    return serve_step

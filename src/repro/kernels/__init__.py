@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical hot spots (validated interpret=True
+on CPU): DINGO DP stages (class_max, maxplus_dp), remasking statistics
+(softmax_stats), and flash-decoding GQA attention (decode_attention)."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

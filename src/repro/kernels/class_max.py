@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: vocab -> token-class segment max (DINGO DP stage 1).
+
+For each token class c: ``cmax[c] = max_{t: class_id[t]=c} logits[t]`` and
+``carg[c]`` = the first token attaining it. This is the O(V) hot loop of the
+DINGO transition computation (paper §4.4 first loop) in the token-class layout
+(DESIGN.md §4.1).
+
+TPU mapping: the vocab axis is streamed HBM->VMEM in blocks of ``block_v``; the
+class axis (padded to a multiple of 128 lanes) lives entirely in VMEM as the
+running (max, argmax) accumulator. Each block does a (block_v, C) one-hot
+compare + max-reduce — dense VPU work, no gathers. Grid = V / block_v steps;
+the output BlockSpec index maps every step to the same (C,) accumulators, with
+initialization at step 0 (standard accumulator pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(logits_ref, cid_ref, cmax_ref, carg_ref, *, block_v: int, num_classes: int, vocab: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cmax_ref[...] = jnp.full((num_classes,), NEG_INF, cmax_ref.dtype)
+        carg_ref[...] = jnp.full((num_classes,), vocab, carg_ref.dtype)
+
+    vals = logits_ref[...].astype(jnp.float32)            # (block_v,)
+    cid = cid_ref[...]                                    # (block_v,)
+    tok_idx = i * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_v,), 0)
+    in_range = tok_idx < vocab
+    vals = jnp.where(in_range, vals, NEG_INF)
+
+    # one-hot over classes: (block_v, C)
+    class_iota = jax.lax.broadcasted_iota(jnp.int32, (block_v, num_classes), 1)
+    onehot = cid[:, None] == class_iota
+    contrib = jnp.where(onehot, vals[:, None], NEG_INF)
+    blk_max = contrib.max(axis=0)                         # (C,)
+    hit = contrib >= blk_max[None, :]
+    blk_arg = jnp.where(hit & onehot, tok_idx[:, None], vocab).min(axis=0)
+
+    cur_max = cmax_ref[...]
+    better = blk_max > cur_max
+    cmax_ref[...] = jnp.where(better, blk_max, cur_max)
+    carg_ref[...] = jnp.where(better, blk_arg, carg_ref[...]).astype(carg_ref.dtype)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finalize():
+        # empty classes: sentinel argmax -> 0
+        carg_ref[...] = jnp.where(carg_ref[...] >= vocab, 0, carg_ref[...])
+
+
+def class_max_pallas(
+    logits: jax.Array,
+    class_id: jax.Array,
+    num_classes: int,
+    *,
+    block_v: int = 2048,
+    interpret: bool = False,
+):
+    (v,) = logits.shape
+    c_pad = max(128, -(-num_classes // 128) * 128)
+    v_pad = -(-v // block_v) * block_v
+    logits_p = jnp.pad(logits, (0, v_pad - v), constant_values=NEG_INF)
+    # padding tokens get class c_pad-1 but are -inf so they never win
+    cid_p = jnp.pad(class_id.astype(jnp.int32), (0, v_pad - v), constant_values=c_pad - 1)
+
+    grid = (v_pad // block_v,)
+    cmax, carg = pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v, num_classes=c_pad, vocab=v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c_pad,), lambda i: (0,)),
+            pl.BlockSpec((c_pad,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits_p, cid_p)
+    return cmax[:num_classes], carg[:num_classes]

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-decoding style GQA attention for serve_step.
+
+One query position per sequence (the diffusion-block decode hot path) against a
+long KV cache:  out[b, h] = softmax(q[b, h] · K[b, :, kv(h)] / sqrt(Dh)) · V.
+
+TPU mapping: grid = (B, KVH, S/block_s). For each (batch, kv-head) the G = H/KVH
+grouped query heads are kept in VMEM as a (G, Dh) tile; KV is streamed in
+(block_s, Dh) tiles; scores (G, block_s) hit the MXU; online-softmax
+accumulators (m, l, acc) live in VMEM scratch and are normalized on the last
+S-step. head_dim and block_s are 128-multiples (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, block_s: int, scale: float
+):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)        # (block_s, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)        # (block_s, Dh)
+    g = q.shape[0]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (G, block_s)
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, (g, block_s), 1)
+    valid = pos < len_ref[0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_old = m_ref[...]                          # (G,)
+    m_new = jnp.maximum(m_old, scores.max(axis=1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(scores - m_new[:, None])        # (G, block_s)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == pl.num_programs(2) - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,           # (B, H, Dh)
+    k: jax.Array,           # (B, S, KVH, Dh)
+    v: jax.Array,           # (B, S, KVH, Dh)
+    lengths: jax.Array | None = None,  # (B,) valid cache length; default S
+    *,
+    block_s: int = 512,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    s_pad = -(-s // block_s) * block_s
+    kp = jnp.pad(k, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # layouts: q -> (B, KVH, G, Dh); kv -> (B, KVH, S, Dh)
+    qg = q.reshape(b, kvh, g, dh)
+    kt = jnp.moveaxis(kp, 2, 1)
+    vt = jnp.moveaxis(vp, 2, 1)
+
+    grid = (b, kvh, s_pad // block_s)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1,), lambda bi, ki, si: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kt, vt, lengths)
+    return out.reshape(b, h, dh)

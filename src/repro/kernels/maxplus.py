@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: max-plus (Viterbi) DP update with backpointers
+(DINGO DP stage 2, paper Algorithm 1 lines 12-15).
+
+    W'[q]   = max_{q'} W[q'] + E[q', q]
+    bq[q]   = argmax_{q'} (first)
+    btok[q] = tok[bq[q], q]
+
+Q is small (paper: 40-455 states), so the whole (Q, Q) tile fits VMEM at once;
+the kernel is a single grid step of dense VPU max/argmax reductions. Q is padded
+to a multiple of 128 lanes by the wrapper; padding rows carry -inf so they never
+win the argmax.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(w_ref, e_ref, tok_ref, wnew_ref, bq_ref, btok_ref, *, q: int):
+    w = w_ref[...].astype(jnp.float32)            # (Q,)
+    e = e_ref[...].astype(jnp.float32)            # (Q, Q)
+    scores = w[:, None] + e
+    wnew = scores.max(axis=0)
+    wnew_ref[...] = jnp.maximum(wnew, NEG_INF)
+    # first argmax along rows
+    hit = scores >= wnew[None, :]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    bq = jnp.where(hit, row_iota, q).min(axis=0)
+    bq = jnp.where(bq >= q, 0, bq)
+    bq_ref[...] = bq.astype(jnp.int32)
+    # gather tok[bq[q], q] without dynamic gather: one-hot dot
+    sel = row_iota == bq[None, :]
+    btok_ref[...] = jnp.where(sel, tok_ref[...], 0).sum(axis=0).astype(jnp.int32)
+
+
+def maxplus_dp_pallas(
+    w: jax.Array, e: jax.Array, tok: jax.Array, *, interpret: bool = False
+):
+    (q,) = w.shape
+    q_pad = max(128, -(-q // 128) * 128)
+    wp = jnp.pad(w.astype(jnp.float32), (0, q_pad - q), constant_values=NEG_INF)
+    ep = jnp.pad(
+        e.astype(jnp.float32),
+        ((0, q_pad - q), (0, q_pad - q)),
+        constant_values=NEG_INF,
+    )
+    tokp = jnp.pad(tok.astype(jnp.int32), ((0, q_pad - q), (0, q_pad - q)))
+
+    wnew, bq, btok = pl.pallas_call(
+        functools.partial(_kernel, q=q_pad),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((q_pad,), lambda i: (0,)),
+            pl.BlockSpec((q_pad, q_pad), lambda i: (0, 0)),
+            pl.BlockSpec((q_pad, q_pad), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_pad,), lambda i: (0,)),
+            pl.BlockSpec((q_pad,), lambda i: (0,)),
+            pl.BlockSpec((q_pad,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((q_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(wp, ep, tokp)
+    return wnew[:q], jnp.clip(bq[:q], 0, q - 1), btok[:q]

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container) they
+run in ``interpret=True`` mode, which executes the kernel body in Python and is
+how correctness is validated against the ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .class_max import class_max_pallas
+from .decode_attention import decode_attention_pallas
+from .maxplus import maxplus_dp_pallas
+from .softmax_stats import softmax_stats_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def class_max(logits: jax.Array, class_id: jax.Array, num_classes: int):
+    return class_max_pallas(logits, class_id, num_classes, interpret=_interpret())
+
+
+@jax.jit
+def maxplus_dp(w: jax.Array, e: jax.Array, tok: jax.Array):
+    return maxplus_dp_pallas(w, e, tok, interpret=_interpret())
+
+
+@jax.jit
+def softmax_stats(logits: jax.Array):
+    return softmax_stats_pallas(logits, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, lengths=None, *, block_s: int = 512):
+    return decode_attention_pallas(q, k, v, lengths, block_s=block_s, interpret=_interpret())

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def class_max_ref(logits: jax.Array, class_id: jax.Array, num_classes: int):
+    """cmax[c] = max_{t: class_id[t]=c} logits[t]; carg[c] = first argmax token."""
+    cmax = jax.ops.segment_max(logits, class_id, num_segments=num_classes)
+    cmax = jnp.maximum(cmax, NEG_INF)
+    v = logits.shape[0]
+    hit = logits >= cmax[class_id]
+    cand = jnp.where(hit, jnp.arange(v, dtype=jnp.int32), v)
+    carg = jax.ops.segment_min(cand, class_id, num_segments=num_classes)
+    carg = jnp.where(carg >= v, 0, carg).astype(jnp.int32)
+    return cmax, carg
+
+
+def maxplus_dp_ref(w: jax.Array, e: jax.Array, tok: jax.Array):
+    """W'[q] = max_{q'} W[q'] + E[q', q]; backpointers (first argmax)."""
+    scores = w[:, None] + e
+    wnew = jnp.maximum(scores.max(axis=0), NEG_INF)
+    bq = scores.argmax(axis=0).astype(jnp.int32)
+    btok = tok[bq, jnp.arange(tok.shape[1], dtype=jnp.int32)]
+    return wnew, bq, btok
+
+
+def softmax_stats_ref(logits: jax.Array):
+    """Per row: (max softmax prob, entropy, argmax index). logits (d, V)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    maxp = jnp.exp(logits.max(-1) - lse)
+    entropy = lse - (p * logits).sum(-1)
+    amax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return maxp, entropy, amax
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, scale=None):
+    """GQA single-position decode attention.
+
+    q: (B, H, Dh); k, v: (B, S, KVH, Dh); H % KVH == 0. Returns (B, H, Dh)."""
+    b, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+    qg = q.reshape(b, kvh, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k) * scale
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused per-position softmax statistics for remasking
+(paper Appendix A mask-prediction strategies).
+
+For each row of logits (d, V) computes in ONE streaming pass over the vocab:
+  - maxp[i]    = max softmax probability      (top-token-probability strategy)
+  - entropy[i] = H(softmax(logits[i]))        (entropy strategy)
+  - amax[i]    = argmax token                 (greedy unmask choice)
+
+Online-softmax style accumulators (running max m, rescaled sum-exp s, rescaled
+sum of exp*logit t): H = (m + log s) - t/s, maxp = exp(max - (m + log s)).
+Grid = (d blocks, V blocks); V is the streamed axis, accumulators live in VMEM
+scratch of shape (block_d,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    logits_ref, maxp_ref, ent_ref, amax_ref, m_ref, s_ref, t_ref, am_ref,
+    *, block_d: int, block_v: int, vocab: int
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full((block_d,), NEG_INF, jnp.float32)
+        s_ref[...] = jnp.zeros((block_d,), jnp.float32)
+        t_ref[...] = jnp.zeros((block_d,), jnp.float32)
+        am_ref[...] = jnp.zeros((block_d,), jnp.int32)
+
+    x = logits_ref[...].astype(jnp.float32)               # (block_d, block_v)
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_d, block_v), 1)
+    x = jnp.where(col < vocab, x, NEG_INF)
+
+    blk_max = x.max(axis=1)                                # (block_d,)
+    blk_arg = jnp.where(x >= blk_max[:, None], col, vocab).min(axis=1)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, blk_max)
+    scale = jnp.exp(m_old - m_new)
+    ex = jnp.exp(x - m_new[:, None])
+    s_ref[...] = s_ref[...] * scale + ex.sum(axis=1)
+    t_ref[...] = t_ref[...] * scale + (ex * jnp.where(col < vocab, x, 0.0)).sum(axis=1)
+    better = blk_max > m_old
+    am_ref[...] = jnp.where(better, blk_arg, am_ref[...]).astype(jnp.int32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        m = m_ref[...]
+        s = s_ref[...]
+        t = t_ref[...]
+        lse = m + jnp.log(s)
+        maxp_ref[...] = jnp.exp(m - lse)
+        ent_ref[...] = lse - t / s
+        amax_ref[...] = jnp.clip(am_ref[...], 0, vocab - 1)
+
+
+def softmax_stats_pallas(
+    logits: jax.Array,
+    *,
+    block_d: int = 8,
+    block_v: int = 2048,
+    interpret: bool = False,
+):
+    d, v = logits.shape
+    d_pad = -(-d // block_d) * block_d
+    v_pad = -(-v // block_v) * block_v
+    xp = jnp.pad(
+        logits.astype(jnp.float32), ((0, d_pad - d), (0, v_pad - v)),
+        constant_values=NEG_INF,
+    )
+    grid = (d_pad // block_d, v_pad // block_v)
+    maxp, ent, amax = pl.pallas_call(
+        functools.partial(_kernel, block_d=block_d, block_v=block_v, vocab=v),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_d, block_v), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda i, j: (i,)),
+            pl.BlockSpec((block_d,), lambda i, j: (i,)),
+            pl.BlockSpec((block_d,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d_pad,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_d,), jnp.float32),  # running max m
+            pltpu.VMEM((block_d,), jnp.float32),  # rescaled sum-exp s
+            pltpu.VMEM((block_d,), jnp.float32),  # rescaled sum exp*logit t
+            pltpu.VMEM((block_d,), jnp.int32),    # running argmax
+        ],
+        interpret=interpret,
+    )(xp)
+    return maxp[:d], ent[:d], amax[:d]

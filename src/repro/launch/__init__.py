@@ -1,0 +1,1 @@
+# Launchers import lazily: dryrun.py must set XLA_FLAGS before jax loads.

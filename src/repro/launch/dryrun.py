@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_XLA_EXTRA", "") + " --xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+).strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) against the production meshes and record
+memory/cost/collective artifacts for the roofline analysis.
+
+MUST be run as its own process (the two lines above execute before any other
+import so the 512 fake host devices exist before jax initializes):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape decode_32k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod both]
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.analysis.roofline import analyze, model_flops_for, parse_collective_bytes  # noqa: E402
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, build_plan  # noqa: E402
+from repro.sharding.api import sharding_context  # noqa: E402
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str, *, force=False) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = ("pod" if multi_pod else "pod") + "x".join(
+        str(s) for s in mesh.devices.shape
+    )
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    chips = mesh.devices.size
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips}
+    try:
+        plan = build_plan(arch, shape_name, mesh)
+
+        def _named(tree):
+            return jax.tree_util.tree_map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                tree,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+
+        with mesh, sharding_context(mesh, dict(plan.rules)):
+            lowered = jax.jit(
+                plan.fn,
+                in_shardings=_named(plan.in_shardings),
+                out_shardings=_named(plan.out_shardings),
+                donate_argnums=plan.static.get("donate", ()),
+            ).lower(*plan.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        mf = model_flops_for(cfg, plan.static["kind"], plan.static["tokens"])
+        roof = analyze(cost, hlo, chips=chips, model_flops_global=mf)
+        record.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            rules={k: list(v) for k, v in plan.rules.items()},
+            static=plan.static,
+            memory=_mem_dict(mem),
+            cost={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+            collective_bytes=coll,
+            roofline=roof.to_dict(),
+        )
+        print(
+            f"[ok] {tag}: compile {t_compile:.1f}s | "
+            f"{record['memory'].get('bytes_per_device', 0)/2**30:.2f} GiB/dev | "
+            f"bottleneck={roof.bottleneck} "
+            f"(c={roof.compute_s*1e3:.2f}ms m={roof.memory_s*1e3:.2f}ms "
+            f"x={roof.collective_s*1e3:.2f}ms) useful={roof.useful_ratio}"
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update(ok=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+    ):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    total = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+    )
+    out["bytes_per_device"] = total
+    out["repr"] = str(mem)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multipod", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="every (arch × shape)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS[:10] if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multipod]
+
+    n_fail = 0
+    for mp in pods:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_one(arch, shape, mp, args.out, force=args.force)
+                n_fail += 0 if rec.get("ok") else 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh builders (TPU v5e).
+
+Single pod: (data=16, model=16) over 256 chips. Multi-pod: (pod=2, data=16,
+model=16) over 512 chips — the "pod" axis extends data parallelism across the
+DCN boundary. A FUNCTION (not module constant) so importing never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+
+    side = int(os.environ.get("REPRO_MESH_SIDE", "16"))  # test hook (dryrun smoke)
+    shape = (2, side, side) if multi_pod else (side, side)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — the dry-run "
+            "sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (see dryrun.py)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 1):
+    """Small mesh over however many (fake) host devices exist — used by the
+    dry-run smoke test with 8 devices."""
+    shape = (pod, data, model) if pod > 1 else (data, model)
+    axes = ("pod", "data", "model") if pod > 1 else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,316 @@
+"""Dry-run / launcher plans: per (architecture × input shape × mesh) builds the
+function to lower, ShapeDtypeStruct stand-ins for every input (no device
+allocation), and in/out shardings.
+
+Input shapes (assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step (commit caches)
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 diffusion step,
+                                                 block 32, prefix cache 32k)
+  long_500k    seq 524288, global_batch 1     -> serve_step with sub-quadratic
+                                                 state (SSM/SWA/MLA; DESIGN.md §3)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ServeConfig, TrainConfig
+from repro.configs import get_config
+from repro.core.dingo import DingoTables
+from repro.diffusion.serve import make_serve_step
+from repro.models import ModelInputs, forward, init_caches
+from repro.sharding.rules import batch_specs, cache_specs, param_specs
+from repro.training import AdamState, Batch, TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+BLOCK = 32          # serving diffusion-block length
+DRYRUN_Q = 64       # representative DFA states for serve-step DINGO tables
+DRYRUN_C = 512      # representative token classes
+
+
+# ---------------------------------------------------------------------------
+# per-plan sharding rules
+# ---------------------------------------------------------------------------
+def build_rules(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, Tuple[str, ...]]:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axes.get("model", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    batch_n = 1
+    for a in batch_axes:
+        batch_n *= axes[a]
+
+    fsdp_on = cfg.total_params() > 5e9 if shape.kind == "train" else (
+        cfg.total_params() * 2 / model_n > 4e9
+    )
+    expert_div = cfg.moe is not None and cfg.moe.num_experts % model_n == 0
+    batch_ok = shape.global_batch % batch_n == 0 and shape.global_batch >= batch_n
+
+    # serving a big MoE: full expert-parallel over the whole mesh (EP=256/512)
+    # beats FSDP-gathering expert weights every step — weights stay put, the
+    # (tiny) token batch moves via all-to-all (§Perf iteration 8)
+    full_ep = (
+        shape.kind != "train"
+        and cfg.moe is not None
+        and cfg.moe.num_experts % (batch_n * model_n) == 0
+        and not batch_ok  # batch-sharded serving already parallelizes over data
+    )
+    if full_ep:
+        expert_rule: Tuple[str, ...] = batch_axes + ("model",)
+        fsdp_on = False  # dense remainder fits TP-sharded (DESIGN.md §5)
+    elif expert_div:
+        expert_rule = ("model",)
+    else:
+        expert_rule = ()
+
+    # sequence-parallel residual stream for giant-width DENSE training
+    # (nemotron): activations at remat boundaries shrink by the model axis.
+    # NOT for MoE: grouped dispatch needs token groups aligned with batch
+    # shards; a seq-sharded stream forces full resharding per MoE layer
+    # (§Perf iterations 11-12: confirmed dense, refuted MoE)
+    seq_par = (
+        shape.kind == "train"
+        and cfg.moe is None
+        and cfg.d_model >= 7168
+        and shape.seq_len % model_n == 0
+    )
+
+    rules: Dict[str, Tuple[str, ...]] = {
+        "batch": batch_axes if batch_ok else (),
+        "tp": ("model",),
+        "expert": expert_rule,
+        "expert_ff": () if (expert_div or full_ep) else ("model",),
+        "cap": batch_axes if batch_ok else (),
+        "fsdp": batch_axes if fsdp_on else (),
+        "seq": ("model",) if seq_par else (),
+        "kvseq": (),
+    }
+    if shape.kind == "decode":
+        if not batch_ok:
+            # long_500k (batch 1): sequence-parallel cache over every axis
+            rules["kvseq"] = batch_axes + ("model",)
+        elif cfg.num_kv_heads % model_n != 0:
+            rules["kvseq"] = ("model",)
+    return rules
+
+
+def serve_cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Prefix length the serving caches hold (the SWA variant bounds it)."""
+    s = shape.seq_len
+    if cfg.sliding_window is not None:
+        return min(s, cfg.sliding_window)          # mixtral: native SWA
+    if cfg.mla is not None or cfg.arch_type in ("ssm", "hybrid"):
+        return s                                    # latent cache / SSM state scale
+    if shape.name == "long_500k" and cfg.sliding_window_serve:
+        return min(s, cfg.sliding_window_serve)     # SWA serving variant
+    return s
+
+
+def dryrun_tables_shapes(cfg: ModelConfig) -> DingoTables:
+    return DingoTables(
+        class_id=jax.ShapeDtypeStruct((cfg.vocab_size,), jnp.int32),
+        cnext=jax.ShapeDtypeStruct((DRYRUN_Q, DRYRUN_C), jnp.int32),
+        mask_reach=jax.ShapeDtypeStruct((DRYRUN_Q, DRYRUN_Q), jnp.bool_),
+        live=jax.ShapeDtypeStruct((DRYRUN_Q,), jnp.bool_),
+        start=jax.ShapeDtypeStruct((), jnp.int32),
+        mask_token_id=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def _tables_specs(vdim="model") -> DingoTables:
+    return DingoTables(
+        class_id=P(vdim),          # vocab-sharded (same layout as the logits dim)
+        cnext=P(),
+        mask_reach=P(),
+        live=P(),
+        start=P(),
+        mask_token_id=P(),
+    )
+
+
+class Plan(NamedTuple):
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    rules: Dict[str, Tuple[str, ...]]
+    static: Dict[str, Any]
+
+
+def _spec_tree_like(shapes, spec=P()):
+    return jax.tree_util.tree_map(lambda _: spec, shapes)
+
+
+def _frontend_shapes(cfg: ModelConfig, batch: int):
+    dt = jnp.dtype(cfg.dtype)
+    vis = enc = None
+    if cfg.frontend == "vision":
+        vis = jax.ShapeDtypeStruct((batch, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.frontend == "audio":
+        enc = jax.ShapeDtypeStruct((batch, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+    return vis, enc
+
+
+def build_plan(arch: str, shape_name: str, mesh) -> Plan:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = build_rules(cfg, shape, mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+
+    if shape.kind == "train":
+        return _train_plan(cfg, shape, rules, axis_sizes)
+    if shape.kind == "prefill":
+        return _prefill_plan(cfg, shape, rules, model_n, axis_sizes)
+    return _decode_plan(cfg, shape, rules, model_n, axis_sizes)
+
+
+def _train_plan(cfg: ModelConfig, shape: ShapeSpec, rules, axis_sizes=None) -> Plan:
+    tcfg = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len, remat=True)
+    mask_id = cfg.vocab_size - 1
+    train_step = make_train_step(cfg, tcfg, mask_id)
+
+    state_shapes = jax.eval_shape(
+        functools.partial(init_train_state, cfg, tcfg), jax.random.PRNGKey(0)
+    )
+    b, s = shape.global_batch, shape.seq_len
+    vis, enc = _frontend_shapes(cfg, b)
+    batch_shapes = Batch(
+        tokens=jax.ShapeDtypeStruct((b, s), jnp.int32),
+        loss_mask=jax.ShapeDtypeStruct((b, s), jnp.bool_),
+        vision_embeds=vis,
+        encoder_embeds=enc,
+    )
+    pspecs = param_specs(state_shapes.params, rules, axis_sizes)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=AdamState(step=P(), m=pspecs, v=jax.tree_util.tree_map(lambda x: x, pspecs)),
+        rng=P(),
+    )
+    bspecs = batch_specs(cfg, rules)
+    metrics_shapes = jax.eval_shape(train_step, state_shapes, batch_shapes)[1]
+    out_shardings = (state_specs, _spec_tree_like(metrics_shapes))
+    return Plan(
+        fn=train_step,
+        args=(state_shapes, batch_shapes),
+        in_shardings=(state_specs, bspecs),
+        out_shardings=out_shardings,
+        rules=rules,
+        static={"kind": "train", "tokens": b * s},
+    )
+
+
+def _params_and_specs(cfg: ModelConfig, rules, axis_sizes=None):
+    from repro.models import init_model
+
+    params_shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    return params_shapes, param_specs(params_shapes, rules, axis_sizes)
+
+
+def _prefill_plan(cfg: ModelConfig, shape: ShapeSpec, rules, model_n, axis_sizes=None) -> Plan:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    vis, enc = _frontend_shapes(cfg, b)
+
+    def prefill_step(params, tokens, vision_embeds, encoder_embeds):
+        caches = init_caches(cfg, b, s, dt)
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.rope_type == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, s))
+        logits, caches, _, _ = forward(
+            params, cfg,
+            ModelInputs(tokens, pos, vision_embeds=vision_embeds, encoder_embeds=encoder_embeds),
+            caches, commit=True, logits_tail=BLOCK, attend_cache=False,
+        )
+        return logits, caches
+
+    params_shapes, pspecs = _params_and_specs(cfg, rules, axis_sizes)
+    tok_shape = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    bsp = rules.get("batch", ())
+    bdim = None if not bsp else (bsp[0] if len(bsp) == 1 else tuple(bsp))
+    caches_shapes = jax.eval_shape(lambda: init_caches(cfg, b, s, dt))
+    cspecs = cache_specs(cfg, caches_shapes, rules, model_n)
+    vdim = "model" if cfg.vocab_size % model_n == 0 else None
+    out_shardings = (P(bdim, None, vdim), cspecs)
+    in_sh = (
+        pspecs,
+        P(bdim, None),
+        (P(bdim, None, None) if vis is not None else None),
+        (P(bdim, None, None) if enc is not None else None),
+    )
+    return Plan(
+        fn=prefill_step,
+        args=(params_shapes, tok_shape, vis, enc),
+        in_shardings=in_sh,
+        out_shardings=out_shardings,
+        rules=rules,
+        static={"kind": "prefill", "tokens": b * s},
+    )
+
+
+def _decode_plan(cfg: ModelConfig, shape: ShapeSpec, rules, model_n, axis_sizes=None) -> Plan:
+    b = shape.global_batch
+    cache_len = serve_cache_len(cfg, shape)
+    dt = jnp.dtype(cfg.dtype)
+    scfg = ServeConfig(decode="dingo", remask="top_prob", kernel_impl="jnp", block_size=BLOCK)
+    mask_id = cfg.vocab_size - 1
+    serve_step = make_serve_step(cfg, scfg, mask_id, tables=None, n_commit=BLOCK // 4)
+
+    params_shapes, pspecs = _params_and_specs(cfg, rules, axis_sizes)
+    caches_shapes = jax.eval_shape(lambda: init_caches(cfg, b, cache_len, dt))
+    cspecs = cache_specs(cfg, caches_shapes, rules, model_n)
+    bsp = rules.get("batch", ())
+    bdim = None if not bsp else (bsp[0] if len(bsp) == 1 else tuple(bsp))
+
+    args = (
+        params_shapes,
+        caches_shapes,
+        jax.ShapeDtypeStruct((b, BLOCK), jnp.int32),            # block tokens
+        jax.ShapeDtypeStruct((b, BLOCK), jnp.bool_),            # committed
+        jax.ShapeDtypeStruct((b, DRYRUN_Q), jnp.float32),       # DP carry w0
+        jax.ShapeDtypeStruct((), jnp.int32),                    # start offset
+        jax.ShapeDtypeStruct((2,), jnp.uint32),                 # rng key (raw)
+        dryrun_tables_shapes(cfg),
+    )
+    vdim = "model" if cfg.vocab_size % model_n == 0 else None
+    in_sh = (
+        pspecs, cspecs, P(bdim, None), P(bdim, None), P(bdim, None), P(), P(),
+        _tables_specs(vdim),
+    )
+    out_shardings = (P(bdim, None), P(bdim, None), P(bdim), P(bdim), cspecs)
+
+    def fn(params, caches, block_tokens, committed, w0, start, rng_raw, tables):
+        rng = jax.random.wrap_key_data(rng_raw)
+        return serve_step(params, caches, block_tokens, committed, w0, start, rng, tables)
+
+    return Plan(
+        fn=fn,
+        args=args,
+        in_shardings=in_sh,
+        out_shardings=out_shardings,
+        rules=rules,
+        static={"kind": "decode", "tokens": b * BLOCK, "cache_len": cache_len,
+                "donate": (1,)},
+    )

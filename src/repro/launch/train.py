@@ -1,0 +1,100 @@
+"""Training launcher.
+
+CPU/demo:      PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+                   --smoke --steps 20 --batch 4 --seq 64 --task math
+TPU/production: --production lowers against make_production_mesh() with the
+per-arch sharding rules (the same path the dry-run proves out).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.config import TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.loader import TaskDataLoader
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_rules
+from repro.sharding.api import sharding_context
+from repro.sharding.rules import batch_specs, param_specs
+from repro.tokenizer import default_tokenizer
+from repro.training import checkpoint, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--production", action="store_true", help="production mesh pjit")
+    ap.add_argument("--task", default="lm", choices=["lm", "math", "json"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tok = default_tokenizer(cfg.vocab_size)
+    tcfg = TrainConfig(
+        global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+        warmup_steps=max(2, args.steps // 10), total_steps=args.steps,
+        remat=not args.smoke,
+    )
+
+    if args.production:
+        mesh = make_production_mesh()
+        rules = build_rules(cfg, SHAPES["train_4k"], mesh)
+        ctx = sharding_context(mesh, rules)
+    else:
+        mesh = None
+        ctx = None
+
+    def run():
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(args.seed))
+        step_raw = make_train_step(cfg, tcfg, tok.mask_token_id)
+        if mesh is not None:
+            pspecs = param_specs(state.params, rules)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.training import AdamState, TrainState
+
+            sspecs = TrainState(
+                params=pspecs,
+                opt=AdamState(step=P(), m=pspecs, v=jax.tree_util.tree_map(lambda s: s, pspecs)),
+                rng=P(),
+            )
+            def nmd(t):
+                return jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), t,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            step_fn = jax.jit(step_raw, in_shardings=(nmd(sspecs), nmd(batch_specs(cfg, rules))),
+                              donate_argnums=(0,))
+        else:
+            step_fn = jax.jit(step_raw, donate_argnums=(0,))
+        loader = TaskDataLoader(args.task, tok, cfg, args.batch, args.seq, seed=args.seed)
+        t0 = time.time()
+        for i, batch in zip(range(args.steps), loader):
+            state, metrics = step_fn(state, batch)
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  gnorm {float(metrics['grad_norm']):.2f}  "
+                      f"{(time.time()-t0)/(i+1):.2f}s/step")
+        if args.ckpt:
+            checkpoint.save(args.ckpt, state.params, meta={"arch": args.arch, "steps": args.steps})
+            print("saved", args.ckpt)
+        return state
+
+    if ctx is not None:
+        with mesh, ctx:
+            run()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

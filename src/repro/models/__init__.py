@@ -1,0 +1,3 @@
+from .transformer import ModelInputs, forward, init_caches, init_model, mtp_logits, segments
+
+__all__ = ["ModelInputs", "forward", "init_caches", "init_model", "mtp_logits", "segments"]

@@ -1,0 +1,261 @@
+"""Bidirectional (diffusion) GQA attention with optional sliding window,
+qk-norm, RoPE / M-RoPE, KV cache for block-diffusion serving.
+
+Long sequences use a chunked online-softmax scan over KV blocks so (S, T)
+score matrices are never materialized (the pure-JAX flash equivalent —
+DESIGN.md §4.5); short sequences take the dense einsum path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.api import constrain
+
+from .layers import apply_mrope, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S, KV, Dh)
+    v: jax.Array        # (B, S, KV, Dh)
+    length: jax.Array   # (B,) valid prefix length
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), 0, dtype),
+        "wk": dense_init(ks[1], (d, kv * dh), 0, dtype),
+        "wv": dense_init(ks[2], (d, kv * dh), 0, dtype),
+        "wo": dense_init(ks[3], (h * dh, d), 0, dtype),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _window_mask(qpos, kpos, window: Optional[int]):
+    """(B, S, T) bool valid mask. Bidirectional distance window when set."""
+    if window is None:
+        return None
+    dist = jnp.abs(qpos[:, :, None] - kpos[:, None, :])
+    return dist <= window
+
+
+def mha(
+    q, k, v, qpos, kpos,
+    *,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,   # (B, T) bool
+    chunk: int = 2048,
+    return_stats: bool = False,
+):
+    """q (B,S,H,Dh); k,v (B,T,KV,Dh); grouped-query bidirectional attention.
+
+    With ``return_stats`` also returns the online-softmax (m, l) statistics
+    (shape (B,S,KV,G)) so two attention pieces over disjoint key sets can be
+    merged flash-decoding style (``merge_attention``) — used to attend a
+    sequence-sharded prefix cache and the current block WITHOUT concatenating
+    them (a concat would break the cache's sharding and force replication)."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    qg = q.reshape(b, s, kvh, g, dh) * scale
+
+    if t <= chunk:
+        # bf16 inputs, f32 accumulation (MXU-native on TPU; avoids materializing
+        # an f32 copy of K — §Perf iteration 3)
+        scores = jnp.einsum(
+            "bskgd,btkd->bskgt", qg, k, preferred_element_type=jnp.float32
+        )
+        if kv_valid is not None:
+            # cache attention: pin the score layout to the cache's sequence
+            # sharding so the partitioner computes sharded partial-softmax
+            # (all-reduce of (m, l) stats) instead of all-to-all-ing the whole
+            # cache into a head-sharded layout (§Perf iteration 1). ONLY when
+            # the cache is actually seq-sharded: an empty kvseq rule would
+            # otherwise force the kv-head dims to replicate (iteration 13).
+            from repro.sharding.api import logical_axis_size
+
+            if logical_axis_size("kvseq") > 1:
+                scores = constrain(scores, "batch", None, None, None, "kvseq")
+        mask = _window_mask(qpos, kpos, window)
+        if mask is not None:
+            scores = jnp.where(mask[:, :, None, None, :], scores, NEG_INF)
+        if kv_valid is not None:
+            scores = jnp.where(kv_valid[:, None, None, None, :], scores, NEG_INF)
+        if not return_stats:
+            p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+            out = jnp.einsum("bskgt,btkd->bskgd", p, v)
+            return out.reshape(b, s, h, dh)
+        m = scores.max(-1)
+        pexp = jnp.exp(scores - m[..., None])
+        l = pexp.sum(-1)
+        out = jnp.einsum("bskgt,btkd->bskgd", pexp.astype(q.dtype), v).astype(jnp.float32)
+        out = out / jnp.maximum(l, 1e-30)[..., None]
+        return out, m, l
+
+    # chunked online softmax over KV blocks. Masks are rebuilt inside the scan
+    # body from the (dynamic) chunk index so XLA cannot hoist a stacked
+    # (n_chunks, B, S, ..., chunk) mask out of the loop — that hoist costs
+    # gigabytes at 32k (see DESIGN.md §4.5).
+    n_chunks = -(-t // chunk)
+    t_pad = n_chunks * chunk
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(kpos, ((0, 0), (0, t_pad - t)), constant_values=-(10**9))
+    valid_p = (
+        jnp.pad(kv_valid, ((0, 0), (0, t_pad - t)), constant_values=False)
+        if kv_valid is not None
+        else jnp.pad(jnp.ones((b, t), bool), ((0, 0), (0, t_pad - t)), constant_values=False)
+    )
+    kc = kp.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+    vc = vp.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, idx = blk
+        pb = jax.lax.dynamic_slice(kpos_p, (0, idx * chunk), (b, chunk))
+        vbm = jax.lax.dynamic_slice(valid_p, (0, idx * chunk), (b, chunk))
+        scores = jnp.einsum("bskgd,btkd->bskgt", qg, kb).astype(jnp.float32)
+        bias = jnp.where(vbm, 0.0, NEG_INF)[:, None, :]          # (B, 1, chunk)
+        if window is not None:
+            bias = bias + jnp.where(
+                jnp.abs(qpos[:, :, None] - pb[:, None, :]) <= window, 0.0, NEG_INF
+            )
+        scores = scores + bias[:, :, None, None, :]
+        scores = jnp.maximum(scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pblk = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + pblk.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", pblk.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, s, kvh, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    if return_stats:
+        return out, m, l
+    return out.astype(q.dtype).reshape(b, s, h, dh)
+
+
+def merge_attention(parts, b, s, h, dh, dtype):
+    """Merge flash partials [(out, m, l), ...] over disjoint key sets."""
+    m = parts[0][1]
+    for _, mi, _ in parts[1:]:
+        m = jnp.maximum(m, mi)
+    num = 0.0
+    den = 0.0
+    for o, mi, li in parts:
+        w = jnp.exp(jnp.maximum(mi - m, -80.0)) * li
+        num = num + o * w[..., None]
+        den = den + w
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out.astype(dtype).reshape(b, s, h, dh)
+
+
+def attn_apply(
+    p,
+    x,                      # (B, S, D)
+    cfg: ModelConfig,
+    positions,              # (B, S) or (3, B, S) for mrope
+    cache: Optional[KVCache] = None,
+    *,
+    window: Optional[int] = None,
+    eps: float = 1e-6,
+    commit: bool = False,
+    attend_cache: bool = True,
+):
+    """Returns (out (B,S,D), updated cache or None).
+
+    With a cache, the S query positions form the current diffusion block: they
+    attend to the cached prefix plus the block itself (bidirectionally). With
+    ``commit=True`` the block's K/V are appended to the cache (used by the
+    engine once a block's tokens are final, and for prompt prefill)."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # constrain the PACKED projections (H*Dh is mesh-divisible even when H isn't,
+    # e.g. starcoder2's 36 heads on a 16-way model axis)
+    q = constrain(x @ p["wq"], "batch", None, "tp").reshape(b, s, h, dh)
+    k = constrain(x @ p["wk"], "batch", None, None).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"], eps)
+        k = rmsnorm(k, p["k_norm"], eps)
+
+    if cfg.rope_type == "mrope":
+        qpos_abs = positions[0]
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "rope":
+        qpos_abs = positions
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        qpos_abs = positions if positions.ndim == 2 else positions[0]
+
+    if cache is None or not attend_cache:
+        # self-attention within the (prompt/block) span
+        out = mha(q, k, v, qpos_abs, qpos_abs, window=window, chunk=cfg.attn_chunk)
+        new_cache = cache_append(cache, k, v) if (cache is not None and commit) else cache
+        if cache is None:
+            new_cache = None
+    else:
+        # decode: attend the (possibly sequence-sharded) prefix cache and the
+        # block SEPARATELY and merge flash-decoding style — concatenating
+        # would break the cache sharding and replicate gigabytes (DESIGN.md §4.5)
+        t = cache.k.shape[1]
+        kpos_cache = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+        kv_valid = kpos_cache < cache.length[:, None]
+        # decode queries are one block (<=32): cache attention is a single DENSE
+        # sharded einsum — the chunked scan's fixed chunk size straddles the
+        # sequence-sharded cache's shard boundaries and forces an all-to-all
+        # reshard of the whole cache every layer (§Perf iteration 2)
+        part_cache = mha(
+            q, cache.k, cache.v, qpos_abs, kpos_cache,
+            window=window, kv_valid=kv_valid, chunk=max(t, cfg.attn_chunk),
+            return_stats=True,
+        )
+        part_block = mha(
+            q, k, v, qpos_abs, qpos_abs, window=window,
+            chunk=cfg.attn_chunk, return_stats=True,
+        )
+        out = merge_attention([part_cache, part_block], b, s, h, dh, q.dtype)
+        new_cache = cache_append(cache, k, v) if commit else cache
+    out = out.reshape(b, s, h * dh)
+    out = constrain(out, "batch", None, "tp")
+    return out @ p["wo"], new_cache
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv, dh), dtype),
+        v=jnp.zeros((batch, max_len, kv, dh), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
+    """Commit a block's K/V at the current length offset (same length per batch
+    row in block-diffusion serving)."""
+    b, s = k_new.shape[0], k_new.shape[1]
+    start = cache.length[0]  # uniform across batch in block serving
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, start, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, start, 0, 0))
+    return KVCache(k=k, v=v, length=cache.length + s)

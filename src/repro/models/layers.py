@@ -1,0 +1,113 @@
+"""Shared model layers: norms, embeddings, RoPE / M-RoPE, MLP variants, init."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    scale = (1.0 / max(1, fan_in)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim//2)."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x (B, S, H, Dh) rotated by absolute ``positions`` (B, S)."""
+    b, s, h, dh = x.shape
+    cos, sin = _rope_angles(positions, dh, theta)        # (B, S, Dh/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 1e4, sections=None):
+    """Qwen2-VL multimodal RoPE: positions3 (3, B, S) = (temporal, h, w) ids.
+
+    The head dim's rotary frequencies are split into three sections, each
+    rotated by its own position stream [arXiv:2409.12191]. Default split is
+    Qwen2-VL's 1/4 : 3/8 : 3/8 of the rotary half-dim."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    if sections is None:
+        t_sec = half // 4
+        h_sec = (half - t_sec) // 2
+        sections = (t_sec, h_sec, half - t_sec - h_sec)
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang_all = positions3.astype(jnp.float32)[..., None] * freqs  # (3, B, S, half)
+    idx = []
+    for sec_i, sec in enumerate(sections):
+        idx += [sec_i] * sec
+    sel = jax.nn.one_hot(jnp.asarray(idx, jnp.int32), 3, dtype=jnp.float32)  # (half, 3)
+    ang = jnp.einsum("tbsh,ht->bsh", ang_all, sel)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, (d_model, d_ff), 0, dtype),
+         "wo": dense_init(k2, (d_ff, d_model), 0, dtype)}
+    if activation == "swiglu":
+        p["wg"] = dense_init(k3, (d_model, d_ff), 0, dtype)
+    return p
+
+
+def mlp_apply(p, x, activation: str):
+    h = x @ p["wi"]
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))   # nemotron squared-ReLU [arXiv:2402.16819]
+    else:
+        raise ValueError(activation)
+    h = constrain(h, "batch", None, "tp")
+    return h @ p["wo"]

@@ -1,0 +1,185 @@
+"""Mamba-2 block: SSD (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm (the paper's "quadratic-within-chunk, linear-across-
+chunks" form, mapped to scan + einsum so the intra-chunk part is MXU matmuls):
+
+  per chunk of length L:
+    intra:  Y_intra = (C Bᵀ ⊙ decay-mask) · (dt ⊙ X)
+    state:  S_next  = S · decay(L) + Σ (decay-to-end ⊙ dt ⊙ X) ⊗ B
+    inter:  Y_inter = (C · S_prev) ⊙ decay-from-start
+
+Decode uses the O(1) recurrence: S ← S·exp(dt·A) + dt·B⊗x; y = C·S + D·x.
+The SSM state (B, H, hd, d_state) is the "KV cache" of this architecture —
+constant in sequence length, which is why mamba2/jamba run long_500k natively.
+SSM layers are causal (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.api import constrain
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim) rolling conv window
+    state: jax.Array   # (B, H, head_dim, d_state)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z (d_inner) | x (d_inner) | B (g*ds) | C (g*ds) | dt (H)]
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    dt_bias = jax.random.uniform(
+        ks[2], (n_heads,), minval=jnp.log(s.dt_min), maxval=jnp.log(s.dt_max)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, in_dim), 0, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), 0, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, x, bb, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + gs, 2 * d_inner + 2 * gs], axis=-1
+    )
+    return z, x, bb, cc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """xbc (B, S, C); depthwise causal conv, kernel (K, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    full = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K-1, C)
+    out = sum(full[:, i : i + xbc.shape[1]] * conv_w[i][None, None, :] for i in range(k))
+    out = jax.nn.silu(out + conv_b[None, None, :])
+    new_state = full[:, -(k - 1) :] if k > 1 else pad
+    return out, new_state
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, init_state=None, chunk: int = 128):
+    """SSD over a full sequence.
+
+    xh   (B, S, H, hd)   inputs per head
+    dt   (B, S, H)       positive step sizes
+    a    (H,)            positive decay rates (state decay exp(-dt*a))
+    bmat (B, S, G, ds), cmat (B, S, G, ds); heads map to groups h % G
+    Returns y (B, S, H, hd), final_state (B, H, hd, ds).
+    """
+    b, s, h, hd = xh.shape
+    g, ds = bmat.shape[2], bmat.shape[3]
+    n_chunks = -(-s // chunk)
+    s_pad = n_chunks * chunk
+    padlen = s_pad - s
+    if padlen:
+        xh = jnp.pad(xh, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+
+    head_group = jnp.arange(h) % g
+
+    def reshape_chunks(t):
+        return t.reshape((b, n_chunks) + (chunk,) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, bc, cc = map(reshape_chunks, (xh, dt, bmat, cmat))
+    bh = jnp.take(bc, head_group, axis=3)   # (N, B, L, H, ds)
+    ch = jnp.take(cc, head_group, axis=3)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, hd, ds), jnp.float32)
+
+    def chunk_step(state, blk):
+        xb, dtb, bb, cb = blk                     # (B, L, H, ...)
+        la = -dtb * a[None, None, :]              # log decay per step (B, L, H), <=0
+        cum = jnp.cumsum(la, axis=1)              # (B, L, H) decay from chunk start
+        # intra-chunk: mask[i, j] = exp(cum_i - cum_j) for j <= i  (i attends j)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B, L, L, H)
+        causal = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        decay_m = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        cb_f = cb.astype(jnp.float32)
+        bb_f = bb.astype(jnp.float32)
+        xdt = xb.astype(jnp.float32) * dtb[..., None]        # (B, L, H, hd)
+        scores = jnp.einsum("blhs,bmhs->blmh", cb_f, bb_f) * decay_m
+        y_intra = jnp.einsum("blmh,bmhd->blhd", scores, xdt)
+        # inter-chunk: contribution of incoming state
+        decay_from_start = jnp.exp(cum)                      # (B, L, H)
+        y_inter = jnp.einsum(
+            "blhs,bhds->blhd", cb_f * decay_from_start[..., None], state
+        )
+        # state update
+        total = cum[:, -1:, :]                               # (B, 1, H)
+        decay_to_end = jnp.exp(total - cum)                  # (B, L, H)
+        state_new = state * jnp.exp(total)[:, 0, :, None, None] + jnp.einsum(
+            "blhd,blhs->bhds", xdt * decay_to_end[..., None], bb_f
+        )
+        return state_new, (y_intra + y_inter).astype(xh.dtype)
+
+    final_state, yc = jax.lax.scan(chunk_step, init_state, (xc, dtc, bh, ch))
+    y = yc.swapaxes(0, 1).reshape(b, s_pad, h, hd)[:, :s]
+    return y, final_state
+
+
+def mamba2_apply(p, x, cfg: ModelConfig, cache: SSMCache | None = None, *, commit: bool = False):
+    """x (B, S, D) -> (out, new_cache). With a cache, the recurrence starts from
+    cache.state (and the rolling conv window); commit updates the cache."""
+    s_cfg, d_inner, n_heads, conv_dim = _dims(cfg)
+    b, s, d = x.shape
+    proj = x @ p["in_proj"]
+    z, xi, bb, cc, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xi, bb, cc], axis=-1)
+    conv_in_state = cache.conv if cache is not None else None
+    xbc, conv_state_new = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_in_state)
+    xi, bb, cc = jnp.split(xbc, [d_inner, d_inner + s_cfg.n_groups * s_cfg.d_state], axis=-1)
+
+    xh = xi.reshape(b, s, n_heads, s_cfg.head_dim)
+    xh = constrain(xh, "batch", None, "tp", None)
+    bmat = bb.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    cmat = cc.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = jnp.exp(p["a_log"])
+
+    init_state = cache.state if cache is not None else None
+    y, state_new = ssd_chunked(xh, dt_pos, a, bmat, cmat, init_state, chunk=s_cfg.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_cache = cache
+    if cache is not None and commit:
+        new_cache = SSMCache(conv=conv_state_new.astype(cache.conv.dtype), state=state_new)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    )

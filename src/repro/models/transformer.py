@@ -1,0 +1,289 @@
+"""Backbone assembler: dense / MoE / SSM / hybrid / enc-dec architectures as a
+masked-diffusion LM.
+
+Layers are grouped into *segments*: runs of layers sharing an identical
+parameter structure (a "period" of 1..8 layers, e.g. jamba's [attn, ssm×7]
+with MoE on alternate layers). Each segment's parameters are stacked with a
+leading repeat axis and applied with ``lax.scan`` — HLO size and compile time
+are O(period), not O(num_layers) (DESIGN.md §4.6). Caches are stacked the same
+way and scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.api import constrain
+
+from . import attention, mamba2, mla, moe
+from .layers import dense_init, embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+class ModelInputs(NamedTuple):
+    tokens: jax.Array                       # (B, S) int32
+    positions: jax.Array                    # (B, S) or (3, B, S) for mrope
+    vision_embeds: Optional[jax.Array] = None   # (B, P, D) — VLM stub frontend
+    encoder_embeds: Optional[jax.Array] = None  # (B, F, D) — audio stub frontend
+
+
+# ---------------------------------------------------------------------------
+# layer structure -> segments
+# ---------------------------------------------------------------------------
+def layer_structure(cfg: ModelConfig) -> List[Tuple[str, bool]]:
+    return [(cfg.layer_kind(i), cfg.is_moe_layer(i)) for i in range(cfg.num_layers)]
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[Tuple[Tuple[str, bool], ...], int]]:
+    """[(period_structure, repeat_count), ...] covering all decoder layers."""
+    struct = layer_structure(cfg)
+    segs: List[Tuple[Tuple[Tuple[str, bool], ...], int]] = []
+    i = 0
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        n = cfg.moe.first_dense_layers
+        segs.append((tuple(struct[:n][:1]), n))  # uniform dense prefix, period 1
+        i = n
+    rest = struct[i:]
+    if not rest:
+        return segs
+    # minimal period that tiles `rest`
+    for p in range(1, len(rest) + 1):
+        if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+            segs.append((tuple(rest[:p]), len(rest) // p))
+            return segs
+    raise AssertionError("unreachable")
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ModelConfig, kind: str, is_moe: bool, cross: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model)}
+    if kind == "ssm":
+        p["mixer"] = mamba2.mamba2_init(ks[0], cfg, dtype)
+    elif cfg.mla is not None:
+        p["mixer"] = mla.mla_init(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = attention.attn_init(ks[0], cfg, dtype)
+    if is_moe:
+        p["ffn"] = moe.moe_init(ks[1], cfg, dtype)
+    elif cfg.d_ff:
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    if cross:
+        p["ln_cross"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attention.attn_init(ks[2], cfg, dtype)
+    return p
+
+
+def _layer_apply(
+    p, x, cfg: ModelConfig, kind: str, is_moe: bool, positions,
+    cache, commit: bool, enc_out, window, attend_cache: bool = True,
+):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        mix, new_cache = mamba2.mamba2_apply(p["mixer"], h, cfg, cache, commit=commit)
+    elif cfg.mla is not None:
+        if cache is None or not attend_cache:
+            mix, new_cache = mla.mla_expanded(
+                p["mixer"], h, cfg, positions, cache, commit=commit
+            )
+        else:
+            mix, new_cache = mla.mla_absorbed(p["mixer"], h, cfg, positions, cache, commit=commit)
+    else:
+        mix, new_cache = attention.attn_apply(
+            p["mixer"], h, cfg, positions, cache, window=window, commit=commit,
+            attend_cache=attend_cache,
+        )
+    x = x + mix
+    if "cross" in p and enc_out is not None:
+        hc = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None], enc_out.shape[:2]
+        )
+        # cross-attention: queries from decoder, K/V from encoder output
+        b, s, _ = hc.shape
+        hh, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = (hc @ p["cross"]["wq"]).reshape(b, s, hh, dh)
+        k = (enc_out @ p["cross"]["wk"]).reshape(b, -1, kv, dh)
+        v = (enc_out @ p["cross"]["wv"]).reshape(b, -1, kv, dh)
+        qpos = positions if positions.ndim == 2 else positions[0]
+        o = attention.mha(q, k, v, qpos, enc_pos, chunk=cfg.attn_chunk)
+        x = x + o.reshape(b, s, hh * dh) @ p["cross"]["wo"]
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        f, aux = moe.moe_apply(p["ffn"], h2, cfg)
+    elif "ffn" in p:
+        f = mlp_apply(p["ffn"], h2, cfg.activation)
+    else:
+        f = jnp.zeros_like(h2)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+def init_model(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), 0, dtype)
+
+    cross = cfg.is_encdec
+    segs = segments(cfg)
+    seg_params = []
+    kidx = 2
+    for si, (period, count) in enumerate(segs):
+        def init_one(k):
+            kk = jax.random.split(k, len(period))
+            return tuple(
+                _layer_init(kk[j], cfg, kind, is_moe, cross, dtype)
+                for j, (kind, is_moe) in enumerate(period)
+            )
+        seg_keys = jax.random.split(jax.random.fold_in(keys[kidx], si), count)
+        seg_params.append(jax.vmap(init_one)(seg_keys))
+    params["segments"] = seg_params
+
+    if cfg.is_encdec:
+        def enc_init_one(k):
+            return _layer_init(k, cfg, "attn", False, False, dtype)
+        enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(enc_init_one)(enc_keys)
+        params["enc_ln_f"] = rmsnorm_init(cfg.d_model)
+
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": dense_init(keys[4], (2 * cfg.d_model, cfg.d_model), 0, dtype),
+            "layer": _layer_init(keys[5], cfg, "attn", False, False, dtype),
+            "ln": rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _encoder_forward(params, cfg: ModelConfig, enc_embeds):
+    x = enc_embeds
+    pos = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+
+    def body(x, lp):
+        x, _, _ = _layer_apply(lp, x, cfg, "attn", False, pos, None, False, None, None)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    inputs: ModelInputs,
+    caches: Optional[list] = None,       # per-segment stacked caches (or None)
+    *,
+    commit: bool = False,
+    window: Optional[int] = None,
+    remat: bool = False,
+    logits_tail: Optional[int] = None,
+    attend_cache: bool = True,
+):
+    """Returns (logits (B,S,V), new_caches, aux_loss, hidden).
+
+    ``logits_tail=n`` computes logits only for the last n positions (prefill:
+    avoids a (B, 32k, 129k) unembed product when only caches are needed)."""
+    x = jnp.take(params["embed"], inputs.tokens, axis=0)
+    if cfg.frontend == "vision" and inputs.vision_embeds is not None:
+        pcount = inputs.vision_embeds.shape[1]
+        x = jnp.concatenate([inputs.vision_embeds.astype(x.dtype), x[:, pcount:]], axis=1)
+    x = constrain(x, "batch", "seq", None)
+
+    enc_out = None
+    if cfg.is_encdec and inputs.encoder_embeds is not None:
+        enc_out = _encoder_forward(params, cfg, inputs.encoder_embeds.astype(x.dtype))
+
+    eff_window = window if window is not None else cfg.sliding_window
+    segs = segments(cfg)
+    new_caches: list = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, ((period), count) in enumerate(segs):
+        seg_p = params["segments"][si]
+        seg_c = caches[si] if caches is not None else None
+
+        def seg_body(x, scanned, period=period):
+            lp, lc = scanned
+            aux_acc = jnp.zeros((), jnp.float32)
+            new_lc = []
+            for j, (kind, is_moe) in enumerate(period):
+                cj = lc[j] if lc is not None else None
+                x, cj_new, aux = _layer_apply(
+                    lp[j], x, cfg, kind, is_moe, inputs.positions,
+                    cj, commit, enc_out, eff_window, attend_cache,
+                )
+                new_lc.append(cj_new)
+                aux_acc = aux_acc + aux
+            return x, (tuple(new_lc) if lc is not None else None, aux_acc)
+
+        body = jax.checkpoint(seg_body) if remat else seg_body
+        if seg_c is not None:
+            x, (seg_c_new, auxs) = jax.lax.scan(body, x, (seg_p, seg_c))
+        else:
+            x, (seg_c_new, auxs) = jax.lax.scan(body, x, (seg_p, None))
+        new_caches.append(seg_c_new)
+        aux_total = aux_total + auxs.sum()
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    head_in = x if logits_tail is None else x[:, -logits_tail:]
+    logits = head_in @ unembed
+    logits = constrain(logits, "batch", "seq", "tp")
+    return logits, (new_caches if caches is not None else None), aux_total, x
+
+
+def mtp_logits(params, cfg: ModelConfig, hidden, inputs: ModelInputs):
+    """DeepSeek-style MTP head (depth 1): predict position i+1 from
+    [hidden_i ; embed(token_{i+1})] through one extra layer."""
+    emb = jnp.take(params["embed"], inputs.tokens, axis=0)
+    nxt = jnp.concatenate([emb[:, 1:], emb[:, -1:]], axis=1)
+    h = jnp.concatenate([rmsnorm(hidden, params["mtp"]["ln"], cfg.norm_eps), nxt], axis=-1)
+    h = h @ params["mtp"]["proj"]
+    h, _, _ = _layer_apply(
+        params["mtp"]["layer"], h, cfg, "attn", False, inputs.positions, None, False, None, None
+    )
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return h @ unembed
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> list:
+    """Per-segment stacked caches matching the scan layout."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    out = []
+    for period, count in segments(cfg):
+        def one(_):
+            items = []
+            for kind, _m in period:
+                if kind == "ssm":
+                    items.append(mamba2.ssm_cache_init(cfg, batch, dtype))
+                elif cfg.mla is not None:
+                    items.append(mla.mla_cache_init(cfg, batch, max_len, dtype))
+                else:
+                    items.append(attention.cache_init(cfg, batch, max_len, dtype))
+            return tuple(items)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one(i) for i in range(count)]
+        )
+        out.append(stacked)
+    return out

@@ -1,0 +1,3 @@
+from .api import constrain, default_rules, named_sharding, sharding_context, spec_for
+
+__all__ = ["constrain", "default_rules", "named_sharding", "sharding_context", "spec_for"]

@@ -1,0 +1,112 @@
+"""Logical-axis sharding context.
+
+Models annotate intermediate activations with *logical* axis names via
+``constrain(x, "batch", None, "tp")``. A global context (set by the launchers
+around jit tracing) maps logical names to mesh axes; with no context set (CPU
+tests, smoke runs) the calls are no-ops so the model code is mesh-agnostic.
+
+Logical names:
+  batch   — global batch dim            (default: ("pod", "data") when present)
+  seq     — sequence dim                (default: unsharded; "model" for
+                                         long-context decode = sequence parallel)
+  tp      — tensor-parallel dim: heads / d_ff / vocab / experts ("model")
+  fsdp    — weight fully-sharded dim    (("pod","data") for the giant archs)
+  expert  — MoE expert dim              ("model")
+  cap     — MoE capacity/slot dim       (follows batch)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Tuple[str, ...]]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def default_rules(mesh: Mesh, *, seq_shard: bool = False, fsdp: bool = False):
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    rules: Dict[str, Tuple[str, ...]] = {
+        "batch": batch,
+        "tp": ("model",),
+        "expert": ("model",),
+        "cap": batch,
+        "seq": ("model",) if seq_shard else (),
+        "kvseq": ("model",) if seq_shard else (),
+        "fsdp": batch if fsdp else (),
+    }
+    return rules
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None, **kw):
+    prev_mesh, prev_rules = _mesh(), _rules()
+    _state.mesh = mesh
+    _state.rules = rules if rules is not None else default_rules(mesh, **kw)
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def spec_for(*logical_names) -> P:
+    """Resolve logical names to a PartitionSpec; a mesh axis may appear at most
+    once per spec — earlier dims win (e.g. seq-parallel + vocab-TP both map to
+    "model": the seq dim keeps it, the vocab dim is left unsharded)."""
+    rules = _rules() or {}
+    dims = []
+    used: set = set()
+    for n in logical_names:
+        if n is None:
+            dims.append(None)
+            continue
+        ax = tuple(a for a in rules.get(n, ()) if a not in used)
+        used.update(ax)
+        if len(ax) == 0:
+            dims.append(None)
+        elif len(ax) == 1:
+            dims.append(ax[0])
+        else:
+            dims.append(tuple(ax))
+    return P(*dims)
+
+
+def constrain(x: jax.Array, *logical_names):
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    if len(logical_names) != x.ndim:
+        raise ValueError(f"{len(logical_names)} names for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_for(*logical_names)))
+
+
+def logical_axis_size(name: str) -> int:
+    """Product of mesh-axis sizes a logical name maps to (1 without a mesh)."""
+    mesh = _mesh()
+    rules = _rules()
+    if mesh is None or rules is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for ax in rules.get(name, ()):
+        n *= sizes.get(ax, 1)
+    return n
+
+
+def named_sharding(*logical_names) -> Optional[NamedSharding]:
+    mesh = _mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(*logical_names))

@@ -1,0 +1,162 @@
+"""Parameter / activation / cache partition-spec rules.
+
+``param_specs`` walks a params pytree (arrays or ShapeDtypeStructs) and assigns
+a PartitionSpec per leaf from its key path + rank:
+
+  * TP ("model" axis) on heads / d_ff / vocab / expert dims,
+  * optional FSDP (("pod","data")) on the complementary dim — used by the
+    >=300B archs so param + Adam state fit per-chip HBM (ZeRO-ish),
+  * stacked-layer leading axes (scan) are never sharded.
+
+``cache_specs`` shards KV caches: batch over data; kv-heads over model when
+divisible, otherwise the cache SEQUENCE dim goes over model (flash-decoding
+style split-K — the GQA small-kv and batch=1 long-context cases).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+# leaf-name -> logical spec of the trailing (non-stack) dims
+_MATMUL_IN = {"wq", "wk", "wv", "wi", "wg", "shared_wi", "shared_wg",
+              "wq_a", "wq_b", "wkv_b", "in_proj", "proj"}
+_MATMUL_OUT = {"wo", "out_proj", "shared_wo"}
+_EXPERT_IN = {"wi", "wg"}
+_EXPERT_OUT = {"wo"}
+
+
+def _key_name(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _logical_for_leaf(path_names, shape) -> Tuple:
+    name = path_names[-1]
+    stacked = int(path_names[0] in ("segments", "encoder"))
+    rank = len(shape) - stacked
+    if name == "embed":
+        out = ("tp", "fsdp")
+    elif name == "unembed":
+        out = ("fsdp", "tp")
+    elif name == "router":
+        out = ("fsdp", None)
+    elif name == "wkv_a":
+        out = ("fsdp", None)
+    elif name == "conv_w":
+        out = (None, "tp")
+    elif name == "conv_b":
+        out = ("tp",)
+    elif name in _EXPERT_IN and rank == 3:      # (E, D, F) routed experts
+        out = ("expert", "fsdp", "expert_ff")   # expert_ff used when E % axis != 0
+    elif name in _EXPERT_OUT and rank == 3:     # (E, F, D)
+        out = ("expert", "expert_ff", "fsdp")
+    elif name in _MATMUL_IN and rank == 2:
+        out = ("fsdp", "tp")
+    elif name in _MATMUL_OUT and rank == 2:
+        out = ("tp", "fsdp")
+    else:
+        out = (None,) * rank                    # norms, biases, scalars
+    return (None,) * stacked + tuple(out)
+
+
+def _resolve(logical: Tuple, rules) -> P:
+    dims = []
+    for n in logical:
+        if n is None:
+            dims.append(None)
+        else:
+            ax = rules.get(n, ())
+            dims.append(None if not ax else (ax[0] if len(ax) == 1 else tuple(ax)))
+    return P(*dims)
+
+
+def param_specs(params: Any, rules, axis_sizes=None) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays or ShapeDtypeStructs).
+
+    With ``axis_sizes`` (mesh axis name -> size), any sharded dim that does not
+    divide its axes falls back to replicated (e.g. mamba2's vocab 50280 or
+    seamless's 256206 on a 16-way model axis — pjit requires divisibility)."""
+
+    def leaf(path, x):
+        names = [_key_name(p) for p in path]
+        spec = _resolve(_logical_for_leaf(names, x.shape), rules)
+        if axis_sizes:
+            dims = []
+            for dim, ax in zip(x.shape, spec):
+                if ax is None:
+                    dims.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= axis_sizes.get(a, 1)
+                dims.append(ax if dim % n == 0 else None)
+            spec = P(*dims)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def opt_state_specs(pspecs, rules) -> Any:
+    """AdamState specs: step replicated, m/v mirror the params (already FSDP/TP
+    sharded — that IS the ZeRO-1 layout when fsdp is on)."""
+    from repro.training import AdamState
+
+    return AdamState(step=P(), m=pspecs, v=jax.tree_util.tree_map(lambda s: s, pspecs))
+
+
+def batch_specs(cfg: ModelConfig, rules) -> Any:
+    from repro.training import Batch
+
+    bspec = rules.get("batch", ())
+    b = None if not bspec else (bspec[0] if len(bspec) == 1 else tuple(bspec))
+    tok = P(b, None)
+    return Batch(
+        tokens=tok,
+        loss_mask=tok,
+        vision_embeds=(P(b, None, None) if cfg.frontend == "vision" else None),
+        encoder_embeds=(P(b, None, None) if cfg.frontend == "audio" else None),
+    )
+
+
+def cache_leaf_specs(cfg: ModelConfig, rules, model_axis_size: int):
+    """Returns a function mapping a cache leaf (by path) to PartitionSpec."""
+    bspec = rules.get("batch", ())
+    b = None if not bspec else (bspec[0] if len(bspec) == 1 else tuple(bspec))
+    kvs = rules.get("kvseq", ())
+    seq_axes = None if not kvs else (kvs[0] if len(kvs) == 1 else tuple(kvs))
+    seq_sharded = bool(kvs)
+    kv_div = cfg.num_kv_heads > 0 and cfg.num_kv_heads % model_axis_size == 0
+
+    def leaf(path, x):
+        names = [_key_name(p) for p in path]
+        name = names[-1]
+        if name in ("k", "v"):          # (count, B, S, KV, Dh)
+            if seq_sharded:
+                return P(None, b, seq_axes, None, None)
+            if kv_div:
+                return P(None, b, None, "model", None)
+            return P(None, b, None, None, None)
+        if name in ("c_kv", "k_rope"):  # (count, B, S, r)
+            return P(None, b, seq_axes if seq_sharded else None, None)
+        if name == "conv":              # (count, B, K, conv_dim)
+            return P(None, b, None, "model")
+        if name == "state":             # (count, B, H, hd, ds)
+            return P(None, b, "model", None, None)
+        if name == "length":            # (count, B)
+            return P(None, b)
+        return P(*([None] * x.ndim))
+
+    return leaf
+
+
+def cache_specs(cfg: ModelConfig, caches: Any, rules, model_axis_size: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        cache_leaf_specs(cfg, rules, model_axis_size), caches
+    )

@@ -1,0 +1,3 @@
+from .bytes import ByteTokenizer, default_tokenizer
+
+__all__ = ["ByteTokenizer", "default_tokenizer"]

@@ -1,0 +1,87 @@
+"""Byte-level tokenizer with deterministic multi-byte merges.
+
+Tokens 0..255 are raw bytes. Special tokens follow, then optional multi-byte
+"merge" tokens (common digraphs/trigraphs and task-specific strings) so that the
+token-level DFA genuinely spans multiple characters per token, as with real BPE
+vocabularies in the paper. Greedy longest-match encoding (deterministic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+DEFAULT_MERGES = [
+    "  ", "\n\n", "the", "in", "er", "on", "an", " t", " a", "re",
+    "is", "ar", "or", "0.", "1.", "==", "->", '":', '",', '{"',
+    '"}', "((", "))", " + ", " - ", " * ", " / ", "<<", ">>",
+]
+
+
+@dataclasses.dataclass
+class ByteTokenizer:
+    merges: Sequence[str] = ()
+    pad_to_vocab: Optional[int] = None  # pad vocab with unused tokens up to size
+
+    def __post_init__(self):
+        self.mask_token_id = 256
+        self.eos_token_id = 257
+        self.pad_token_id = 258
+        self.bos_token_id = 259
+        specials = 4
+        self._merge_bytes: List[bytes] = [m.encode() for m in self.merges]
+        self.token_bytes: List[Optional[bytes]] = (
+            [bytes([i]) for i in range(256)]
+            + [None] * specials
+            + self._merge_bytes
+        )
+        if self.pad_to_vocab is not None:
+            while len(self.token_bytes) < self.pad_to_vocab:
+                self.token_bytes.append(None)
+        self.vocab_size = len(self.token_bytes)
+        # longest-match table
+        self._by_prefix: Dict[int, List[tuple]] = {}
+        for tid, tb in enumerate(self.token_bytes):
+            if tb and len(tb) > 1:
+                self._by_prefix.setdefault(tb[0], []).append((tb, tid))
+        for lst in self._by_prefix.values():
+            lst.sort(key=lambda x: -len(x[0]))
+
+    @property
+    def special_token_ids(self):
+        return (self.mask_token_id, self.eos_token_id, self.pad_token_id, self.bos_token_id)
+
+    def encode(self, text: str) -> List[int]:
+        data = text.encode()
+        out: List[int] = []
+        i = 0
+        while i < len(data):
+            hit = None
+            for tb, tid in self._by_prefix.get(data[i], ()):
+                if data[i : i + len(tb)] == tb:
+                    hit = (tb, tid)
+                    break
+            if hit:
+                out.append(hit[1])
+                i += len(hit[0])
+            else:
+                out.append(data[i])
+                i += 1
+        return out
+
+    def decode(self, ids: Sequence[int]) -> str:
+        parts: List[bytes] = []
+        for t in ids:
+            t = int(t)
+            if t == self.mask_token_id:
+                parts.append(b"\xe2\x8a\xa5")  # ⊥
+            elif t in (self.eos_token_id, self.pad_token_id, self.bos_token_id):
+                continue
+            else:
+                tb = self.token_bytes[t]
+                if tb:
+                    parts.append(tb)
+        return b"".join(parts).decode(errors="replace")
+
+
+def default_tokenizer(vocab_size: Optional[int] = None) -> ByteTokenizer:
+    return ByteTokenizer(merges=DEFAULT_MERGES, pad_to_vocab=vocab_size)

@@ -1,0 +1,17 @@
+from .checkpoint import load_meta, restore, save
+from .loop import (
+    Batch,
+    TrainState,
+    diffusion_loss,
+    diffusion_mask,
+    init_train_state,
+    make_positions,
+    make_train_step,
+)
+from .optim import AdamState, adamw_update, cosine_lr, init_adam
+
+__all__ = [
+    "Batch", "TrainState", "diffusion_loss", "diffusion_mask", "init_train_state",
+    "make_positions", "make_train_step", "AdamState", "adamw_update", "cosine_lr",
+    "init_adam", "save", "restore", "load_meta",
+]

@@ -1,0 +1,61 @@
+"""Minimal pytree checkpointer (npz-based; orbax is unavailable offline).
+
+Flattens a pytree with jax.tree_util key-paths as archive keys; restores into
+the same treedef. Suitable for the example-scale models; large-scale runs would
+swap in a sharded writer behind the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_name(p) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_name(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree with matching shapes)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    flat_keys = []
+    for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
+        flat_keys.append("/".join(_key_name(q) for q in p))
+    leaves = []
+    for key, ref in zip(flat_keys, leaves_like):
+        arr = data[key]
+        if arr.shape != ref.shape:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(leaves)
+
+
+def load_meta(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

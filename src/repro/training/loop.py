@@ -1,0 +1,116 @@
+"""Masked-diffusion training objective (LLaDA, arXiv:2502.09992) + train step.
+
+Forward process: sample a masking ratio t ~ U(min, max) per sequence, mask that
+fraction of tokens with ⊥; the model predicts the original tokens at masked
+positions. Loss = CE on masked positions / ratio (the LLaDA 1/t weighting),
+plus MoE load-balance aux loss and optional MTP loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import ModelInputs, forward, mtp_logits
+from repro.sharding.api import constrain
+
+from .optim import AdamState, adamw_update, init_adam
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    rng: jax.Array
+
+
+class Batch(NamedTuple):
+    tokens: jax.Array                       # (B, S) int32 clean tokens
+    loss_mask: jax.Array                    # (B, S) bool — positions eligible for loss
+    vision_embeds: Optional[jax.Array] = None
+    encoder_embeds: Optional[jax.Array] = None
+
+
+def make_positions(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.rope_type == "mrope":
+        base = jnp.arange(seq, dtype=jnp.int32)[None]
+        return jnp.broadcast_to(base[None], (3, batch, seq))
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+
+
+def diffusion_mask(rng, tokens, mask_token_id: int, tcfg: TrainConfig):
+    """LLaDA forward process: per-sequence ratio t, Bernoulli(t) masking."""
+    b, s = tokens.shape
+    r_rng, m_rng = jax.random.split(rng)
+    ratio = jax.random.uniform(
+        r_rng, (b, 1), minval=tcfg.mask_ratio_min, maxval=tcfg.mask_ratio_max
+    )
+    masked = jax.random.uniform(m_rng, (b, s)) < ratio
+    noised = jnp.where(masked, mask_token_id, tokens)
+    return noised, masked, ratio
+
+
+def diffusion_loss(
+    params, cfg: ModelConfig, tcfg: TrainConfig, batch: Batch, rng, mask_token_id: int,
+    *, remat: bool = False,
+):
+    noised, masked, ratio = diffusion_mask(rng, batch.tokens, mask_token_id, tcfg)
+    masked = masked & batch.loss_mask
+    inputs = ModelInputs(
+        tokens=noised,
+        positions=make_positions(cfg, *batch.tokens.shape),
+        vision_embeds=batch.vision_embeds,
+        encoder_embeds=batch.encoder_embeds,
+    )
+    logits, _, aux, hidden = forward(params, cfg, inputs, remat=remat)
+    logits = logits.astype(jnp.float32)
+    # CE via gathered-logit minus logsumexp: never materializes a second
+    # (B, S, V) log-softmax tensor (memory roofline matters at vocab 129k-256k)
+    tok_logit = jnp.take_along_axis(logits, batch.tokens[..., None], axis=-1)[..., 0]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tok_lp = tok_logit - lse
+    weight = masked.astype(jnp.float32) / jnp.maximum(ratio, 1e-3)   # LLaDA 1/t
+    denom = jnp.maximum(masked.sum(), 1)
+    ce = -(tok_lp * weight).sum() / denom
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux, "masked_frac": masked.mean()}
+    if cfg.mtp:
+        ml = mtp_logits(params, cfg, hidden, inputs).astype(jnp.float32)
+        next_tok = jnp.concatenate([batch.tokens[:, 1:], batch.tokens[:, -1:]], axis=1)
+        mtp_lp = (
+            jnp.take_along_axis(ml, next_tok[..., None], axis=-1)[..., 0]
+            - jax.nn.logsumexp(ml, axis=-1)
+        )
+        mtp_loss = -(mtp_lp * weight).sum() / denom * 0.3
+        loss = loss + mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mask_token_id: int):
+    """Returns train_step(state, batch) -> (state, metrics) — the function the
+    launchers jit with in/out shardings."""
+
+    def train_step(state: TrainState, batch: Batch):
+        rng, sub = jax.random.split(state.rng)
+        grad_fn = jax.value_and_grad(diffusion_loss, has_aux=True)
+        (loss, metrics), grads = grad_fn(
+            state.params, cfg, tcfg, batch, sub, mask_token_id, remat=tcfg.remat
+        )
+        new_params, new_opt, opt_metrics = adamw_update(state.params, grads, state.opt, tcfg)
+        metrics.update(opt_metrics)
+        return TrainState(params=new_params, opt=new_opt, rng=rng), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    from repro.models import init_model
+
+    pkey, rkey = jax.random.split(key)
+    params = init_model(pkey, cfg)
+    return TrainState(params=params, opt=init_adam(params), rng=rkey)

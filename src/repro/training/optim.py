@@ -1,0 +1,77 @@
+"""AdamW + cosine schedule + global-norm clipping, from scratch (no optax).
+
+Optimizer state is a pytree mirroring params; with ``zero1`` the launcher
+shards m/v over the full mesh (ZeRO-1 style) via the partition-spec helpers in
+``repro/sharding/rules.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_adam(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                     v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def cosine_lr(cfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(1, cfg.warmup_steps), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(
+    params, grads, state: AdamState, cfg: TrainConfig
+) -> Tuple[Any, AdamState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2, eps = cfg.beta1, cfg.beta2, 1e-8
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v), {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,90 @@
+"""Roofline model + HLO analyzer edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import HloAnalysis, analyze_hlo_text
+from repro.analysis.roofline import analyze, model_flops_for, parse_collective_bytes
+from repro.config import V5E_HBM_BW, V5E_PEAK_FLOPS_BF16
+from repro.configs import get_config
+
+
+def test_roofline_terms_math():
+    hlo = """
+ENTRY %main (p: f32[1]) -> f32[1] {
+  ROOT %p = f32[1]{0} parameter(0)
+}
+"""
+    r = analyze({"flops": 0.0}, hlo, chips=256)
+    assert r.compute_s == 0.0 and r.bottleneck in ("compute", "memory", "collective")
+
+
+def test_model_flops_active_params_moe():
+    dsv3 = get_config("deepseek-v3-671b")
+    total = dsv3.total_params()
+    active = dsv3.active_params()
+    # DeepSeek-V3: ~671B total, ~37B active
+    assert 5.5e11 < total < 8e11, total
+    assert 3e10 < active < 5e10, active
+    assert model_flops_for(dsv3, "train", 1000) == pytest.approx(6 * active * 1000)
+    assert model_flops_for(dsv3, "decode", 10) == pytest.approx(2 * active * 10)
+
+
+def test_param_counts_sane():
+    checks = {
+        "starcoder2-7b": (6e9, 9e9),
+        "mixtral-8x7b": (4.2e10, 5.2e10),
+        "nemotron-4-340b": (3.0e11, 3.9e11),
+        "qwen3-0.6b": (4e8, 9e8),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "jamba-v0.1-52b": (4.5e10, 6.0e10),
+    }
+    for arch, (lo, hi) in checks.items():
+        n = get_config(arch).total_params()
+        assert lo < n < hi, (arch, n)
+
+
+def test_collective_parse_types():
+    text = """
+ENTRY %main (p: bf16[64,64]) -> bf16[64,64] {
+  %p = bf16[64,64]{1,0} parameter(0)
+  %ag = bf16[64,1024]{1,0} all-gather(%p), dimensions={1}
+  %rs = bf16[4,64]{1,0} reduce-scatter(%p), dimensions={0}, to_apply=%add
+  %a2a = bf16[64,64]{1,0} all-to-all(%p), dimensions={0}
+  %cp = bf16[64,64]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+  ROOT %ar = bf16[64,64]{1,0} all-reduce(%p), to_apply=%add
+}
+"""
+    t = analyze_hlo_text(text)
+    assert t.collective["all-gather"] == 64 * 1024 * 2
+    assert t.collective["reduce-scatter"] == 4 * 64 * 2
+    assert t.collective["all-to-all"] == 64 * 64 * 2
+    assert t.collective["collective-permute"] == 64 * 64 * 2
+    assert t.collective["all-reduce"] == 64 * 64 * 2
+
+
+def test_async_collectives_counted_once():
+    text = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %s = f32[16]{0} all-gather-start(%p), dimensions={0}
+  ROOT %d = f32[16]{0} all-gather-done(%s)
+}
+"""
+    t = analyze_hlo_text(text)
+    assert t.collective["all-gather"] == 16 * 4  # start only, done skipped
+
+
+def test_fusion_slice_aware_traffic():
+    """A fusion parameter consumed only via dynamic-slice counts slice bytes."""
+    def f(ws, i):
+        w = jax.lax.dynamic_slice_in_dim(ws, i, 1, 0)[0]
+        return jnp.tanh(w) * 2.0
+
+    ws = jax.ShapeDtypeStruct((100, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(ws, jax.ShapeDtypeStruct((), jnp.int32)).compile().as_text()
+    t = analyze_hlo_text(txt)
+    full = 100 * 64 * 64 * 4
+    # traffic must reflect the 1/100 slice, not the whole stacked array
+    assert t.traffic < full, (t.traffic, full)

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced config (<=2 layers / one period, d_model <= 512, <= 4 experts) runs one
+forward AND one train step on CPU with shape + finiteness asserts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import ModelInputs, forward, init_model
+from repro.training import Batch, init_train_state, make_positions, make_train_step
+
+MASK_ID = 3  # reduced-vocab mask token id for smoke runs
+
+
+def make_batch(cfg, rng, b=2, s=32):
+    tokens = jnp.asarray(rng.integers(4, cfg.vocab_size, size=(b, s)), jnp.int32)
+    loss_mask = jnp.ones((b, s), bool)
+    vis = enc = None
+    if cfg.frontend == "vision":
+        p = cfg.num_frontend_tokens
+        vis = jnp.asarray(rng.normal(size=(b, p, cfg.d_model)), jnp.float32)
+        loss_mask = loss_mask.at[:, :p].set(False)
+    if cfg.frontend == "audio":
+        enc = jnp.asarray(rng.normal(size=(b, cfg.num_frontend_tokens, cfg.d_model)), jnp.float32)
+    return Batch(tokens=tokens, loss_mask=loss_mask, vision_embeds=vis, encoder_embeds=enc)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch, rng):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 8 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, rng)
+    b, s = batch.tokens.shape
+    inputs = ModelInputs(
+        tokens=batch.tokens,
+        positions=make_positions(cfg, b, s),
+        vision_embeds=batch.vision_embeds,
+        encoder_embeds=batch.encoder_embeds,
+    )
+    logits, _, aux, _ = forward(params, cfg, inputs)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch, rng):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=2, remat=False)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(cfg, tcfg, MASK_ID))
+    batch = make_batch(cfg, rng)
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params changed
+    p0 = jax.tree_util.tree_leaves(state.params)[0]
+    p1 = jax.tree_util.tree_leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(p0, np.float32), np.asarray(p1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_consistency(arch):
+    """Full-scale configs match the assignment table exactly."""
+    cfg = get_config(arch)
+    table = {
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128, vocab_size=129280),
+        "starcoder2-7b": dict(num_layers=32, d_model=4608, num_heads=36, num_kv_heads=4, d_ff=18432, vocab_size=49152),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, vocab_size=32000),
+        "nemotron-4-340b": dict(num_layers=96, d_model=18432, num_heads=96, num_kv_heads=8, d_ff=73728, vocab_size=256000),
+        "moonshot-v1-16b-a3b": dict(num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16, vocab_size=163840),
+        "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=65536),
+        "qwen2-vl-7b": dict(num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "seamless-m4t-medium": dict(num_layers=12, d_model=1024, num_heads=16, num_kv_heads=16, d_ff=4096, vocab_size=256206),
+        "qwen3-0.6b": dict(num_layers=28, d_model=1024, num_heads=16, num_kv_heads=8, d_ff=3072, vocab_size=151936),
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, vocab_size=50280),
+        "llada-repro": dict(num_layers=32, d_model=4096),
+    }
+    for k, v in table[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    if arch == "deepseek-v3-671b":
+        assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8 and cfg.moe.d_ff_expert == 2048
+        assert cfg.mla is not None and cfg.mtp
+    if arch == "mixtral-8x7b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2 and cfg.sliding_window
+    if arch == "moonshot-v1-16b-a3b":
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6 and cfg.moe.d_ff_expert == 1408
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2 and cfg.hybrid_attn_period == 8
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm.d_state == 128 and cfg.arch_type == "ssm"
+    if arch == "qwen3-0.6b":
+        assert cfg.use_qk_norm
+    if arch == "qwen2-vl-7b":
+        assert cfg.rope_type == "mrope" and cfg.frontend == "vision"
+    if arch == "seamless-m4t-medium":
+        assert cfg.encoder_layers == 12 and cfg.frontend == "audio"

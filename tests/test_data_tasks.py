@@ -1,0 +1,74 @@
+"""Synthetic task generators: regex-conformance of generated answers, expression
+equivalence checker sanity, JSON validators (hypothesis-driven)."""
+import random
+import re
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile_pattern
+from repro.data import synthetic
+from repro.tokenizer import default_tokenizer
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_math_answers_match_regex(seed):
+    rng = random.Random(seed)
+    ex = synthetic.gen_math_example(rng)
+    assert re.fullmatch(synthetic.MATH_REGEX, ex.answer), ex.answer
+    d = compile_pattern(synthetic.MATH_REGEX)
+    assert d.accepts(ex.answer.encode())
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_json_answers_match_schema_regex(seed):
+    rng = random.Random(seed)
+    ex = synthetic.gen_json_example(rng)
+    fields, _ = synthetic.JSON_SCHEMAS[ex.meta["schema"]]
+    pat = synthetic.json_schema_regex(fields)
+    assert re.fullmatch(pat, ex.answer), (pat, ex.answer)
+    parsed, ok = synthetic.validate_json_answer(ex.answer, ex.meta["schema"])
+    assert parsed and ok
+
+
+def test_expr_equivalent():
+    assert synthetic.expr_equivalent("a + b", "b + a")
+    assert synthetic.expr_equivalent("a * b - c", "b * a - c")
+    assert not synthetic.expr_equivalent("a + b", "a - b")
+    assert not synthetic.expr_equivalent("a", "b")
+    assert not synthetic.expr_equivalent("a +", "a")  # unparsable
+
+
+def test_extract_math_expr():
+    assert synthetic.extract_math_expr("foo <<a + b>> bar") == "a + b"
+    assert synthetic.extract_math_expr("<<a>> then <<b - c>>") == "b - c"
+    assert synthetic.extract_math_expr("no expr") is None
+    assert synthetic.extract_math_expr("<<unclosed") is None
+
+
+def test_build_batch_masks_answer_span():
+    tok = default_tokenizer()
+    rng = random.Random(0)
+    exs = [synthetic.gen_math_example(rng) for _ in range(3)]
+    toks, mask, plens = synthetic.build_batch(exs, tok, 48)
+    assert toks.shape == (3, 48) and mask.shape == (3, 48)
+    for i, ex in enumerate(exs):
+        # answer tokens fall inside the loss mask
+        span = tok.decode(toks[i][mask[i]].tolist())
+        assert ex.answer.replace(" ", "") in span.replace(" ", "")
+        assert not mask[i, : max(0, plens[i] - 1)].any()
+
+
+def test_tokenizer_roundtrip():
+    tok = default_tokenizer()
+    for s in ["hello world", "<<a + b>>", '{"name": "sun", "id": 42}', "x\ny\tz"]:
+        assert tok.decode(tok.encode(s)) == s
+
+
+def test_tokenizer_multibyte_merges():
+    tok = default_tokenizer()
+    ids = tok.encode("<<a + b>>")
+    # must use the "<<" / " + " / ">>" merge tokens (shorter than raw bytes)
+    assert len(ids) < len("<<a + b>>")

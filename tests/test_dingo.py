@@ -1,0 +1,166 @@
+"""DINGO DP: correctness (Prop 4.1) + optimality (Prop 4.2) vs brute force,
+semi-AR threading (Appendix D), and behaviour with committed/masked positions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NEG_INF,
+    brute_force_decode,
+    build_token_dfa,
+    compile_pattern,
+    dingo_decode,
+    tables_from_tokendfa,
+)
+from repro.core.decoders import w0_from_state
+
+TINY_VOCAB = [b"a", b"b", b"ab", b"+", b"(", b")", None]
+MASK = 6
+PATTERNS = [r"(a|b)+", r"a(\+a)*", r"\((a|b)+\)", r"ab*", r"(ab|ba)+", r"\(\)(\(\))*"]
+
+
+def setup(pat):
+    td = build_token_dfa(compile_pattern(pat), TINY_VOCAB, mask_token_id=MASK)
+    return td, tables_from_tokendfa(td)
+
+
+def rand_logp(rng, d, v=7):
+    return np.log(rng.dirichlet(np.ones(v), size=d) + 1e-9).astype(np.float32)
+
+
+@pytest.mark.parametrize("pat", PATTERNS)
+def test_optimality_vs_brute_force(pat):
+    rng = np.random.default_rng(hash(pat) % 2**31)
+    td, tables = setup(pat)
+    for _ in range(15):
+        d = int(rng.integers(1, 5))
+        logp = rand_logp(rng, d)
+        res = dingo_decode(jnp.asarray(logp), tables)
+        bf, bf_lp = brute_force_decode(logp, td)
+        if bf is None:
+            assert not bool(res.valid)
+        else:
+            assert bool(res.valid)
+            assert float(res.logprob) == pytest.approx(bf_lp, abs=1e-4)
+
+
+@pytest.mark.parametrize("pat", PATTERNS)
+def test_correctness_output_is_valid_prefix(pat):
+    """Prop 4.1: whenever valid, the decoded string's substitution set intersects
+    L_P(R) — check by running the NFA-with-mask semantics."""
+    rng = np.random.default_rng(hash(pat) % 2**31 + 1)
+    td, tables = setup(pat)
+    for _ in range(25):
+        d = int(rng.integers(1, 6))
+        logp = rand_logp(rng, d)
+        res = dingo_decode(jnp.asarray(logp), tables)
+        if not bool(res.valid):
+            continue
+        states = {td.start}
+        for t in res.tokens.tolist():
+            if t == MASK:
+                nxt = set()
+                for q in states:
+                    nxt |= set(np.where(td.mask_reach[q])[0].tolist())
+            else:
+                nxt = {int(td.trans[q, t]) for q in states} - {td.dead}
+            states = nxt
+            assert states, "path hit dead end"
+        assert any(td.live[q] for q in states)
+
+
+def test_committed_positions_are_respected():
+    td, tables = setup(r"(a|b)+")
+    d = 4
+    logp = np.full((d, 7), NEG_INF, np.float32)
+    logp[0, 1] = 0.0                      # committed "b"
+    logp[1] = np.log(np.ones(7) / 7)      # free
+    logp[2, MASK] = 0.0                   # remasked
+    logp[3] = np.log(np.ones(7) / 7)      # free
+    res = dingo_decode(jnp.asarray(logp), tables)
+    assert bool(res.valid)
+    toks = res.tokens.tolist()
+    assert toks[0] == 1
+    assert toks[2] == MASK
+
+
+def test_invalid_when_no_completion():
+    # pattern "( )" but force both positions to ")" — no valid string
+    td, tables = setup(r"\(\)")
+    logp = np.full((2, 7), NEG_INF, np.float32)
+    logp[0, 5] = 0.0
+    logp[1, 5] = 0.0
+    res = dingo_decode(jnp.asarray(logp), tables)
+    assert not bool(res.valid)
+
+
+def test_semi_ar_state_threading():
+    """Appendix D: decoding two blocks with carried DFA state equals decoding the
+    concatenated block when the first block is fully committed."""
+    td, tables = setup(r"\((a|b)+\)")
+    rng = np.random.default_rng(3)
+    logp1 = rand_logp(rng, 2)
+    res1 = dingo_decode(jnp.asarray(logp1), tables)
+    assert bool(res1.valid)
+    # commit block 1 (no masks in this configuration? ensure none)
+    toks1 = res1.tokens.tolist()
+    if MASK in toks1:
+        pytest.skip("mask in block-1 optimum; threading applies to committed blocks")
+    q_carry = td.run(toks1)
+    logp2 = rand_logp(rng, 2)
+    res2 = dingo_decode(jnp.asarray(logp2), tables, w0_from_state(tables, jnp.asarray(q_carry)))
+    # brute force on block 2 starting from q_carry
+    bf, bf_lp = brute_force_decode(logp2, td, w0_state=q_carry)
+    if bf is None:
+        assert not bool(res2.valid)
+    else:
+        assert bool(res2.valid)
+        assert float(res2.logprob) == pytest.approx(bf_lp, abs=1e-4)
+
+
+@given(seed=st.integers(0, 10_000), d=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_hypothesis_optimality(seed, d):
+    rng = np.random.default_rng(seed)
+    pat = PATTERNS[seed % len(PATTERNS)]
+    td, tables = setup(pat)
+    logp = rand_logp(rng, d)
+    res = dingo_decode(jnp.asarray(logp), tables)
+    bf, bf_lp = brute_force_decode(logp, td)
+    if bf is None:
+        assert not bool(res.valid)
+    else:
+        assert bool(res.valid)
+        assert float(res.logprob) == pytest.approx(bf_lp, abs=1e-4)
+
+
+def test_pad_tables_equivalent():
+    from repro.core import pad_tables
+
+    td, tables = setup(r"(ab|ba)+")
+    padded = pad_tables(td, td.num_states + 5, td.num_classes + 3)
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        logp = rand_logp(rng, 3)
+        a = dingo_decode(jnp.asarray(logp), tables)
+        b = dingo_decode(jnp.asarray(logp), padded)
+        assert bool(a.valid) == bool(b.valid)
+        if bool(a.valid):
+            assert float(a.logprob) == pytest.approx(float(b.logprob), abs=1e-5)
+
+
+def test_parallel_transitions_algorithm3_equivalent():
+    """Paper Algorithm 3 (Appendix C): parallelizing the transition stage over
+    d must be output-identical to the sequential Algorithm 1."""
+    td, tables = setup(r"\((a|b)+\)")
+    rng = np.random.default_rng(21)
+    for _ in range(10):
+        d = int(rng.integers(1, 6))
+        logp = rand_logp(rng, d)
+        a = dingo_decode(jnp.asarray(logp), tables)
+        b = dingo_decode(jnp.asarray(logp), tables, parallel_transitions=True)
+        assert bool(a.valid) == bool(b.valid)
+        if bool(a.valid):
+            np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+            assert float(a.logprob) == pytest.approx(float(b.logprob), abs=1e-5)

@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("v", [7, 128, 1000, 4096, 5001])
+@pytest.mark.parametrize("c", [1, 5, 130, 257])
+def test_class_max_shapes(v, c, rng):
+    logits = jnp.asarray(rng.normal(size=(v,)).astype(np.float32))
+    cid = jnp.asarray(rng.integers(0, c, size=v).astype(np.int32))
+    cm, ca = ops.class_max(logits, cid, c)
+    cm2, ca2 = ref.class_max_ref(logits, cid, c)
+    np.testing.assert_allclose(cm, cm2, rtol=1e-6)
+    np.testing.assert_array_equal(ca, ca2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_class_max_dtypes(dtype, rng):
+    v, c = 513, 19
+    logits = jnp.asarray(rng.normal(size=(v,))).astype(dtype)
+    cid = jnp.asarray(rng.integers(0, c, size=v).astype(np.int32))
+    cm, _ = ops.class_max(logits, cid, c)
+    cm2, _ = ref.class_max_ref(logits.astype(jnp.float32), cid, c)
+    np.testing.assert_allclose(cm, cm2, rtol=1e-2, atol=1e-2)
+
+
+def test_class_max_empty_classes(rng):
+    # classes with no tokens must come back as -inf-ish and argmax 0
+    v, c = 64, 10
+    logits = jnp.asarray(rng.normal(size=(v,)).astype(np.float32))
+    cid = jnp.zeros(v, jnp.int32)  # everything in class 0
+    cm, ca = ops.class_max(logits, cid, c)
+    assert float(cm[0]) == pytest.approx(float(logits.max()), rel=1e-6)
+    assert (np.asarray(cm[1:]) <= -1e29).all()
+    assert (np.asarray(ca[1:]) == 0).all()
+
+
+@pytest.mark.parametrize("q", [2, 8, 40, 129, 300])
+def test_maxplus_shapes(q, rng):
+    w = jnp.asarray(rng.normal(size=(q,)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(q, q)).astype(np.float32))
+    tok = jnp.asarray(rng.integers(0, 999, size=(q, q)).astype(np.int32))
+    got = ops.maxplus_dp(w, e, tok)
+    want = ref.maxplus_dp_ref(w, e, tok)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-6)
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_array_equal(got[2], want[2])
+
+
+def test_maxplus_neg_inf_rows(rng):
+    from repro.core.dingo import NEG_INF
+
+    q = 16
+    w = jnp.full((q,), NEG_INF)
+    e = jnp.asarray(rng.normal(size=(q, q)).astype(np.float32))
+    tok = jnp.zeros((q, q), jnp.int32)
+    wnew, _, _ = ops.maxplus_dp(w, e, tok)
+    assert (np.asarray(wnew) <= NEG_INF / 2).all()
+
+
+@pytest.mark.parametrize("d,v", [(1, 100), (5, 3000), (8, 2048), (13, 4097)])
+def test_softmax_stats_shapes(d, v, rng):
+    x = jnp.asarray(rng.normal(size=(d, v)).astype(np.float32) * 3)
+    maxp, ent, amax = ops.softmax_stats(x)
+    maxp2, ent2, amax2 = ref.softmax_stats_ref(x)
+    np.testing.assert_allclose(maxp, maxp2, rtol=1e-5)
+    np.testing.assert_allclose(ent, ent2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(amax, amax2)
+
+
+def test_softmax_stats_extreme_logits():
+    x = jnp.asarray(
+        np.array([[1000.0, -1000.0, 0.0, 3.0], [-50.0, -50.0, -50.0, -50.0]], np.float32)
+    )
+    maxp, ent, amax = ops.softmax_stats(x)
+    maxp2, ent2, amax2 = ref.softmax_stats_ref(x)
+    np.testing.assert_allclose(maxp, maxp2, rtol=1e-5)
+    np.testing.assert_allclose(ent, ent2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(amax, amax2)
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,dh,s", [(1, 4, 4, 64, 128), (2, 8, 2, 64, 700), (2, 16, 1, 128, 513)]
+)
+def test_decode_attention_shapes(b, h, kvh, dh, s, rng):
+    q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    got = ops.decode_attention(q, k, v, block_s=256)
+    want = ref.decode_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_lengths(rng):
+    b, h, kvh, dh, s = 2, 4, 2, 64, 300
+    q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
+    lengths = jnp.asarray([100, 300], jnp.int32)
+    got = ops.decode_attention(q, k, v, lengths, block_s=128)
+    want0 = ref.decode_attention_ref(q[:1], k[:1, :100], v[:1, :100])
+    want1 = ref.decode_attention_ref(q[1:], k[1:], v[1:])
+    np.testing.assert_allclose(got[:1], want0, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got[1:], want1, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_bf16(rng):
+    b, h, kvh, dh, s = 1, 4, 2, 64, 256
+    q = jnp.asarray(rng.normal(size=(b, h, dh))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, dh))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, dh))).astype(jnp.bfloat16)
+    got = ops.decode_attention(q, k, v, block_s=128).astype(jnp.float32)
+    want = ref.decode_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@given(seed=st.integers(0, 1000), v=st.integers(3, 600), c=st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_class_max_hypothesis(seed, v, c):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(v,)).astype(np.float32))
+    cid = jnp.asarray(rng.integers(0, c, size=v).astype(np.int32))
+    cm, ca = ops.class_max(logits, cid, c)
+    cm2, ca2 = ref.class_max_ref(logits, cid, c)
+    np.testing.assert_allclose(cm, cm2, rtol=1e-6)
+    np.testing.assert_array_equal(ca, ca2)
+
+
+def test_dingo_pallas_impl_matches_jnp(rng):
+    """End-to-end DP with kernel stages == pure-jnp DP."""
+    import jax.numpy as jnp
+
+    from repro.core import (
+        build_token_dfa,
+        compile_pattern,
+        dingo_decode,
+        tables_from_tokendfa,
+    )
+
+    vocab = [b"a", b"b", b"ab", b"+", b"(", b")", None]
+    td = build_token_dfa(compile_pattern(r"\((a|b)+\)"), vocab, mask_token_id=6)
+    tables = tables_from_tokendfa(td)
+    for _ in range(5):
+        logp = np.log(rng.dirichlet(np.ones(7), size=4) + 1e-9).astype(np.float32)
+        a = dingo_decode(jnp.asarray(logp), tables, impl="jnp")
+        b = dingo_decode(jnp.asarray(logp), tables, impl="pallas")
+        assert bool(a.valid) == bool(b.valid)
+        if bool(a.valid):
+            assert float(a.logprob) == pytest.approx(float(b.logprob), abs=1e-4)
+            np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))

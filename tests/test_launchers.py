@@ -1,0 +1,38 @@
+"""Launcher CLIs execute end-to-end on CPU at smoke scale (subprocesses)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m"] + args, capture_output=True, text=True,
+        env=env, timeout=timeout, cwd=REPO,
+    )
+
+
+def test_train_launcher_smoke():
+    r = _run(["repro.launch.train", "--arch", "qwen3-0.6b", "--smoke",
+              "--task", "math", "--steps", "3", "--batch", "2", "--seq", "32"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "loss" in r.stdout
+
+
+def test_serve_launcher_smoke():
+    r = _run(["repro.launch.serve", "--arch", "qwen3-0.6b", "--smoke",
+              "--decode", "dingo", "--batch", "1", "--gen-len", "8",
+              "--block", "8", "--steps", "2", "--regex", "(ab|ba)+"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "valid=True" in r.stdout
+
+
+def test_serve_launcher_rejects_stub_frontends():
+    r = _run(["repro.launch.serve", "--arch", "qwen2-vl-7b", "--smoke"])
+    assert r.returncode != 0
+    assert "stub" in (r.stdout + r.stderr)

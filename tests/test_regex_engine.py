@@ -1,0 +1,124 @@
+"""Regex engine: parser + NFA + DFA vs Python's `re` (ground truth)."""
+import re
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compile_pattern
+from repro.core import regex as rx
+
+PATTERNS = [
+    r"a*b",
+    r"(a|b)*abb",
+    r"[0-9]+(\.[0-9]+)?",
+    r"\d{2,4}-[a-z]+",
+    r"(?:foo|bar)+",
+    r"[^x]*x",
+    r"a{3}",
+    r"a{2,}",
+    r"(ab?c)*",
+    r"\{\}",
+    r'"[^"\\]*"',
+    r"<<[a-j](\+[a-j])*>>",
+    r"(\d+ )?[a-z]+( [a-z]+)*\.?",
+    r"\s*\w+\s*=\s*\w+\s*(;\s*\w+\s*=\s*\w+\s*)*",
+    r"[\x41-\x5a]+",
+]
+
+ALPHA = 'ab01.x-foz{}"\\cd9 =;A_Z\n'
+
+
+@pytest.mark.parametrize("pat", PATTERNS)
+def test_matches_re(pat, rng):
+    d = compile_pattern(pat)
+    cre = re.compile(pat, re.DOTALL)
+    for _ in range(400):
+        n = rng.integers(0, 10)
+        s = "".join(rng.choice(list(ALPHA)) for _ in range(n))
+        assert d.accepts(s.encode()) == (cre.fullmatch(s) is not None), (pat, s)
+
+
+@pytest.mark.parametrize("pat", PATTERNS)
+def test_prefix_validity_consistent(pat, rng):
+    """live-state semantics: is_valid_prefix(s) iff exists extension accepted."""
+    d = compile_pattern(pat)
+    for _ in range(100):
+        n = rng.integers(0, 6)
+        s = "".join(rng.choice(list(ALPHA)) for _ in range(n))
+        if d.is_valid_prefix(s.encode()):
+            # from a live state, some short extension over ALPHA+all bytes exists;
+            # verify via BFS on the DFA itself (internal consistency)
+            q = d.run(s.encode())
+            seen = {q}
+            frontier = [q]
+            ok = bool(d.accepting[q])
+            while frontier and not ok:
+                nxt = []
+                for st_ in frontier:
+                    for t in set(d.trans[st_].tolist()):
+                        if t not in seen:
+                            seen.add(t)
+                            nxt.append(t)
+                            ok = ok or bool(d.accepting[t])
+                frontier = nxt
+            assert ok
+
+
+# -- hypothesis: random pattern ASTs rendered to strings, compared against re --
+@st.composite
+def simple_pattern(draw, depth=0):
+    if depth > 2:
+        return draw(st.sampled_from(list("abc01")))
+    kind = draw(st.integers(0, 6))
+    if kind <= 2:
+        return draw(st.sampled_from(list("abc01")))
+    if kind == 3:
+        return "(" + draw(simple_pattern(depth + 1)) + ")" + draw(st.sampled_from(["*", "+", "?", ""]))
+    if kind == 4:
+        return draw(simple_pattern(depth + 1)) + "|" + draw(simple_pattern(depth + 1))
+    if kind == 5:
+        return draw(simple_pattern(depth + 1)) + draw(simple_pattern(depth + 1))
+    return "[" + draw(st.sampled_from(["abc", "a-c", "0-9a", "^ab"])) + "]"
+
+
+@given(pat=simple_pattern(), data=st.text(alphabet="abc012", max_size=8))
+@settings(max_examples=300, deadline=None)
+def test_hypothesis_vs_re(pat, data):
+    try:
+        cre = re.compile(pat, re.DOTALL)
+    except re.error:
+        return
+    d = compile_pattern(pat)
+    assert d.accepts(data.encode()) == (cre.fullmatch(data) is not None), (pat, data)
+
+
+def test_minimization_reduces_and_preserves(rng):
+    from repro.core import dfa as dfa_mod
+    from repro.core import nfa as nfa_mod
+
+    for pat in PATTERNS:
+        big = dfa_mod.determinize(nfa_mod.from_pattern(pat))
+        small = dfa_mod.minimize(big)
+        assert small.num_states <= big.num_states
+        cre = re.compile(pat, re.DOTALL)
+        for _ in range(100):
+            n = rng.integers(0, 8)
+            s = "".join(rng.choice(list(ALPHA)) for _ in range(n))
+            assert small.accepts(s.encode()) == (cre.fullmatch(s) is not None)
+
+
+def test_parse_errors():
+    for bad in ["(", ")", "a|*", "[", "a{3,1}", "(?P<x>a)"]:
+        with pytest.raises(Exception):
+            rx.parse(bad)
+
+
+def test_paper_style_regexes_compile():
+    # shapes of the paper's GSM / JSON regex fragments
+    gsm = r"(?:[ -;=?-~\n]+)?<<(?:[a-j]|[0-9]{1,3})(?:(?:\+|\-|//|/|%|\*|\*\*)(?:[a-j]|[0-9]{1,3}))*>>(?:\.)?"
+    js = r'\{[ ]?"name"[ ]?:[ ]?"([^"\\]|\\["\\])*"[ ]?,[ ]?"id"[ ]?:[ ]?[0-9]{1,9}[ ]?\}'
+    for pat in (gsm, js):
+        d = compile_pattern(pat)
+        assert d.num_states > 3
+        assert d.live[d.start]

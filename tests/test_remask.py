@@ -1,0 +1,60 @@
+"""Remasking strategies (paper Appendix A): confidence semantics and the
+commit-selection invariants per strategy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion.remask import confidence, select_commits
+
+
+def test_top_prob_prefers_peaked_positions(rng):
+    b, d, v = 1, 4, 50
+    logits = np.zeros((b, d, v), np.float32)
+    logits[0, 2, 7] = 10.0            # position 2 very confident
+    conf = confidence(jnp.asarray(logits), "top_prob")
+    assert int(np.asarray(conf)[0].argmax()) == 2
+
+
+def test_entropy_prefers_low_entropy(rng):
+    b, d, v = 1, 3, 50
+    logits = np.zeros((b, d, v), np.float32)
+    logits[0, 1, :] = rng.normal(size=v) * 5   # position 1 spiky -> lower entropy
+    conf = confidence(jnp.asarray(logits), "entropy")
+    assert int(np.asarray(conf)[0].argmax()) == 1
+
+
+def test_random_strategy_is_seeded(rng):
+    b, d, v = 2, 8, 16
+    logits = jnp.asarray(rng.normal(size=(b, d, v)), jnp.float32)
+    c1 = confidence(logits, "random", jax.random.PRNGKey(0))
+    c2 = confidence(logits, "random", jax.random.PRNGKey(0))
+    c3 = confidence(logits, "random", jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    assert not np.array_equal(np.asarray(c1), np.asarray(c3))
+
+
+def test_confidence_pallas_matches_jnp(rng):
+    b, d, v = 2, 8, 300
+    logits = jnp.asarray(rng.normal(size=(b, d, v)), jnp.float32)
+    a = confidence(logits, "top_prob", impl="jnp")
+    bb = confidence(logits, "top_prob", impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-5)
+    a = confidence(logits, "entropy", impl="jnp")
+    bb = confidence(logits, "entropy", impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-4, atol=1e-5)
+
+
+def test_select_commits_picks_highest_confidence(rng):
+    conf = jnp.asarray([[0.1, 0.9, 0.5, 0.7]])
+    committed = jnp.zeros((1, 4), bool)
+    c = select_commits(conf, committed, 2)
+    np.testing.assert_array_equal(np.asarray(c)[0], [False, True, False, True])
+
+
+def test_select_commits_respects_existing(rng):
+    conf = jnp.asarray([[0.9, 0.1, 0.5, 0.7]])
+    committed = jnp.asarray([[True, False, False, False]])
+    c = select_commits(conf, committed, 1)
+    # position 0 stays; ONE new position (the best uncommitted = 3)
+    np.testing.assert_array_equal(np.asarray(c)[0], [True, False, False, True])

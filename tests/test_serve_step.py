@@ -1,0 +1,96 @@
+"""serve_step (the dry-run decode function) on CPU at smoke scale: one
+diffusion step against a prefix cache, all three decode methods, constraint
+invariants hold."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.core import NEG_INF, build_token_dfa, compile_pattern, tables_from_tokendfa
+from repro.diffusion.serve import decoder_logp, make_serve_step
+from repro.models import ModelInputs, forward, init_caches, init_model
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tok = default_tokenizer()
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    td = build_token_dfa(
+        compile_pattern(r"(ab|ba)+"), tok.token_bytes,
+        mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+    tables = tables_from_tokendfa(td)
+    return tok, cfg, params, td, tables
+
+
+def _prefill(params, cfg, b, m, d, rng):
+    caches = init_caches(cfg, b, m + d)
+    prompt = jnp.asarray(rng.integers(4, 260, size=(b, m)), jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None], (b, m))
+    _, caches, _, _ = forward(params, cfg, ModelInputs(prompt, pos), caches,
+                              commit=True, attend_cache=False)
+    return caches
+
+
+@pytest.mark.parametrize("method", ["unconstrained", "greedy", "dingo"])
+def test_serve_step_one_diffusion_step(setup, method, rng):
+    tok, cfg, params, td, tables = setup
+    b, m, d = 2, 8, 8
+    caches = _prefill(params, cfg, b, m, d, rng)
+    scfg = ServeConfig(decode=method, remask="top_prob", block_size=d)
+    step = jax.jit(make_serve_step(cfg, scfg, tok.mask_token_id, tables, n_commit=2))
+    block = jnp.full((b, d), tok.mask_token_id, jnp.int32)
+    committed = jnp.zeros((b, d), bool)
+    q = tables.cnext.shape[0]
+    w0 = jnp.broadcast_to(jnp.where(jnp.arange(q) == tables.start, 0.0, NEG_INF), (b, q))
+    toks, comm, valid, qf, caches = step(
+        params, caches, block, committed, w0, jnp.asarray(m, jnp.int32),
+        jax.random.PRNGKey(0),
+    )
+    assert toks.shape == (b, d)
+    assert int(comm.sum()) == 2 * b                    # exactly n_commit per row
+    # still-masked positions hold the mask token
+    np.testing.assert_array_equal(
+        np.asarray(toks)[~np.asarray(comm)], tok.mask_token_id
+    )
+    if method == "dingo":
+        assert np.asarray(valid).all()
+        # committed tokens + masks must form a valid-prefix NFA run
+        for row in np.asarray(toks):
+            states = {td.start}
+            for t in row.tolist():
+                if t == tok.mask_token_id:
+                    nxt = set()
+                    for s in states:
+                        nxt |= set(np.where(td.mask_reach[s])[0].tolist())
+                else:
+                    nxt = {int(td.trans[s, t]) for s in states} - {td.dead}
+                states = nxt
+                assert states
+            assert any(td.live[s] for s in states)
+
+
+def test_decoder_logp_structure(setup, rng):
+    tok, cfg, params, td, tables = setup
+    b, d, v = 2, 6, tok.vocab_size
+    logits = jnp.asarray(rng.normal(size=(b, d, v)), jnp.float32)
+    block = jnp.asarray(rng.integers(4, 260, size=(b, d)), jnp.int32)
+    committed = jnp.zeros((b, d), bool).at[:, 0].set(True)
+    to_commit = jnp.zeros((b, d), bool).at[:, 1].set(True) | committed
+    lp = decoder_logp(logits, block, committed, to_commit, tok.mask_token_id)
+    lp = np.asarray(lp)
+    # committed position: one-hot on the committed token
+    assert (lp[:, 0].argmax(-1) == np.asarray(block)[:, 0]).all()
+    assert (np.sort(lp[:, 0], axis=-1)[:, :-1] <= NEG_INF / 2).all()
+    # newly committed: a proper distribution with ⊥ forbidden
+    assert (lp[:, 1, tok.mask_token_id] <= NEG_INF / 2).all()
+    assert np.isfinite(lp[:, 1]).sum() > 2
+    # still masked: one-hot on ⊥
+    assert (lp[:, 2].argmax(-1) == tok.mask_token_id).all()

@@ -1,0 +1,122 @@
+"""Sharding rules: param specs divisibility, cache specs, HLO analyzer units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import SHAPES, build_rules, serve_cache_len
+from repro.models import init_caches
+from repro.sharding.rules import cache_specs, param_specs
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+        size = 256
+
+
+MODEL_N = 16
+
+
+def _axis_size(ax):
+    return {"data": 16, "model": 16, "pod": 2}[ax]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS[:10])
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_param_specs_divisible(arch, shape_name):
+    """Every sharded WEIGHT dim divides its mesh axes (activations may pad,
+    weights should not)."""
+    cfg = get_config(arch)
+    rules = build_rules(cfg, SHAPES[shape_name], FakeMesh)
+    params_shapes = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_model"]).init_model(k, cfg),
+        jax.random.PRNGKey(0),
+    )
+    specs = param_specs(params_shapes, rules)
+
+    bad = []
+
+    def check(path, shape_struct, spec):
+        for dim, ax in zip(shape_struct.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= _axis_size(a)
+            # allow the vocab dim to pad (seamless 256206); everything else divides
+            if dim % n != 0 and dim not in (cfg.vocab_size,):
+                bad.append((jax.tree_util.keystr(path), shape_struct.shape, spec))
+
+    jax.tree_util.tree_map_with_path(check, params_shapes, specs)
+    assert not bad, bad[:5]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-2.7b", "deepseek-v3-671b", "jamba-v0.1-52b"])
+def test_cache_specs_cover_all_leaves(arch):
+    cfg = get_config(arch)
+    rules = build_rules(cfg, SHAPES["decode_32k"], FakeMesh)
+    cl = serve_cache_len(cfg, SHAPES["decode_32k"])
+    caches = jax.eval_shape(lambda: init_caches(cfg, 128, cl, jnp.bfloat16))
+    specs = cache_specs(cfg, caches, rules, MODEL_N)
+    n_sharded = 0
+    for leaf_spec, leaf in zip(
+        jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree_util.tree_leaves(caches),
+    ):
+        assert isinstance(leaf_spec, P)
+        if any(d is not None for d in leaf_spec):
+            n_sharded += 1
+    # the big cache tensors must actually be sharded
+    assert n_sharded >= 2, specs
+
+
+def test_long500k_rules_use_all_axes():
+    cfg = get_config("mamba2-2.7b")
+    rules = build_rules(cfg, SHAPES["long_500k"], FakeMesh)
+    assert rules["batch"] == ()            # batch 1 cannot shard
+    assert "model" in rules["kvseq"] and "data" in rules["kvseq"]
+
+
+def test_serve_cache_len_policy():
+    assert serve_cache_len(get_config("mixtral-8x7b"), SHAPES["long_500k"]) == 4096
+    assert serve_cache_len(get_config("deepseek-v3-671b"), SHAPES["long_500k"]) == 524288
+    assert serve_cache_len(get_config("starcoder2-7b"), SHAPES["long_500k"]) == 8192
+    assert serve_cache_len(get_config("starcoder2-7b"), SHAPES["decode_32k"]) == 32768
+    assert serve_cache_len(get_config("jamba-v0.1-52b"), SHAPES["long_500k"]) == 524288
+
+
+def test_hlo_analyzer_scan_trip_counts():
+    from repro.analysis.hlo import analyze_hlo_text
+
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+    t = analyze_hlo_text(jax.jit(f).lower(x, ws).compile().as_text())
+    assert t.flops == pytest.approx(2 * 64 * 128 * 128 * 6, rel=0.01)
+
+
+def test_hlo_analyzer_collectives():
+    from repro.analysis.hlo import analyze_hlo_text
+
+    # check the parser on a synthetic module (single-device psum lowers away)
+    text = """
+HloModule test
+
+ENTRY %main (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  ROOT %ar = f32[16,16]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+}
+"""
+    t = analyze_hlo_text(text)
+    assert t.collective["all-reduce"] == 16 * 16 * 4

@@ -1,0 +1,104 @@
+"""Token-level DFA: δ_t, δ_⊥, token classes, EOS terminator, live states."""
+import numpy as np
+import pytest
+
+from repro.core import build_token_dfa, compile_pattern
+from repro.tokenizer import default_tokenizer
+
+TINY_VOCAB = [b"a", b"b", b"ab", b"ba", b"+", b"(", b")", None, None]
+MASK, EOS = 7, 8
+
+
+def make(pat, eos=None):
+    return build_token_dfa(
+        compile_pattern(pat), TINY_VOCAB, mask_token_id=MASK, eos_token_id=eos
+    )
+
+
+def test_delta_t_matches_char_dfa():
+    cd = compile_pattern(r"(ab|ba)+")
+    td = make(r"(ab|ba)+")
+    for q in range(cd.num_states):
+        for t, tb in enumerate(TINY_VOCAB):
+            if tb is None:
+                continue
+            want = cd.run(tb, q)
+            want_live = cd.live[want]
+            got = td.trans[q, t]
+            if want_live:
+                assert got == want
+            else:
+                assert got == td.dead
+
+
+def test_class_decomposition_exact():
+    td = make(r"(a|b)+\+?(ab)*")
+    # cnext[q, class_id[t]] must reproduce trans[q, t] exactly
+    recon = td.cnext[:, td.class_id]
+    np.testing.assert_array_equal(recon, td.trans)
+    assert td.num_classes <= td.vocab_size
+
+
+def test_mask_reach_is_union_of_token_moves():
+    td = make(r"\((a|b)+\)")
+    for q in range(td.num_states):
+        nxt = set(int(x) for x in np.unique(td.trans[q]) if x != td.dead)
+        got = set(np.where(td.mask_reach[q])[0].tolist())
+        assert got == nxt
+
+
+def test_special_tokens_dead():
+    td = make(r"a+")
+    assert (td.trans[:, MASK] == td.dead).all()
+
+
+def test_eos_terminator_semantics():
+    td = make(r"a+", eos=EOS)
+    q = td.run([0])       # "a" -> accepting char state
+    assert td.accepting[q]
+    q2 = td.step(q, EOS)
+    assert td.accepting[q2] and td.live[q2]
+    assert td.step(q2, EOS) == q2          # EOS loops
+    assert td.step(q2, 0) == td.dead       # nothing else after EOS
+    # EOS from a non-accepting state is invalid
+    q0 = td.start
+    assert not td.accepting[q0]
+    assert td.step(q0, EOS) == td.dead
+
+
+def test_live_states_closed():
+    td = make(r"(ab|ba)+(\+(ab|ba)+)*")
+    # from non-live states everything reachable is non-live
+    for q in range(td.num_states):
+        if not td.live[q]:
+            assert not td.live[td.trans[q]].any()
+
+
+def test_valid_token_mask():
+    td = make(r"\(a\)")
+    reach = np.zeros(td.num_states, bool)
+    reach[td.start] = True
+    m = td.valid_token_mask(reach)
+    assert m[5]            # "(" valid
+    assert not m[0]        # "a" invalid at start
+    assert not m[MASK]
+
+
+def test_real_tokenizer_spanning_tokens():
+    tok = default_tokenizer()
+    td = build_token_dfa(
+        compile_pattern(r"<<[a-j]( \+ [a-j])*>>"),
+        tok.token_bytes,
+        mask_token_id=tok.mask_token_id,
+        eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+    # the "<<" merge token must take start -> the state after two '<'
+    two_lt = td.run(tok.encode("<<"))
+    lt_lt = td.run([ord("<"), ord("<")])
+    assert two_lt == lt_lt != td.dead
+    # the " + " merge token spans three chars
+    ids = tok.encode("<<a + b>>")
+    assert td.is_valid_prefix(ids)
+    q = td.run(ids)
+    assert td.accepting[q]
