@@ -25,6 +25,7 @@ def main() -> None:
         bench_kernels,
         bench_precompute,
         bench_roofline,
+        bench_serving,
         bench_steps,
     )
 
@@ -37,6 +38,7 @@ def main() -> None:
         "blocks": bench_blocks,           # paper Tables 4/5 + Fig 1
         "steps": bench_steps,             # paper Tables 6/7
         "roofline": bench_roofline,       # §Roofline (from dry-run artifacts)
+        "serving": bench_serving,         # continuous-batching throughput/latency
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -51,12 +51,21 @@ def make_serve_step(
     n_commit: int = 4,
 ):
     """serve_step(params, caches, block_tokens, committed, w0, start, rng)
-    -> (block_tokens', committed', valid, q_final, caches)."""
+    -> (block_tokens', committed', valid, q_final, caches).
+
+    ``start`` is a scalar (whole batch at one position) or ``(B, 1)`` per-row
+    offsets (continuous-batching slots at heterogeneous positions).
+    ``tables_arg`` may carry a leading batch axis (``stack_tables`` — one
+    constraint per slot); ``n_commit_arg`` overrides the static commit count
+    with a traced scalar so one compiled step serves every schedule point."""
     method = scfg.decode
     impl = scfg.kernel_impl
 
-    def serve_step(params, caches, block_tokens, committed, w0, start, rng, tables_arg=None):
+    def serve_step(params, caches, block_tokens, committed, w0, start, rng,
+                   tables_arg=None, n_commit_arg=None):
         tables_in = tables_arg if tables_arg is not None else tables
+        n_commit_in = n_commit_arg if n_commit_arg is not None else n_commit
+        t_ax = 0 if (tables_in is not None and tables_in.cnext.ndim == 3) else None
         b, d = block_tokens.shape
         base = start + jnp.arange(d, dtype=jnp.int32)[None]
         pos = jnp.broadcast_to(base, (b, d))
@@ -70,17 +79,22 @@ def make_serve_step(
             caches, commit=False, window=None,
         )
         conf = confidence(logits, scfg.remask, rng, impl=impl)
-        new_committed = select_commits(conf, committed, n_commit)
+        new_committed = select_commits(conf, committed, n_commit_in)
         logp = decoder_logp(logits, block_tokens, committed, new_committed, mask_id)
         if method == UNCONSTRAINED:
             toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
             valid = jnp.ones((b,), bool)
             qf = jnp.zeros((b,), jnp.int32)
         elif method == DINGO:
-            res = jax.vmap(lambda lp, w: dingo_decode(lp, tables_in, w, impl=impl))(logp, w0)
+            res = jax.vmap(
+                lambda lp, t, w: dingo_decode(lp, t, w, impl=impl),
+                in_axes=(0, t_ax, 0),
+            )(logp, tables_in, w0)
             toks, valid, qf = res.tokens, res.valid, res.q_final
         elif method == GREEDY:
-            res = jax.vmap(lambda lp, r: greedy_decode(lp, tables_in, r))(logp, w0.astype(bool))
+            res = jax.vmap(
+                lambda lp, t, r: greedy_decode(lp, t, r), in_axes=(0, t_ax, 0)
+            )(logp, tables_in, w0.astype(bool))
             toks, valid = res.tokens, res.valid
             qf = jnp.zeros((b,), jnp.int32)
         else:

@@ -69,6 +69,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str, *, force=
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = parse_collective_bytes(hlo)
         mf = model_flops_for(cfg, plan.static["kind"], plan.static["tokens"])

@@ -1,7 +1,16 @@
 """Serving launcher: batched constrained generation with any registered arch.
 
-CPU/demo: PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-              --decode dingo --regex '<<[a-j]( \\+ [a-j])*>>' --batch 2
+One-shot batch (the original path):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --decode dingo --regex '<<[a-j]( \\+ [a-j])*>>' --batch 2
+
+Continuous-batching server (``repro.serving``): admits a mixed regex /
+JSON-Schema request stream into batch slots, amortizing constraint
+compilation through the LRU cache:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --server --requests 8 --slots 4
 """
 from __future__ import annotations
 
@@ -20,6 +29,51 @@ from repro.tokenizer import default_tokenizer
 from repro.training import checkpoint
 
 
+def _demo_stream(args, n):
+    """Mixed regex / JSON-Schema request stream for --server mode."""
+    from repro.data import synthetic
+    from repro.serving import Constraint, Request, schema_for_fields
+
+    reqs = []
+    json_budget = max(args.gen_len, 32)   # a minimal schema object needs ~20 tokens
+    for i in range(n):
+        kind = i % 3
+        if kind == 0:
+            fields, name = synthetic.JSON_SCHEMAS[i % len(synthetic.JSON_SCHEMAS)][0], "json"
+            c = Constraint.json_schema(schema_for_fields(fields))
+            reqs.append(Request(f"make {name} row {i}: ", c, max_new_tokens=json_budget,
+                                metadata={"kind": c.source}))
+        elif kind == 1:
+            reqs.append(Request(args.prompt, Constraint.regex(args.regex),
+                                max_new_tokens=args.gen_len, metadata={"kind": "regex"}))
+        else:
+            reqs.append(Request(f"say ab {i} ", Constraint.regex(r"(ab|ba)+"),
+                                max_new_tokens=args.gen_len, metadata={"kind": "regex"}))
+    return reqs
+
+
+def run_server(args, cfg, tok, params):
+    from repro.serving import ConstraintCache, ServingEngine
+
+    scfg = ServeConfig(
+        gen_len=max(args.gen_len, 32), block_size=args.block,
+        diffusion_steps_per_block=args.steps, decode=args.decode, remask=args.remask,
+    )
+    cache = ConstraintCache()
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=args.slots,
+                        max_prompt_len=64, constraint_cache=cache)
+    reqs = _demo_stream(args, args.requests)
+    t0 = time.time()
+    for c in eng.serve(reqs):
+        print(f"[req {c.request_id}] valid={c.valid} matched={c.matched} "
+              f"blocks={c.blocks} latency={c.latency_s:.2f}s -> {c.text!r}")
+    dt = time.time() - t0
+    s = cache.stats
+    print(f"{dt:.2f}s total | {len(reqs)/dt:.2f} req/s | {eng.blocks_run} blocks | "
+          f"constraint cache: {s.hits} hits / {s.misses} misses "
+          f"({s.compile_time_s*1e3:.0f} ms compiling)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
@@ -33,6 +87,10 @@ def main():
     ap.add_argument("--block", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--server", action="store_true",
+                    help="continuous-batching server over a request stream")
+    ap.add_argument("--requests", type=int, default=8, help="--server stream size")
+    ap.add_argument("--slots", type=int, default=4, help="--server batch slots")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -45,6 +103,10 @@ def main():
     params = init_model(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         params = checkpoint.restore(args.ckpt, params)
+
+    if args.server:
+        run_server(args, cfg, tok, params)
+        return
 
     tables = None
     if args.decode != "unconstrained":

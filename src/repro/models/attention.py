@@ -252,10 +252,17 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
 
 
 def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
-    """Commit a block's K/V at the current length offset (same length per batch
-    row in block-diffusion serving)."""
-    b, s = k_new.shape[0], k_new.shape[1]
-    start = cache.length[0]  # uniform across batch in block serving
-    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, start, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, start, 0, 0))
+    """Commit a block's K/V at each row's current length offset.
+
+    Lengths may differ per batch row (continuous-batching serving: slots are at
+    different absolute positions); the per-row dynamic_update_slice is vmapped
+    over the batch, which reduces to the old single-slice write when lengths
+    are uniform (one-shot batch generation)."""
+    s = k_new.shape[1]
+
+    def _row(buf, new, start):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), (start, 0, 0))
+
+    k = jax.vmap(_row)(cache.k, k_new, cache.length)
+    v = jax.vmap(_row)(cache.v, v_new, cache.length)
     return KVCache(k=k, v=v, length=cache.length + s)

@@ -90,17 +90,23 @@ def mla_expanded(p, x, cfg: ModelConfig, positions, cache: MLACache | None = Non
     out = out.reshape(b, s, -1) @ p["wo"]
     new_cache = cache
     if cache is not None and commit:
-        start = cache.length[0]
-        new_cache = MLACache(
-            c_kv=jax.lax.dynamic_update_slice(
-                cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, start, 0)
-            ),
-            k_rope=jax.lax.dynamic_update_slice(
-                cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, start, 0)
-            ),
-            length=cache.length + s,
-        )
+        new_cache = mla_cache_append(cache, c_kv, k_rope)
     return out, new_cache
+
+
+def mla_cache_append(cache: MLACache, c_kv_new, k_rope_new) -> MLACache:
+    """Append a span's latents at each row's current length offset (per-row
+    lengths: continuous-batching slots sit at different absolute positions)."""
+    s = c_kv_new.shape[1]
+
+    def _row(buf, new, start):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), (start, 0))
+
+    return MLACache(
+        c_kv=jax.vmap(_row)(cache.c_kv, c_kv_new, cache.length),
+        k_rope=jax.vmap(_row)(cache.k_rope, k_rope_new, cache.length),
+        length=cache.length + s,
+    )
 
 
 def mla_absorbed(
@@ -153,16 +159,7 @@ def mla_absorbed(
 
     new_cache = cache
     if commit:
-        start = cache.length[0]
-        new_cache = MLACache(
-            c_kv=jax.lax.dynamic_update_slice(
-                cache.c_kv, c_kv_blk.astype(cache.c_kv.dtype), (0, start, 0)
-            ),
-            k_rope=jax.lax.dynamic_update_slice(
-                cache.k_rope, k_rope_blk.astype(cache.k_rope.dtype), (0, start, 0)
-            ),
-            length=cache.length + s,
-        )
+        new_cache = mla_cache_append(cache, c_kv_blk, k_rope_blk)
     return out, new_cache
 
 

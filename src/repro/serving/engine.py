@@ -1,0 +1,229 @@
+"""Continuous-batching serve loop over ``make_serve_step``.
+
+The engine owns the device state (params, per-slot KV/SSM caches, the jitted
+step/prefill/commit functions) and drives the scheduler:
+
+    while work remains:
+        admit queued requests into free slots      (per-slot prompt prefill,
+                                                    scattered into the batch
+                                                    caches at the slot index)
+        for each diffusion step of the block:      serve_step over ALL slots
+                                                    (stacked per-slot tables,
+                                                    per-slot DFA carry w0,
+                                                    per-slot start positions)
+        commit the block into the caches           (per-row append offsets)
+        retire finished slots -> yield Completions
+
+Slots are at heterogeneous absolute positions: a request admitted at block k
+prefills its prompt at positions [0, m) of its *own* cache row and generates
+from there, while its neighbours keep extending theirs — the per-row
+``cache_append`` and per-row ``kv_valid`` make rows fully independent.
+
+``serve()`` is a generator yielding completions as they finish (async-style:
+submit more work between blocks via ``submit()``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
+from repro.diffusion.schedule import unmask_counts
+from repro.diffusion.serve import make_serve_step
+from repro.models import ModelInputs, forward, init_caches
+
+from .cache import ConstraintCache
+from .scheduler import ContinuousBatchingScheduler, Slot
+from .types import Completion, Request
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+class ServingEngine:
+    """Continuous-batching constrained serving over a diffusion LM."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        scfg: ServeConfig,
+        tokenizer,
+        *,
+        n_slots: int = 4,
+        max_prompt_len: int = 64,
+        prompt_pad: int = 16,
+        constraint_cache: Optional[ConstraintCache] = None,
+        seed: int = 0,
+    ):
+        if cfg.frontend is not None:
+            raise ValueError("serving engine drives text-only models")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.tok = tokenizer
+        self.mask_id = tokenizer.mask_token_id
+        self.n_slots = n_slots
+        self.prompt_pad = prompt_pad
+        self.max_prompt_len = _round_up(max_prompt_len, prompt_pad)
+        d = scfg.block_size
+        self.max_blocks = max(1, -(-scfg.gen_len // d))
+        self.max_len = self.max_prompt_len + self.max_blocks * d
+        self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        self.sched = ContinuousBatchingScheduler(
+            n_slots, self.cache, tokenizer,
+            block_size=d, decode=scfg.decode, max_blocks=self.max_blocks,
+        )
+        self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
+        self._rng = jax.random.PRNGKey(seed)
+        self.caches = init_caches(cfg, n_slots, self.max_len)
+        self.blocks_run = 0
+
+        cfg_ = cfg
+        self._step = jax.jit(make_serve_step(cfg, scfg, self.mask_id))
+
+        @jax.jit
+        def prefill1(params, caches, tokens):
+            b, m = tokens.shape
+            pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None], (b, m))
+            if cfg_.rope_type == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, b, m))
+            _, caches, _, _ = forward(
+                params, cfg_, ModelInputs(tokens, pos), caches,
+                commit=True, attend_cache=False,
+            )
+            return caches
+
+        @jax.jit
+        def commit_block(params, caches, block_tokens, starts):
+            b, s = block_tokens.shape
+            pos = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+            if cfg_.rope_type == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, b, s))
+            _, caches, _, _ = forward(
+                params, cfg_, ModelInputs(block_tokens, pos), caches,
+                commit=True, attend_cache=True,
+            )
+            return caches
+
+        @jax.jit
+        def scatter_slot(big, small, idx):
+            # cache leaves are (layers, batch, ...): write row `idx` of every leaf
+            return jax.tree_util.tree_map(
+                lambda b_, s_: b_.at[:, idx].set(s_[:, 0]), big, small
+            )
+
+        self._prefill1 = prefill1
+        self._commit_block = commit_block
+        self._scatter_slot = scatter_slot
+
+    # ---- request intake --------------------------------------------------
+    def submit(self, request: Request) -> int:
+        return self.sched.submit(request)
+
+    # ---- admission: prompt prefill into the slot's cache row -------------
+    def _admit(self) -> List[Completion]:
+        admitted, rejected = self.sched.admit()
+        for slot in admitted:
+            req = slot.request
+            ids = self.tok.encode(req.prompt)
+            mp = min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
+            ids = ids[-mp:]
+            row = np.full((1, mp), self.tok.eos_token_id, np.int32)
+            row[0, mp - len(ids):] = ids      # left-pad: generation starts at mp
+            small = init_caches(self.cfg, 1, self.max_len)
+            small = self._prefill1(self.params, small, jnp.asarray(row))
+            self.caches = self._scatter_slot(
+                self.caches, small, jnp.asarray(slot.index, jnp.int32)
+            )
+            slot.pos = mp
+        now = time.perf_counter()
+        return [
+            Completion(
+                request_id=req.request_id, text="", tokens=[], valid=False,
+                matched=False, blocks=0, steps=0,
+                latency_s=now - (req.submit_time_s or now), queue_s=0.0,
+                cache_hit=False,
+                metadata=dict(req.metadata, rejected="constraint needs "
+                              f">= {entry.min_tokens} tokens, budget too small"),
+            )
+            for req, entry in rejected
+        ]
+
+    # ---- one block over all live slots -----------------------------------
+    def step_block(self) -> List[Completion]:
+        """Admit, run one diffusion block over every slot, commit, retire."""
+        out = self._admit()
+        if not self.sched.busy:
+            return out
+        sched = self.sched
+        b, d = self.n_slots, self.scfg.block_size
+        tables = sched.stacked_tables()
+        carry = jnp.asarray(sched.carry_batch())
+        starts = jnp.asarray(sched.starts())[:, None]   # (B, 1) per-row offsets
+        block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
+        committed = jnp.zeros((b, d), bool)
+        valid = jnp.ones((b,), bool)
+        qf = jnp.zeros((b,), jnp.int32)
+        for delta in self._commit_deltas:
+            self._rng, sub = jax.random.split(self._rng)
+            block_tokens, committed, valid, qf, self.caches = self._step(
+                self.params, self.caches, block_tokens, committed, carry,
+                starts, sub, tables_arg=tables,
+                n_commit_arg=jnp.asarray(delta, jnp.int32),
+            )
+        self.caches = self._commit_block(
+            self.params, self.caches, block_tokens, jnp.asarray(sched.starts())
+        )
+        self.blocks_run += 1
+        finished = sched.record_block(
+            np.asarray(block_tokens), np.asarray(valid), np.asarray(qf),
+            steps=len(self._commit_deltas),
+        )
+        out.extend(self._complete(s) for s in finished)
+        return out
+
+    def _complete(self, slot: Slot) -> Completion:
+        req = slot.request
+        now = time.perf_counter()
+        tokens = list(slot.tokens)
+        # trim trailing EOS padding for the surface text
+        while tokens and tokens[-1] == self.tok.eos_token_id:
+            tokens.pop()
+        td = slot.entry.tokendfa
+        if slot.constrained:
+            matched = bool(td.accepting[td.run(slot.tokens)])
+        else:
+            matched = None
+        out = Completion(
+            request_id=req.request_id,
+            text=self.tok.decode(tokens),
+            tokens=list(slot.tokens),
+            valid=bool(slot.valid),
+            matched=matched,
+            blocks=slot.blocks_done,
+            steps=slot.steps,
+            latency_s=now - (req.submit_time_s or slot.admit_time_s),
+            queue_s=slot.admit_time_s - (req.submit_time_s or slot.admit_time_s),
+            cache_hit=slot.cache_hit,
+            metadata=dict(req.metadata),
+        )
+        self.sched.release(slot)
+        return out
+
+    # ---- serve loop ------------------------------------------------------
+    def serve(self, requests: Iterable[Request] = ()) -> Iterator[Completion]:
+        """Submit ``requests`` and yield completions as slots retire. Runs
+        until the queue and every slot drain; more work may be submitted from
+        the consumer between yields."""
+        for r in requests:
+            self.submit(r)
+        while self.sched.pending or self.sched.busy:
+            for c in self.step_block():
+                yield c

@@ -1,0 +1,319 @@
+"""Slot-based continuous-batching scheduler for constrained block diffusion.
+
+The serving batch is a fixed grid of ``n_slots`` slots. Requests queue FIFO
+and are admitted into free slots at block boundaries; each slot owns
+
+  * a compiled constraint (token DFA + packed DINGO tables, from the
+    :class:`~repro.serving.cache.ConstraintCache`),
+  * its DFA carry across blocks — the DINGO end state ``q_final``
+    (paper Appendix D) or the greedy reachable set,
+  * its absolute cache position (slots sit at *heterogeneous* positions; the
+    per-row ``cache_append`` and per-row ``start`` in ``make_serve_step``
+    make that legal).
+
+Heterogeneous per-slot tables are padded to a shared **(Q, C) bucket** and
+stacked (``pad_tables``/``stack_tables`` semantics) so one jit-compiled
+``serve_step`` decodes every slot. Buckets are the next power of two (min 8)
+over the live slots' table shapes, so admission churn only recompiles when a
+request genuinely crosses a bucket boundary — the bounded-recompilation knob.
+
+Free slots hold a placeholder match-anything constraint; their decode output
+is discarded. A slot retires when its block budget is exhausted or the model
+pads a whole block with EOS from an accepting state — retirement is
+per-slot, so one long request never stalls the rest of the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DingoTables, pad_tables
+from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
+from repro.core.dingo import NEG_INF
+
+from .cache import UNREACHABLE, CompiledConstraint, ConstraintCache
+from .types import Constraint, Request
+
+PLACEHOLDER_PATTERN = r"(.|\n)*"
+
+
+def qc_bucket(n: int, floor: int = 8) -> int:
+    """Next power of two >= n (min ``floor``)."""
+    return max(floor, 1 << (int(n) - 1).bit_length())
+
+
+@dataclasses.dataclass
+class Slot:
+    index: int
+    request: Optional[Request] = None
+    entry: Optional[CompiledConstraint] = None
+    cache_hit: bool = False
+    constrained: bool = True      # False: placeholder tables, ignore validity
+    q_state: int = 0              # DINGO carry (state id in the slot's own DFA)
+    reach: Optional[np.ndarray] = None   # greedy carry (Q,) bool
+    pos: int = 0                  # absolute cache position (prompt + blocks)
+    blocks_done: int = 0
+    blocks_total: int = 0
+    steps: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    valid: bool = True
+    admit_time_s: float = 0.0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ContinuousBatchingScheduler:
+    def __init__(
+        self,
+        n_slots: int,
+        cache: ConstraintCache,
+        tokenizer,
+        *,
+        block_size: int,
+        decode: str = DINGO,
+        max_blocks: int = 8,
+    ):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self.cache = cache
+        self.tok = tokenizer
+        self.block_size = block_size
+        self.decode = decode
+        self.max_blocks = max_blocks
+        self.queue: "deque[Request]" = deque()
+        self.slots = [Slot(index=i) for i in range(n_slots)]
+        # the match-anything constraint free slots (and unconstrained requests
+        # under a constrained decode method) are parked on
+        self.placeholder, _ = cache.get_or_compile(PLACEHOLDER_PATTERN, tokenizer)
+        for s in self.slots:
+            self._park(s)
+        # padded-table memo: (pattern, Qb, Cb) -> DingoTables on device
+        self._padded: Dict[Tuple[str, int, int], DingoTables] = {}
+        self._stacked: Optional[DingoTables] = None
+        self._stacked_key: Optional[tuple] = None
+
+    # ---- queue -----------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        if request.submit_time_s is None:
+            request.submit_time_s = time.perf_counter()
+        self.queue.append(request)
+        return request.request_id
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    @property
+    def busy(self) -> int:
+        return len(self.active_slots)
+
+    # ---- admission -------------------------------------------------------
+    def admit(self) -> Tuple[List[Slot], List[Tuple[Request, CompiledConstraint]]]:
+        """Fill free slots from the queue (FIFO). Returns (admitted, rejected);
+        the engine must prefill each admitted slot's prompt before the next
+        block runs. A request whose shortest possible match exceeds its token
+        budget is rejected up front instead of burning a slot on a string the
+        DFA can never close."""
+        admitted: List[Slot] = []
+        rejected: List[Tuple[Request, CompiledConstraint]] = []
+        d = self.block_size
+        for slot in (s for s in self.slots if s.free):
+            while self.queue:
+                req = self.queue.popleft()
+                entry, hit = self._compile(req.constraint)
+                blocks = min(self.max_blocks, max(1, -(-req.max_new_tokens // d)))
+                if req.constraint.constrained and entry.min_tokens > blocks * d:
+                    rejected.append((req, entry))
+                    continue
+                td = entry.tokendfa
+                slot.request = req
+                slot.entry = entry
+                slot.cache_hit = hit
+                slot.constrained = req.constraint.constrained
+                slot.q_state = td.start
+                slot.reach = (np.arange(td.num_states) == td.start)
+                slot.pos = 0            # engine sets after prompt prefill
+                slot.blocks_done = 0
+                slot.blocks_total = blocks
+                slot.steps = 0
+                slot.tokens = []
+                slot.valid = True
+                slot.admit_time_s = time.perf_counter()
+                admitted.append(slot)
+                break
+        if admitted:
+            self._stacked_key = None  # table assignment changed
+        return admitted, rejected
+
+    def _compile(self, constraint: Constraint) -> Tuple[CompiledConstraint, bool]:
+        if not constraint.constrained:
+            # run under the placeholder automaton (valid for every string)
+            return self.placeholder, True
+        return self.cache.get_or_compile(constraint.pattern, self.tok)
+
+    def _park(self, slot: Slot) -> None:
+        """Reset a slot to the free/placeholder state."""
+        slot.request = None
+        slot.entry = self.placeholder
+        slot.cache_hit = True
+        slot.constrained = False
+        slot.q_state = self.placeholder.tokendfa.start
+        slot.reach = (np.arange(self.placeholder.tokendfa.num_states)
+                      == self.placeholder.tokendfa.start)
+        slot.pos = 0
+        slot.blocks_done = 0
+        slot.blocks_total = 0
+        slot.tokens = []
+        slot.valid = True
+
+    # ---- batched tables / DP carry --------------------------------------
+    def bucket(self) -> Tuple[int, int]:
+        """(Q, C) bucket covering every slot's tables (placeholder included)."""
+        q = max(e.tokendfa.num_states for e in self._entries())
+        c = max(e.tokendfa.num_classes for e in self._entries())
+        return qc_bucket(q), qc_bucket(c)
+
+    def _entries(self):
+        return [s.entry for s in self.slots]
+
+    def stacked_tables(self) -> DingoTables:
+        """Batched (B, Qb, Cb) tables over all slots, memoized until the slot
+        assignment, bucket, or any slot's remaining budget changes."""
+        qb, cb = self.bucket()
+        budgets = tuple(self._block_budget(s) for s in self.slots)
+        key = (qb, cb, budgets) + tuple(id(s.entry) for s in self.slots)
+        if self._stacked_key == key:
+            return self._stacked
+        padded = [
+            self._padded_tables(s.entry, qb, cb, budget=r)
+            for s, r in zip(self.slots, budgets)
+        ]
+        self._stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+        self._stacked_key = key
+        return self._stacked
+
+    def _block_budget(self, slot: Slot) -> Optional[int]:
+        """Token budget remaining AFTER the block about to run, for constrained
+        DINGO slots (None: use the plain live set). The DP's end-state
+        selection (the only place ``live`` is read) is restricted to states
+        whose shortest distance-to-accept fits this budget, so a block can
+        never strand the run on a prefix the remaining blocks cannot close —
+        at the last block (budget 0) the set degenerates to exactly the
+        accepting states, forcing the match shut."""
+        if self.decode != DINGO or slot.free or not slot.constrained:
+            return None
+        return (slot.blocks_total - slot.blocks_done - 1) * self.block_size
+
+    def _padded_tables(
+        self, entry: CompiledConstraint, qb: int, cb: int, budget: Optional[int] = None
+    ) -> DingoTables:
+        if budget is not None:
+            finite = entry.dist[entry.dist < UNREACHABLE]
+            if finite.size and budget >= int(finite.max()):
+                budget = None   # every live state can close in time: plain tables
+        key = (entry.pattern, qb, cb, budget)
+        hit = self._padded.get(key)
+        if hit is None:
+            td = entry.tokendfa
+            hit = pad_tables(td, qb, cb)
+            if budget is not None:
+                live = np.zeros(qb, bool)
+                live[: td.num_states] = entry.dist <= budget
+                hit = hit._replace(live=jnp.asarray(live))
+            self._padded[key] = hit
+            if len(self._padded) > 8 * self.n_slots + 32:
+                self._padded.pop(next(iter(self._padded)))
+        return hit
+
+    def carry_batch(self) -> np.ndarray:
+        """Per-slot DP carry in the current bucket's padded state space:
+        DINGO -> (B, Qb) f32 log-weights; GREEDY -> (B, Qb) bool reach;
+        UNCONSTRAINED -> (B, 1) zeros (ignored)."""
+        qb, _ = self.bucket()
+        b = self.n_slots
+        if self.decode == DINGO:
+            w0 = np.full((b, qb), NEG_INF, np.float32)
+            for s in self.slots:
+                w0[s.index, s.q_state] = 0.0
+            return w0
+        if self.decode == GREEDY:
+            r0 = np.zeros((b, qb), bool)
+            for s in self.slots:
+                r0[s.index, : s.reach.shape[0]] = s.reach
+            return r0
+        return np.zeros((b, 1), np.float32)
+
+    def starts(self) -> np.ndarray:
+        """(B,) absolute block-start position per slot."""
+        return np.asarray([s.pos for s in self.slots], np.int32)
+
+    # ---- block retirement ------------------------------------------------
+    def record_block(
+        self,
+        block_tokens: np.ndarray,   # (B, d) committed tokens of the finished block
+        valid: np.ndarray,          # (B,) decoder validity at the final step
+        q_final: np.ndarray,        # (B,) DINGO end state (padded space)
+        steps: int,
+    ) -> List[Slot]:
+        """Thread per-slot DFA state across the block boundary and retire
+        finished slots. Returns the retired slots (engine builds Completions
+        and must call :meth:`release` on each)."""
+        finished = []
+        eos = self.tok.eos_token_id
+        for s in self.slots:
+            if s.free:
+                continue
+            row = block_tokens[s.index].tolist()
+            s.tokens.extend(row)
+            s.blocks_done += 1
+            s.steps += steps
+            s.pos += self.block_size
+            td = s.entry.tokendfa
+            if self.decode == DINGO:
+                s.valid = s.valid and bool(valid[s.index])
+                s.q_state = int(q_final[s.index])
+            elif self.decode == GREEDY:
+                s.valid = s.valid and bool(valid[s.index])
+                s.reach = self._advance_reach(td, s.reach, row)
+            else:
+                s.q_state = td.run(row, s.q_state)
+            accepting = (
+                s.q_state < td.num_states and bool(td.accepting[s.q_state])
+                if self.decode in (DINGO, UNCONSTRAINED)
+                else bool((s.reach[: td.num_states] & td.accepting).any())
+            )
+            done = s.blocks_done >= s.blocks_total
+            # early retirement: the model padded the whole block with EOS from
+            # an accepting state — the match is over, free the slot now
+            if not done and accepting and all(t == eos for t in row):
+                done = True
+            if done:
+                finished.append(s)
+        return finished
+
+    @staticmethod
+    def _advance_reach(td, reach: np.ndarray, tokens: List[int]) -> np.ndarray:
+        r = reach[: td.num_states].copy()
+        for t in tokens:
+            nxt = np.unique(td.trans[np.where(r)[0], t])
+            r = np.zeros(td.num_states, bool)
+            r[nxt] = True
+            r[td.dead] = False
+        return r & td.live
+
+    def release(self, slot: Slot) -> None:
+        self._park(slot)
+        self._stacked_key = None

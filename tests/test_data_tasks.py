@@ -4,6 +4,7 @@ import random
 import re
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import compile_pattern

@@ -3,6 +3,7 @@ semi-AR threading (Appendix D), and behaviour with committed/masked positions.""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

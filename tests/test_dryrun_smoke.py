@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy e2e: excluded from the quick CI job
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

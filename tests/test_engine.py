@@ -14,6 +14,8 @@ from repro.diffusion import DiffusionEngine, masked_count, select_commits, unmas
 from repro.models import ModelInputs, forward, init_caches, init_model
 from repro.tokenizer import default_tokenizer
 
+pytestmark = pytest.mark.slow  # heavy e2e: excluded from the quick CI job
+
 
 def test_schedule_linear_and_complete():
     for d, t in [(16, 4), (32, 8), (128, 64), (7, 3), (8, 11)]:

@@ -14,6 +14,8 @@ from repro.diffusion import DiffusionEngine
 from repro.models import init_model
 from repro.tokenizer import default_tokenizer
 
+pytestmark = pytest.mark.slow  # heavy e2e: excluded from the quick CI job
+
 PATTERNS = [r"(ab)+", r"(ba)+", r"\((a|b)+\)"]
 
 

@@ -15,6 +15,8 @@ from repro.diffusion.serve import decoder_logp, make_serve_step
 from repro.models import ModelInputs, forward, init_caches, init_model
 from repro.tokenizer import default_tokenizer
 
+pytestmark = pytest.mark.slow  # heavy e2e: excluded from the quick CI job
+
 
 @pytest.fixture(scope="module")
 def setup():

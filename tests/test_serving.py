@@ -1,0 +1,308 @@
+"""repro.serving: JSON-Schema frontend, compiled-constraint cache, scheduler
+mechanics, and the end-to-end continuous-batching acceptance run (mixed
+regex/JSON-Schema stream, every completion matching its own constraint)."""
+import dataclasses
+import json
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.core import compile_pattern
+from repro.data import synthetic
+from repro.models import init_model
+from repro.serving import (
+    Constraint,
+    ConstraintCache,
+    ContinuousBatchingScheduler,
+    Request,
+    SchemaError,
+    ServingEngine,
+    qc_bucket,
+    schema_for_fields,
+    schema_to_regex,
+    vocab_fingerprint,
+)
+from repro.tokenizer import ByteTokenizer, default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+# ---------------------------------------------------------------------------
+# schema frontend
+# ---------------------------------------------------------------------------
+def test_schema_regex_accepts_canonical_json():
+    sch = {
+        "type": "object",
+        "properties": {
+            "kind": {"enum": ["a", "b"]},
+            "n": {"type": "integer", "maxDigits": 3},
+            "ok": {"type": "boolean"},
+            "xs": {"type": "array", "items": {"type": "integer", "maxDigits": 2},
+                   "minItems": 1, "maxItems": 3},
+            "note": {"type": "string"},
+        },
+        "required": ["kind", "n", "ok", "xs"],
+    }
+    pat = schema_to_regex(sch)
+    good = [
+        '{"kind": "a", "n": 12, "ok": true, "xs": [1, 22]}',
+        '{"kind": "b", "n": 0, "ok": false, "xs": [5], "note": "hi there"}',
+    ]
+    bad = [
+        '{"kind": "c", "n": 12, "ok": true, "xs": [1]}',     # not in enum
+        '{"kind": "a", "n": 012, "ok": true, "xs": [1]}',    # leading zero
+        '{"kind": "a", "n": 12, "ok": true, "xs": []}',      # minItems
+        '{"kind": "a", "n": 12, "xs": [1], "ok": true}',     # field order fixed
+        '{"kind": "a","n": 12,"ok": true,"xs": [1]}',        # spacing fixed
+    ]
+    dfa = compile_pattern(pat)
+    for s in good:
+        assert re.fullmatch(pat, s), s
+        assert dfa.accepting[dfa.run(s.encode())], s
+        json.loads(s)   # every accepted string is real JSON
+    for s in bad:
+        assert not re.fullmatch(pat, s), s
+        assert not dfa.accepting[dfa.run(s.encode())], s
+
+
+def test_schema_matches_synthetic_task():
+    """The frontend's language contains every synthetic-task answer."""
+    import random
+
+    rng = random.Random(0)
+    for idx, (fields, _) in enumerate(synthetic.JSON_SCHEMAS):
+        pat = schema_to_regex(schema_for_fields(fields))
+        for _ in range(20):
+            ex = synthetic.gen_json_example(rng, schema_idx=idx)
+            assert re.fullmatch(pat, ex.answer), (pat, ex.answer)
+
+
+def test_schema_rejects_unsupported():
+    with pytest.raises(SchemaError):
+        schema_to_regex({"type": "string"})                       # not an object
+    with pytest.raises(SchemaError):
+        schema_to_regex({"type": "object", "properties": {}})     # empty
+    with pytest.raises(SchemaError):
+        schema_to_regex({"type": "object",
+                         "properties": {"a": {"type": "integer"}},
+                         "required": []})                         # first optional
+    with pytest.raises(SchemaError):
+        schema_to_regex({"type": "object",
+                         "properties": {"a": {"type": "qux"}}})   # bad type
+
+
+# ---------------------------------------------------------------------------
+# constraint cache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_eviction(tok):
+    cache = ConstraintCache(capacity=2)
+    _, h1 = cache.get_or_compile(r"(ab)+", tok)
+    _, h2 = cache.get_or_compile(r"(ab)+", tok)
+    assert (h1, h2) == (False, True)
+    cache.get_or_compile(r"(ba)+", tok)
+    cache.get_or_compile(r"(cd)+", tok)       # evicts the LRU entry
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+    assert cache.stats.hits == 1 and cache.stats.misses == 3
+    assert cache.stats.compile_time_s > 0
+    # (ab)+ was evicted (LRU order: ba, cd)
+    _, h = cache.get_or_compile(r"(ab)+", tok)
+    assert not h
+
+
+def test_cache_key_includes_vocab_fingerprint(tok):
+    """The same pattern under a different tokenizer must be a separate entry."""
+    other = ByteTokenizer(merges=("ab", "ba"))
+    assert vocab_fingerprint(tok) != vocab_fingerprint(other)
+    cache = ConstraintCache()
+    e1, _ = cache.get_or_compile(r"(ab)+", tok)
+    e2, hit = cache.get_or_compile(r"(ab)+", other)
+    assert not hit and len(cache) == 2
+    # the automata genuinely differ: 'ab' is one token in `other`
+    assert e1.tokendfa.vocab_size != e2.tokendfa.vocab_size
+
+
+def test_cache_min_tokens(tok):
+    cache = ConstraintCache()
+    e, _ = cache.get_or_compile(r"(ab|ba)+", tok)
+    assert e.min_tokens == 2          # 'ab': two byte tokens (no such merge)
+    e2, _ = cache.get_or_compile(r"xyzw", tok)
+    assert e2.min_tokens == 4         # no merges: one byte per token
+    e3, _ = cache.get_or_compile(r"(is|ar)+", tok)
+    assert e3.min_tokens == 1         # 'is'/'ar' ARE single merge tokens
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+def test_qc_bucket():
+    assert qc_bucket(1) == 8
+    assert qc_bucket(8) == 8
+    assert qc_bucket(9) == 16
+    assert qc_bucket(100) == 128
+
+
+def _mk_sched(tok, n_slots=2, decode="dingo", max_blocks=4, block_size=4):
+    return ContinuousBatchingScheduler(
+        n_slots, ConstraintCache(), tok,
+        block_size=block_size, decode=decode, max_blocks=max_blocks,
+    )
+
+
+def test_scheduler_admission_order_and_slot_reuse(tok):
+    sched = _mk_sched(tok, n_slots=2)
+    reqs = [Request(f"p{i} ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=4)
+            for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    admitted, rejected = sched.admit()
+    assert not rejected
+    # FIFO: first two requests take slots 0, 1
+    assert [s.request.request_id for s in admitted] == [reqs[0].request_id,
+                                                        reqs[1].request_id]
+    assert sched.pending == 2 and sched.busy == 2
+    a2, _ = sched.admit()
+    assert a2 == []                    # no free slots
+    # retire slot 0 -> next request must land in slot 0
+    sched.release(admitted[0])
+    a3, _ = sched.admit()
+    assert len(a3) == 1 and a3[0].index == 0
+    assert a3[0].request.request_id == reqs[2].request_id
+
+
+def test_scheduler_rejects_infeasible(tok):
+    sched = _mk_sched(tok, n_slots=1, max_blocks=1, block_size=4)
+    # 20 mandatory bytes, no merges -> needs 20 tokens > 1 block of 4
+    sched.submit(Request("p ", Constraint.regex(r"[x]{20}"), max_new_tokens=4))
+    sched.submit(Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=4))
+    admitted, rejected = sched.admit()
+    assert len(rejected) == 1 and rejected[0][0].constraint.pattern == r"[x]{20}"
+    assert len(admitted) == 1          # the feasible one got the slot anyway
+
+
+def test_scheduler_dfa_state_threading(tok):
+    """record_block threads per-slot DINGO end states and retires on budget."""
+    sched = _mk_sched(tok, n_slots=2, decode="dingo", max_blocks=4, block_size=4)
+    r1 = Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=4)   # 1 block
+    r2 = Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16)  # 4 blocks
+    sched.submit(r1), sched.submit(r2)
+    (s1, s2), _ = sched.admit()
+    tables = sched.stacked_tables()
+    qb, cb = sched.bucket()
+    assert np.asarray(tables.cnext).shape == (2, qb, cb)
+    td = s1.entry.tokendfa
+    ab = tok.encode("abab")            # 2 merge tokens -> pad to block with eos
+    row = ab + [tok.eos_token_id] * (4 - len(ab))
+    q_end = td.run(row)
+    block = np.tile(np.asarray(row, np.int32), (2, 1))
+    finished = sched.record_block(
+        block, valid=np.ones(2, bool),
+        q_final=np.asarray([q_end, q_end], np.int32), steps=2,
+    )
+    # slot 1 had 1 block of budget -> retired; slot 2 (4 blocks) lives on,
+    # carrying its DFA end state into the next block's w0
+    assert [s.request.request_id for s in finished] == [r1.request_id]
+    assert s2.q_state == q_end
+    carry = sched.carry_batch()
+    assert carry.shape == (2, qb)
+    assert carry[s2.index].argmax() == q_end
+
+
+def test_scheduler_budget_live_tightens(tok):
+    """The last block's end-state set is exactly the accepting set."""
+    sched = _mk_sched(tok, n_slots=1, decode="dingo", max_blocks=2, block_size=4)
+    sched.submit(Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8))
+    (s,), _ = sched.admit()
+    td = s.entry.tokendfa
+    live0 = np.asarray(sched.stacked_tables().live)[0]
+    s.blocks_done = 1                  # entering the final block
+    sched._stacked_key = None
+    live1 = np.asarray(sched.stacked_tables().live)[0]
+    assert live1.sum() <= live0.sum()
+    np.testing.assert_array_equal(live1[: td.num_states], td.accepting)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end acceptance: mixed stream through the serving engine
+# ---------------------------------------------------------------------------
+def test_serving_mixed_stream_every_completion_matches(tok):
+    """ISSUE acceptance: >= 8 requests, >= 3 distinct constraints (JSON-Schema
+    + raw regex), served continuously; every constrained completion satisfies
+    its own constraint (decoder valid + host-side DFA and re.fullmatch), and
+    short requests retire while longer ones keep running."""
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    cache = ConstraintCache()
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=3, max_prompt_len=32,
+                        constraint_cache=cache)
+
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    js1 = schema_for_fields(synthetic.JSON_SCHEMAS[1][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.json_schema(js1), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+    ]
+    reqs = [Request(f"prompt {i}: ", c, max_new_tokens=m)
+            for i, (c, m) in enumerate(specs)]
+    by_id = {r.request_id: r for r in reqs}
+
+    done = list(eng.serve(reqs))
+    assert len(done) == len(reqs)
+    assert len({r.constraint.pattern for r in reqs}) >= 3
+
+    blocks_at_finish = {}
+    for order, c in enumerate(done):
+        req = by_id[c.request_id]
+        assert c.valid, (req.constraint.pattern, c.text)
+        assert c.matched, (req.constraint.pattern, c.text)
+        # host-side re-checks, independent of the engine's DFA bookkeeping
+        assert re.fullmatch(req.constraint.pattern, c.text), (
+            req.constraint.pattern, c.text)
+        if req.constraint.source == "json_schema":
+            json.loads(c.text)
+        blocks_at_finish[c.request_id] = (order, c.blocks)
+
+    # independent retirement: every 1-block request finished before any
+    # 4-block request (slots retire without waiting for slower neighbours)
+    short_orders = [o for rid, (o, b) in blocks_at_finish.items() if b == 1]
+    long_orders = [o for rid, (o, b) in blocks_at_finish.items() if b >= 4]
+    assert short_orders and long_orders
+    assert max(short_orders) < max(long_orders)
+
+    # the cache amortized the 4 distinct constraints across 8 requests
+    assert cache.stats.misses <= 5     # 4 constraints + placeholder
+    assert cache.stats.hits >= len(reqs) - cache.stats.misses
+
+
+def test_serving_unconstrained_and_rejection(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=8, block_size=8, diffusion_steps_per_block=2,
+                       decode="dingo")
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=2, max_prompt_len=16)
+    reqs = [
+        Request("a ", Constraint.none(), max_new_tokens=8),
+        Request("b ", Constraint.regex(r"[x]{50}"), max_new_tokens=8),  # infeasible
+        Request("c ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8),
+    ]
+    done = {c.request_id: c for c in eng.serve(reqs)}
+    assert len(done) == 3
+    assert done[reqs[0].request_id].matched is None      # unconstrained
+    rej = done[reqs[1].request_id]
+    assert not rej.valid and rej.blocks == 0 and "rejected" in rej.metadata
+    assert done[reqs[2].request_id].matched

@@ -1,0 +1,95 @@
+"""pad_tables / stack_tables edge cases — the heterogeneous-batch table
+contract the serving scheduler's (Q, C) buckets rely on: padding states are
+dead and unreachable, real mask-transition edges survive padding, undersized
+pads are rejected, and the DP is invariant to padding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    NEG_INF,
+    build_token_dfa,
+    compile_pattern,
+    dingo_decode,
+    pad_tables,
+    stack_tables,
+    tables_from_tokendfa,
+)
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def _td(tok, pattern):
+    return build_token_dfa(
+        compile_pattern(pattern), tok.token_bytes,
+        mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+
+
+def test_pad_rejects_undersized(tok):
+    td = _td(tok, r"(ab|ba)+")
+    q, c = td.num_states, td.num_classes
+    with pytest.raises(ValueError):
+        pad_tables(td, q - 1, c + 4)
+    with pytest.raises(ValueError):
+        pad_tables(td, q + 4, c - 1)
+
+
+def test_padding_states_are_dead(tok):
+    td = _td(tok, r"(ab|ba)+")
+    q, c = td.num_states, td.num_classes
+    qp, cp = q + 5, c + 3
+    t = pad_tables(td, qp, cp)
+    cnext = np.asarray(t.cnext)
+    live = np.asarray(t.live)
+    # padding states: never live, and every class routes them to the dead sink
+    assert not live[q:].any()
+    assert (cnext[q:, :] == td.dead).all()
+    # padding classes route every state (real or padding) to the dead sink
+    assert (cnext[:, c:] == td.dead).all()
+    # class ids stay within the real class range: padding classes unreachable
+    assert int(np.asarray(t.class_id).max()) < c
+
+
+def test_mask_edges_survive_padding(tok):
+    td = _td(tok, r"(ab|ba)+")
+    q = td.num_states
+    t = pad_tables(td, q + 7, td.num_classes + 2)
+    mr = np.asarray(t.mask_reach)
+    np.testing.assert_array_equal(mr[:q, :q], td.mask_reach)
+    # no mask edge may enter or leave a padding state
+    assert not mr[q:, :].any()
+    assert not mr[:, q:].any()
+
+
+def test_stack_mismatched_shapes_pad_to_max(tok):
+    tds = [_td(tok, p) for p in (r"(ab)+", r"\((a|b)+\)", r"[0-9]{1,4}")]
+    t = stack_tables(tds)
+    qs = [td.num_states for td in tds]
+    cs = [td.num_classes for td in tds]
+    assert t.cnext.shape == (3, max(qs), max(cs))
+    assert t.mask_reach.shape == (3, max(qs), max(qs))
+    # each row's live count matches its own (unpadded) automaton
+    for i, td in enumerate(tds):
+        assert int(np.asarray(t.live)[i].sum()) == int(td.live.sum())
+
+
+def test_dingo_invariant_to_padding(tok, rng):
+    """Padding must not change the decoded string, validity, or end state."""
+    td = _td(tok, r"(ab|ba)+")
+    base = tables_from_tokendfa(td)
+    padded = pad_tables(td, td.num_states + 9, td.num_classes + 5)
+    d, v = 6, tok.vocab_size
+    logp = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    r0 = dingo_decode(logp, base)
+    w0 = jnp.where(jnp.arange(padded.cnext.shape[0]) == td.start, 0.0, NEG_INF)
+    r1 = dingo_decode(logp, padded, w0)
+    np.testing.assert_array_equal(np.asarray(r0.tokens), np.asarray(r1.tokens))
+    assert bool(r0.valid) == bool(r1.valid)
+    assert int(r0.q_final) == int(r1.q_final)
+    np.testing.assert_allclose(float(r0.logprob), float(r1.logprob), rtol=1e-6)

@@ -23,6 +23,8 @@ from repro.training import (
     make_train_step,
 )
 
+pytestmark = pytest.mark.slow  # heavy e2e: excluded from the quick CI job
+
 
 def test_cosine_schedule_shape():
     tcfg = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
