@@ -30,6 +30,7 @@ from repro.tokenizer import default_tokenizer
 from .common import emit
 
 BENCH_JSON = "experiments/BENCH_serving.json"
+BENCH_PAGED_JSON = "experiments/BENCH_paged.json"
 
 
 def _stream(n: int, gen_len: int):
@@ -78,6 +79,70 @@ def _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots):
     )
 
 
+def _kv_bytes(eng) -> int:
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(eng.caches)))
+
+
+def _drive_peak(eng, reqs):
+    """Serve ``reqs`` block by block, tracking peak concurrently-resident
+    slots. step_block retires finished slots before returning, so residency
+    DURING the block is busy-after plus the slots that retired in it (block
+    completions; admission-time rejections report blocks == 0 and never held
+    a slot)."""
+    for r in reqs:
+        eng.submit(r)
+    done, peak = [], 0
+    t0 = time.perf_counter()
+    while eng.sched.pending or eng.sched.busy:
+        blk = eng.step_block()
+        done.extend(blk)
+        resident = eng.sched.busy + sum(1 for c in blk if c.blocks > 0)
+        peak = max(peak, resident)
+    return done, peak, time.perf_counter() - t0
+
+
+def _paged_compare(params, cfg, scfg, tok, n_requests):
+    """Fixed cache-HBM comparison: a dense grid of 4 slots vs a paged pool of
+    the SAME byte budget serving a 16-slot grid — the paged layout packs each
+    request's actual span (prompt pages + its own budget) instead of
+    provisioning every slot for the worst case, so >= 2x more requests are
+    resident at once on heterogeneous streams."""
+    short = [Request(f"short {i} ", Constraint.regex(r"(ab|ba)+"),
+                     max_new_tokens=16, metadata={"kind": "regex"})
+             for i in range(n_requests)]
+
+    dense = ServingEngine(params, cfg, scfg, tok, n_slots=4,
+                          max_prompt_len=32, kv_layout="dense")
+    dense_bytes = _kv_bytes(dense)
+    d_done, d_peak, d_wall = _drive_peak(dense, [dataclasses.replace(r) for r in short])
+
+    page_size = 8
+    pages_budget = 4 * (dense.max_len // page_size) + 1   # dense-parity HBM
+    paged = ServingEngine(params, cfg, scfg, tok, n_slots=16,
+                          max_prompt_len=32, kv_layout="paged",
+                          page_size=page_size, n_pages=pages_budget)
+    paged_bytes = _kv_bytes(paged)
+    p_done, p_peak, p_wall = _drive_peak(paged, short)
+
+    return {
+        "dense": dict(n_slots=4, kv_bytes=dense_bytes,
+                      bytes_per_slot=dense_bytes // 4,
+                      peak_resident_slots=d_peak, n_done=len(d_done),
+                      wall_s=d_wall),
+        "paged": dict(n_slots=16, page_size=page_size, n_pages=pages_budget,
+                      kv_bytes=paged_bytes,
+                      bytes_per_resident_slot=paged_bytes // max(1, p_peak),
+                      peak_resident_slots=p_peak, n_done=len(p_done),
+                      wall_s=p_wall,
+                      pool_highwater_pages=paged.pool.stats.highwater,
+                      pool_reserve_fails=paged.pool.stats.reserve_fails),
+        "hbm_parity": paged_bytes <= 1.1 * dense_bytes,
+        "slot_gain_x": p_peak / max(1, d_peak),
+        "paged_2x_slots_at_fixed_hbm": (p_peak >= 2 * d_peak
+                                        and paged_bytes <= 1.1 * dense_bytes),
+    }
+
+
 def run(quick: bool = True) -> None:
     tok = default_tokenizer()
     cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
@@ -106,6 +171,22 @@ def run(quick: bool = True) -> None:
          f"{len(cache._entries)} patterns")
     emit("serving_compile_warm", warm["compile_s"] * 1e6,
          f"{amortized}; hit_rate {cache.stats.hit_rate:.2f}")
+
+    paged = _paged_compare(params, cfg, scfg, tok, n_requests=16)
+    emit("serving_paged_slots", 1e6 / max(paged["slot_gain_x"], 1e-9),
+         f"{paged['paged']['peak_resident_slots']} resident paged vs "
+         f"{paged['dense']['peak_resident_slots']} dense at fixed HBM "
+         f"({paged['slot_gain_x']:.1f}x)")
+    os.makedirs(os.path.dirname(BENCH_PAGED_JSON), exist_ok=True)
+    with open(BENCH_PAGED_JSON, "w") as f:
+        json.dump({
+            "bench": "paged_kv",
+            "created_unix": time.time(),
+            "config": dict(gen_len=scfg.gen_len, block=scfg.block_size,
+                           steps_per_block=scfg.diffusion_steps_per_block,
+                           decode=scfg.decode, quick=quick),
+            **paged,
+        }, f, indent=1)
 
     os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
     with open(BENCH_JSON, "w") as f:

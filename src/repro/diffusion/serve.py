@@ -18,7 +18,7 @@ from repro.core import NEG_INF, DingoTables
 from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.core.dingo import dingo_decode
 from repro.core.greedy import greedy_decode
-from repro.models import ModelInputs, forward
+from repro.models import ModelInputs, forward, with_page_tables
 
 from .remask import confidence, select_commits
 
@@ -57,14 +57,19 @@ def make_serve_step(
     offsets (continuous-batching slots at heterogeneous positions).
     ``tables_arg`` may carry a leading batch axis (``stack_tables`` — one
     constraint per slot); ``n_commit_arg`` overrides the static commit count
-    with a traced scalar so one compiled step serves every schedule point."""
+    with a traced scalar so one compiled step serves every schedule point.
+    ``page_tables_arg`` (paged KV serving) is the (B, max_pages) slot→page
+    mapping for this block; it is installed into every paged cache leaf before
+    the forward so the attention gather reads each slot's current pages."""
     method = scfg.decode
     impl = scfg.kernel_impl
 
     def serve_step(params, caches, block_tokens, committed, w0, start, rng,
-                   tables_arg=None, n_commit_arg=None):
+                   tables_arg=None, n_commit_arg=None, page_tables_arg=None):
         tables_in = tables_arg if tables_arg is not None else tables
         n_commit_in = n_commit_arg if n_commit_arg is not None else n_commit
+        if page_tables_arg is not None:
+            caches = with_page_tables(caches, page_tables_arg)
         t_ax = 0 if (tables_in is not None and tables_in.cnext.ndim == 3) else None
         b, d = block_tokens.shape
         base = start + jnp.arange(d, dtype=jnp.int32)[None]

@@ -61,6 +61,104 @@ def _kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(
+    pt_ref, len_ref,                       # scalar-prefetch: (B, P) page table, (B,) lengths
+    q_ref, k_ref, v_ref,                   # tiles per (b, kv_head, page)
+    o_ref, m_ref, l_ref, acc_ref,
+    *, page_size: int, scale: float
+):
+    b_idx = pl.program_id(0)
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)        # (page_size, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)        # (page_size, Dh)
+    g = q.shape[0]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (G, page_size)
+    # logical position of this page's tokens; trash-page rows (unallocated
+    # table entries) always sit at/after the slot's length and mask to -inf
+    pos = p_idx * page_size + jax.lax.broadcasted_iota(jnp.int32, (g, page_size), 1)
+    scores = jnp.where(pos < len_ref[b_idx], scores, NEG_INF)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, scores.max(axis=1))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_idx == pl.num_programs(2) - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,            # (B, H, Dh)
+    k_pool: jax.Array,       # (n_pages, page_size, KVH, Dh) shared pool
+    v_pool: jax.Array,       # (n_pages, page_size, KVH, Dh)
+    page_table: jax.Array,   # (B, P) int32 physical page per logical span
+    lengths: jax.Array,      # (B,) valid logical prefix length
+    *,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    """Paged flash-decoding: the page table is a scalar-prefetch operand, so
+    each (batch, kv-head, page) grid step DMAs exactly its slot's physical
+    page from the shared pool — the gathered (B, P·page_size) cache view is
+    never materialized in HBM. Same online-softmax accumulators as the dense
+    kernel; logical positions past ``lengths`` (including every trash-page
+    tile) are masked."""
+    b, h, dh = q.shape
+    ps, kvh = k_pool.shape[1], k_pool.shape[2]
+    n_tables = page_table.shape[1]
+    g = h // kvh
+    if scale is None:
+        scale = dh ** -0.5
+
+    qg = q.reshape(b, kvh, g, dh)
+    kt = jnp.moveaxis(k_pool, 2, 1)   # (n_pages, KVH, ps, Dh)
+    vt = jnp.moveaxis(v_pool, 2, 1)
+
+    grid = (b, kvh, n_tables)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda bi, ki, pi, pt, ln: (pt[bi, pi], ki, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda bi, ki, pi, pt, ln: (pt[bi, pi], ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, page_size=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, dh)
+
+
 def decode_attention_pallas(
     q: jax.Array,           # (B, H, Dh)
     k: jax.Array,           # (B, S, KVH, Dh)

@@ -61,7 +61,9 @@ def run_server(args, cfg, tok, params):
     )
     cache = ConstraintCache()
     eng = ServingEngine(params, cfg, scfg, tok, n_slots=args.slots,
-                        max_prompt_len=64, constraint_cache=cache)
+                        max_prompt_len=64, constraint_cache=cache,
+                        kv_layout="paged" if args.paged else "dense",
+                        page_size=args.page_size)
     reqs = _demo_stream(args, args.requests)
     t0 = time.time()
     for c in eng.serve(reqs):
@@ -91,6 +93,11 @@ def main():
                     help="continuous-batching server over a request stream")
     ap.add_argument("--requests", type=int, default=8, help="--server stream size")
     ap.add_argument("--slots", type=int, default=4, help="--server batch slots")
+    ap.add_argument("--paged", action="store_true",
+                    help="--server paged KV cache (shared page pool + per-slot "
+                         "page tables) instead of the dense per-slot grid")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page under --paged")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)

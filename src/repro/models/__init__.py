@@ -1,3 +1,15 @@
-from .transformer import ModelInputs, forward, init_caches, init_model, mtp_logits, segments
+from .transformer import (
+    ModelInputs,
+    forward,
+    init_caches,
+    init_model,
+    init_paged_caches,
+    mtp_logits,
+    segments,
+    with_page_tables,
+)
 
-__all__ = ["ModelInputs", "forward", "init_caches", "init_model", "mtp_logits", "segments"]
+__all__ = [
+    "ModelInputs", "forward", "init_caches", "init_model", "init_paged_caches",
+    "mtp_logits", "segments", "with_page_tables",
+]

@@ -26,6 +26,31 @@ class KVCache(NamedTuple):
     length: jax.Array   # (B,) valid prefix length
 
 
+class PagedKVCache(NamedTuple):
+    """Paged serving cache: one shared page pool + per-slot page tables.
+
+    Logical position ``i`` of slot ``b`` lives at
+    ``pool[page_table[b, i // page_size], i % page_size]``. Unallocated table
+    entries point at physical page 0 (the trash page — see
+    ``repro.serving.paged``); their content is garbage and is always masked
+    out by ``length``. HBM is sized by ``n_pages``, i.e. aggregate live
+    tokens, not by slots × worst-case length like the dense grid."""
+
+    k: jax.Array            # (n_pages, page_size, KV, Dh) shared pool
+    v: jax.Array            # (n_pages, page_size, KV, Dh)
+    page_table: jax.Array   # (B, max_pages) int32 physical page ids
+    length: jax.Array       # (B,) valid logical prefix length
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def logical_len(self) -> int:
+        """Max addressable tokens per slot (page-table width × page size)."""
+        return self.page_table.shape[-1] * self.k.shape[1]
+
+
 def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
     d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 4)
@@ -219,7 +244,11 @@ def attn_apply(
         # decode: attend the (possibly sequence-sharded) prefix cache and the
         # block SEPARATELY and merge flash-decoding style — concatenating
         # would break the cache sharding and replicate gigabytes (DESIGN.md §4.5)
-        t = cache.k.shape[1]
+        if isinstance(cache, PagedKVCache):
+            ck, cv = paged_gather(cache)
+        else:
+            ck, cv = cache.k, cache.v
+        t = ck.shape[1]
         kpos_cache = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
         kv_valid = kpos_cache < cache.length[:, None]
         # decode queries are one block (<=32): cache attention is a single DENSE
@@ -227,7 +256,7 @@ def attn_apply(
         # sequence-sharded cache's shard boundaries and forces an all-to-all
         # reshard of the whole cache every layer (§Perf iteration 2)
         part_cache = mha(
-            q, cache.k, cache.v, qpos_abs, kpos_cache,
+            q, ck, cv, qpos_abs, kpos_cache,
             window=window, kv_valid=kv_valid, chunk=max(t, cfg.attn_chunk),
             return_stats=True,
         )
@@ -251,13 +280,15 @@ def cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
     )
 
 
-def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
+def cache_append(cache, k_new, v_new):
     """Commit a block's K/V at each row's current length offset.
 
     Lengths may differ per batch row (continuous-batching serving: slots are at
     different absolute positions); the per-row dynamic_update_slice is vmapped
     over the batch, which reduces to the old single-slice write when lengths
     are uniform (one-shot batch generation)."""
+    if isinstance(cache, PagedKVCache):
+        return paged_cache_append(cache, k_new, v_new)
     s = k_new.shape[1]
 
     def _row(buf, new, start):
@@ -266,3 +297,72 @@ def cache_append(cache: KVCache, k_new, v_new) -> KVCache:
     k = jax.vmap(_row)(cache.k, k_new, cache.length)
     v = jax.vmap(_row)(cache.v, v_new, cache.length)
     return KVCache(k=k, v=v, length=cache.length + s)
+
+
+# ---------------------------------------------------------------------------
+# paged cache ops (serving: shared page pool + per-slot page tables)
+# ---------------------------------------------------------------------------
+def paged_cache_init(
+    cfg: ModelConfig, batch: int, n_pages: int, page_size: int, max_pages: int, dtype
+) -> PagedKVCache:
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return PagedKVCache(
+        k=jnp.zeros((n_pages, page_size, kv, dh), dtype),
+        v=jnp.zeros((n_pages, page_size, kv, dh), dtype),
+        page_table=jnp.zeros((batch, max_pages), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def pool_gather(pool, page_table):
+    """(B, max_pages·page_size, *tail) logical view of a shared page pool
+    (n_pages, page_size, *tail) through per-slot page tables. Logical order
+    is preserved (table entry j covers positions [j·ps, (j+1)·ps)); the
+    output is transient — HBM residency stays with the pool."""
+    b, p = page_table.shape
+    ps = pool.shape[1]
+    return pool[page_table].reshape(b, p * ps, *pool.shape[2:])
+
+
+def pool_scatter(pool, new, flat):
+    """Write (B, s, *tail) entries into the pool at (B, s) flat token indices
+    (from :func:`_paged_scatter_indices`)."""
+    n_pages, ps = pool.shape[:2]
+    tail = pool.shape[2:]
+    flat_pool = pool.reshape(n_pages * ps, *tail)
+    flat_pool = flat_pool.at[flat.reshape(-1)].set(
+        new.astype(pool.dtype).reshape(-1, *tail)
+    )
+    return flat_pool.reshape(pool.shape)
+
+
+def paged_gather(cache: PagedKVCache):
+    """Each slot's logical KV view from the pool; garbage from trash-page
+    entries is masked downstream by ``length``."""
+    return (pool_gather(cache.k, cache.page_table),
+            pool_gather(cache.v, cache.page_table))
+
+
+def _paged_scatter_indices(page_table, length, s: int, page_size: int):
+    """(B, s) flat pool-token indices for appending ``s`` tokens per row at
+    each row's current length. Rows whose table entries are unallocated (0)
+    land in the trash page; page indices are clamped into the table."""
+    max_pages = page_table.shape[1]
+    pos = length[:, None] + jnp.arange(s, dtype=jnp.int32)[None]      # (B, s)
+    page_idx = jnp.minimum(pos // page_size, max_pages - 1)
+    phys = jnp.take_along_axis(page_table, page_idx, axis=1)          # (B, s)
+    return phys * page_size + pos % page_size
+
+
+def paged_cache_append(cache: PagedKVCache, k_new, v_new) -> PagedKVCache:
+    """Commit a block's K/V through the page table at each row's length.
+    Distinct live rows write disjoint pages (unique page ownership); only
+    trash-page writes may collide, and those are never read valid."""
+    s = k_new.shape[1]
+    flat = _paged_scatter_indices(cache.page_table, cache.length, s, cache.page_size)
+    return PagedKVCache(
+        k=pool_scatter(cache.k, k_new, flat),
+        v=pool_scatter(cache.v, v_new, flat),
+        page_table=cache.page_table,
+        length=cache.length + s,
+    )

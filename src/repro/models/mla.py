@@ -33,6 +33,25 @@ class MLACache(NamedTuple):
     length: jax.Array   # (B,)
 
 
+class PagedMLACache(NamedTuple):
+    """Paged latent cache: shared (c_kv, k_rope) page pools + per-slot page
+    tables (same layout contract as ``attention.PagedKVCache`` — page 0 is
+    the trash page, ``length`` masks everything unwritten)."""
+
+    c_kv: jax.Array         # (n_pages, page_size, kv_lora) shared pool
+    k_rope: jax.Array       # (n_pages, page_size, rope_dim)
+    page_table: jax.Array   # (B, max_pages) int32
+    length: jax.Array       # (B,)
+
+    @property
+    def page_size(self) -> int:
+        return self.c_kv.shape[1]
+
+    @property
+    def logical_len(self) -> int:
+        return self.page_table.shape[-1] * self.c_kv.shape[1]
+
+
 def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
     m = cfg.mla
     d, h = cfg.d_model, cfg.num_heads
@@ -94,9 +113,11 @@ def mla_expanded(p, x, cfg: ModelConfig, positions, cache: MLACache | None = Non
     return out, new_cache
 
 
-def mla_cache_append(cache: MLACache, c_kv_new, k_rope_new) -> MLACache:
+def mla_cache_append(cache, c_kv_new, k_rope_new):
     """Append a span's latents at each row's current length offset (per-row
     lengths: continuous-batching slots sit at different absolute positions)."""
+    if isinstance(cache, PagedMLACache):
+        return paged_mla_cache_append(cache, c_kv_new, k_rope_new)
     s = c_kv_new.shape[1]
 
     def _row(buf, new, start):
@@ -105,6 +126,28 @@ def mla_cache_append(cache: MLACache, c_kv_new, k_rope_new) -> MLACache:
     return MLACache(
         c_kv=jax.vmap(_row)(cache.c_kv, c_kv_new, cache.length),
         k_rope=jax.vmap(_row)(cache.k_rope, k_rope_new, cache.length),
+        length=cache.length + s,
+    )
+
+
+def paged_mla_gather(cache: PagedMLACache):
+    """(B, max_pages·page_size, r) / (B, ·, dr) logical latent views from the
+    shared pools (see ``attention.pool_gather`` for the layout contract)."""
+    from .attention import pool_gather
+
+    return (pool_gather(cache.c_kv, cache.page_table),
+            pool_gather(cache.k_rope, cache.page_table))
+
+
+def paged_mla_cache_append(cache: PagedMLACache, c_kv_new, k_rope_new) -> PagedMLACache:
+    from .attention import _paged_scatter_indices, pool_scatter
+
+    s = c_kv_new.shape[1]
+    flat = _paged_scatter_indices(cache.page_table, cache.length, s, cache.page_size)
+    return PagedMLACache(
+        c_kv=pool_scatter(cache.c_kv, c_kv_new, flat),
+        k_rope=pool_scatter(cache.k_rope, k_rope_new, flat),
+        page_table=cache.page_table,
         length=cache.length + s,
     )
 
@@ -128,11 +171,15 @@ def mla_absorbed(
 
     q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)   # (B,S,H,r)
 
-    t = cache.c_kv.shape[1]
+    if isinstance(cache, PagedMLACache):
+        cache_c, cache_r = paged_mla_gather(cache)
+    else:
+        cache_c, cache_r = cache.c_kv, cache.k_rope
+    t = cache_c.shape[1]
     kpos = jnp.arange(t, dtype=jnp.int32)[None]
     valid = jnp.broadcast_to(kpos, (b, t)) < cache.length[:, None]
-    c_all = jnp.concatenate([cache.c_kv, c_kv_blk], axis=1)       # (B,T+S,r)
-    r_all = jnp.concatenate([cache.k_rope, k_rope_blk], axis=1)   # (B,T+S,dr)
+    c_all = jnp.concatenate([cache_c, c_kv_blk], axis=1)          # (B,T+S,r)
+    r_all = jnp.concatenate([cache_r, k_rope_blk], axis=1)        # (B,T+S,dr)
     c_all = constrain(c_all, "batch", "kvseq", None)
     r_all = constrain(r_all, "batch", "kvseq", None)
     valid_all = jnp.concatenate([valid, jnp.ones((b, s), bool)], axis=1)
@@ -168,5 +215,17 @@ def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype) -> MLACach
     return MLACache(
         c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def paged_mla_cache_init(
+    cfg: ModelConfig, batch: int, n_pages: int, page_size: int, max_pages: int, dtype
+) -> PagedMLACache:
+    m = cfg.mla
+    return PagedMLACache(
+        c_kv=jnp.zeros((n_pages, page_size, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((n_pages, page_size, m.qk_rope_head_dim), dtype),
+        page_table=jnp.zeros((batch, max_pages), jnp.int32),
         length=jnp.zeros((batch,), jnp.int32),
     )

@@ -287,3 +287,49 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> list:
         )
         out.append(stacked)
     return out
+
+
+def init_paged_caches(
+    cfg: ModelConfig, batch: int, n_pages: int, page_size: int, max_pages: int,
+    dtype=None,
+) -> list:
+    """Paged-serving caches in the same per-segment scan layout: attention/MLA
+    layers get a shared (n_pages, page_size, ...) pool + per-slot page tables;
+    SSM caches are per-slot fixed-size state and stay dense."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    out = []
+    for period, count in segments(cfg):
+        def one(_):
+            items = []
+            for kind, _m in period:
+                if kind == "ssm":
+                    items.append(mamba2.ssm_cache_init(cfg, batch, dtype))
+                elif cfg.mla is not None:
+                    items.append(mla.paged_mla_cache_init(
+                        cfg, batch, n_pages, page_size, max_pages, dtype))
+                else:
+                    items.append(attention.paged_cache_init(
+                        cfg, batch, n_pages, page_size, max_pages, dtype))
+            return tuple(items)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[one(i) for i in range(count)]
+        )
+        out.append(stacked)
+    return out
+
+
+def with_page_tables(caches, page_table) -> list:
+    """Install one (B, max_pages) page table into every paged cache leaf
+    (broadcast over the stacked layer axis). The table is host-maintained by
+    the serving engine's :class:`~repro.serving.paged.PagePool` and threaded
+    through ``serve_step``/commit each block; non-paged leaves pass through."""
+    pt = jnp.asarray(page_table, jnp.int32)
+
+    def one(c):
+        if isinstance(c, (attention.PagedKVCache, mla.PagedMLACache)):
+            return c._replace(
+                page_table=jnp.broadcast_to(pt[None], c.page_table.shape)
+            )
+        return c
+
+    return [tuple(one(c) for c in seg) for seg in caches]

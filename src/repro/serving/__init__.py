@@ -5,18 +5,22 @@ Layers:
     types      Request / Completion / Constraint (regex or JSON-Schema spec)
     schema     JSON-Schema -> regex frontend (JSON-Mode-Eval workload)
     cache      LRU compiled-constraint cache keyed by (pattern, vocab fp)
+    paged      fixed-size KV page allocator (reserve/alloc, trash page 0)
     scheduler  slot-based continuous batching, (Q, C)-bucketed table stacking
     engine     serve loop driving make_serve_step; yields completions
+               (kv_layout='dense' per-slot grid or 'paged' shared page pool)
 """
 from .cache import CacheStats, CompiledConstraint, ConstraintCache, vocab_fingerprint
 from .engine import ServingEngine
+from .paged import PagePool, PagesExhausted, PoolStats
 from .schema import SchemaError, schema_for_fields, schema_to_regex
 from .scheduler import ContinuousBatchingScheduler, Slot, qc_bucket
 from .types import Completion, Constraint, Request
 
 __all__ = [
     "CacheStats", "CompiledConstraint", "ConstraintCache", "vocab_fingerprint",
-    "ServingEngine", "SchemaError", "schema_for_fields", "schema_to_regex",
+    "ServingEngine", "PagePool", "PagesExhausted", "PoolStats",
+    "SchemaError", "schema_for_fields", "schema_to_regex",
     "ContinuousBatchingScheduler", "Slot", "qc_bucket",
     "Completion", "Constraint", "Request",
 ]

@@ -126,12 +126,15 @@ class ConstraintCache:
         return (pattern, vocab_fingerprint(tokenizer))
 
     def lookup(self, pattern: str, tokenizer) -> Optional[CompiledConstraint]:
-        """Peek without compiling (still counts as a hit and refreshes LRU)."""
+        """Peek without compiling. Counts as a hit (and refreshes LRU) when
+        present, as a miss when absent — every lookup lands in the stats."""
         key = self.key_for(pattern, tokenizer)
         entry = self._entries.get(key)
         if entry is not None:
             self._entries.move_to_end(key)
             self.stats.hits += 1
+        else:
+            self.stats.misses += 1
         return entry
 
     def get_or_compile(self, pattern: str, tokenizer) -> Tuple[CompiledConstraint, bool]:

@@ -19,6 +19,17 @@ prefills its prompt at positions [0, m) of its *own* cache row and generates
 from there, while its neighbours keep extending theirs — the per-row
 ``cache_append`` and per-row ``kv_valid`` make rows fully independent.
 
+Two KV layouts (``kv_layout``):
+
+  * ``"dense"`` — a private (max_prompt_len + max_blocks*d) cache row per
+    slot; HBM = n_slots x worst case.
+  * ``"paged"`` — one shared page pool + per-slot page tables
+    (docs/SERVING.md): admission reserves a request's worst-case page span,
+    the engine allocates one block ahead, retirement returns pages. At
+    dense-parity pool size the layouts are token-identical (the differential
+    harness in tests/test_paged_equivalence.py pins this); smaller pools
+    oversubscribe the grid and park queued requests on page pressure.
+
 ``serve()`` is a generator yielding completions as they finish (async-style:
 submit more work between blocks via ``submit()``).
 """
@@ -35,9 +46,18 @@ from repro.config import ModelConfig, ServeConfig
 from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.diffusion.schedule import unmask_counts
 from repro.diffusion.serve import make_serve_step
-from repro.models import ModelInputs, forward, init_caches
+from repro.models import (
+    ModelInputs,
+    attention,
+    forward,
+    init_caches,
+    init_paged_caches,
+    mla,
+    with_page_tables,
+)
 
 from .cache import ConstraintCache
+from .paged import PagePool
 from .scheduler import ContinuousBatchingScheduler, Slot
 from .types import Completion, Request
 
@@ -61,9 +81,14 @@ class ServingEngine:
         prompt_pad: int = 16,
         constraint_cache: Optional[ConstraintCache] = None,
         seed: int = 0,
+        kv_layout: str = "dense",
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
     ):
         if cfg.frontend is not None:
             raise ValueError("serving engine drives text-only models")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', got {kv_layout!r}")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -75,14 +100,38 @@ class ServingEngine:
         d = scfg.block_size
         self.max_blocks = max(1, -(-scfg.gen_len // d))
         self.max_len = self.max_prompt_len + self.max_blocks * d
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        if kv_layout == "paged":
+            # page-align the logical per-slot span; the shared pool defaults
+            # to dense parity (n_slots × pages_per_slot + trash page) — pass a
+            # smaller n_pages to oversubscribe slots against real HBM
+            self.pages_per_slot = -(-self.max_len // page_size)
+            self.max_len = self.pages_per_slot * page_size
+            self.pool: Optional[PagePool] = PagePool(
+                n_pages if n_pages is not None
+                else n_slots * self.pages_per_slot + 1,
+                page_size,
+            )
+            self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        else:
+            self.pool = None
+            self.page_table = None
         self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
         self.sched = ContinuousBatchingScheduler(
             n_slots, self.cache, tokenizer,
             block_size=d, decode=scfg.decode, max_blocks=self.max_blocks,
+            page_pool=self.pool,
+            prompt_len_fn=self._prompt_len if self.pool is not None else None,
         )
         self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
         self._rng = jax.random.PRNGKey(seed)
-        self.caches = init_caches(cfg, n_slots, self.max_len)
+        if kv_layout == "paged":
+            self.caches = init_paged_caches(
+                cfg, n_slots, self.pool.n_pages, page_size, self.pages_per_slot
+            )
+        else:
+            self.caches = init_caches(cfg, n_slots, self.max_len)
         self.blocks_run = 0
 
         cfg_ = cfg
@@ -101,7 +150,9 @@ class ServingEngine:
             return caches
 
         @jax.jit
-        def commit_block(params, caches, block_tokens, starts):
+        def commit_block(params, caches, block_tokens, starts, page_tables=None):
+            if page_tables is not None:
+                caches = with_page_tables(caches, page_tables)
             b, s = block_tokens.shape
             pos = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
             if cfg_.rope_type == "mrope":
@@ -119,13 +170,55 @@ class ServingEngine:
                 lambda b_, s_: b_.at[:, idx].set(s_[:, 0]), big, small
             )
 
+        ps_ = page_size
+
+        @jax.jit
+        def scatter_slot_paged(big, small, idx, pages_row, mp):
+            # big: paged caches; small: batch-1 DENSE prefill caches over the
+            # page-aligned max_len. Each table entry j takes the dense span
+            # [j·ps, (j+1)·ps); unallocated entries (0) dump into the trash
+            # page, so writing the full row is safe and shape-static.
+            def put(pool, dense):
+                layers, p = pool.shape[0], pages_row.shape[0]
+                rows = dense[:, 0].reshape(layers, p, ps_, *dense.shape[3:])
+                return pool.at[:, pages_row].set(rows.astype(pool.dtype))
+
+            def one(bc, sc):
+                if isinstance(bc, attention.PagedKVCache):
+                    return attention.PagedKVCache(
+                        k=put(bc.k, sc.k), v=put(bc.v, sc.v),
+                        page_table=bc.page_table.at[:, idx].set(pages_row),
+                        length=bc.length.at[:, idx].set(mp),
+                    )
+                if isinstance(bc, mla.PagedMLACache):
+                    return mla.PagedMLACache(
+                        c_kv=put(bc.c_kv, sc.c_kv),
+                        k_rope=put(bc.k_rope, sc.k_rope),
+                        page_table=bc.page_table.at[:, idx].set(pages_row),
+                        length=bc.length.at[:, idx].set(mp),
+                    )
+                # SSM state: per-slot and fixed-size, plain row scatter
+                return jax.tree_util.tree_map(
+                    lambda b_, s_: b_.at[:, idx].set(s_[:, 0]), bc, sc
+                )
+
+            return [tuple(one(b_, s_) for b_, s_ in zip(bseg, sseg))
+                    for bseg, sseg in zip(big, small)]
+
         self._prefill1 = prefill1
         self._commit_block = commit_block
         self._scatter_slot = scatter_slot
+        self._scatter_slot_paged = scatter_slot_paged
 
     # ---- request intake --------------------------------------------------
     def submit(self, request: Request) -> int:
         return self.sched.submit(request)
+
+    def _prompt_len(self, request: Request) -> int:
+        """Padded prompt length (the prompt-bucket rule; also the page-span
+        base the scheduler reserves against under paged KV)."""
+        ids = self.tok.encode(request.prompt)
+        return min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
 
     # ---- admission: prompt prefill into the slot's cache row -------------
     def _admit(self) -> List[Completion]:
@@ -139,9 +232,19 @@ class ServingEngine:
             row[0, mp - len(ids):] = ids      # left-pad: generation starts at mp
             small = init_caches(self.cfg, 1, self.max_len)
             small = self._prefill1(self.params, small, jnp.asarray(row))
-            self.caches = self._scatter_slot(
-                self.caches, small, jnp.asarray(slot.index, jnp.int32)
-            )
+            if self.pool is not None:
+                prow = np.zeros((self.pages_per_slot,), np.int32)
+                pages = self.pool.alloc(slot.index, -(-mp // self.page_size))
+                prow[: len(pages)] = pages
+                self.page_table[slot.index] = prow
+                self.caches = self._scatter_slot_paged(
+                    self.caches, small, jnp.asarray(slot.index, jnp.int32),
+                    jnp.asarray(prow), jnp.asarray(mp, jnp.int32),
+                )
+            else:
+                self.caches = self._scatter_slot(
+                    self.caches, small, jnp.asarray(slot.index, jnp.int32)
+                )
             slot.pos = mp
         now = time.perf_counter()
         return [
@@ -150,11 +253,22 @@ class ServingEngine:
                 matched=False, blocks=0, steps=0,
                 latency_s=now - (req.submit_time_s or now), queue_s=0.0,
                 cache_hit=False,
-                metadata=dict(req.metadata, rejected="constraint needs "
-                              f">= {entry.min_tokens} tokens, budget too small"),
+                metadata=dict(req.metadata, rejected=reason),
             )
-            for req, entry in rejected
+            for req, reason in rejected
         ]
+
+    def _ensure_block_pages(self) -> None:
+        """Extend every live slot's page table to cover the block about to
+        run. Draws on the admission-time reservation, so it cannot fail."""
+        d = self.scfg.block_size
+        for s in self.sched.active_slots:
+            need = -(-(s.pos + d) // self.page_size)
+            have = len(self.pool.pages(s.index))
+            if need > have:
+                self.page_table[s.index, have:need] = self.pool.alloc(
+                    s.index, need - have
+                )
 
     # ---- one block over all live slots -----------------------------------
     def step_block(self) -> List[Completion]:
@@ -164,6 +278,10 @@ class ServingEngine:
             return out
         sched = self.sched
         b, d = self.n_slots, self.scfg.block_size
+        page_tables = None
+        if self.pool is not None:
+            self._ensure_block_pages()
+            page_tables = jnp.asarray(self.page_table)
         tables = sched.stacked_tables()
         carry = jnp.asarray(sched.carry_batch())
         starts = jnp.asarray(sched.starts())[:, None]   # (B, 1) per-row offsets
@@ -177,9 +295,11 @@ class ServingEngine:
                 self.params, self.caches, block_tokens, committed, carry,
                 starts, sub, tables_arg=tables,
                 n_commit_arg=jnp.asarray(delta, jnp.int32),
+                page_tables_arg=page_tables,
             )
         self.caches = self._commit_block(
-            self.params, self.caches, block_tokens, jnp.asarray(sched.starts())
+            self.params, self.caches, block_tokens, jnp.asarray(sched.starts()),
+            page_tables,
         )
         self.blocks_run += 1
         finished = sched.record_block(
@@ -214,7 +334,9 @@ class ServingEngine:
             cache_hit=slot.cache_hit,
             metadata=dict(req.metadata),
         )
-        self.sched.release(slot)
+        self.sched.release(slot)   # returns the slot's pages under paged KV
+        if self.pool is not None:
+            self.page_table[slot.index] = 0   # back to the trash page
         return out
 
     # ---- serve loop ------------------------------------------------------

@@ -1,0 +1,142 @@
+"""Fixed-size page allocator for the paged KV cache (vLLM-style block tables).
+
+The serving grid's KV memory is one shared pool of ``n_pages`` pages of
+``page_size`` tokens each; every slot owns a *page table* mapping its logical
+token positions to physical pages. The :class:`PagePool` is the host-side
+allocator behind that table:
+
+  * **reserve / alloc split.** Admission *reserves* the worst case a request
+    can touch (prompt pages + its whole block budget); the engine then
+    *allocates* lazily, one block ahead, as the run actually extends. A run
+    can therefore never dead-end mid-generation — the pages it may still need
+    are spoken for — while pages a request never reaches (early EOS
+    retirement, short budgets) stay in the reservation and are returned at
+    release, so the pool is sized by *aggregate live tokens*, not by
+    ``n_slots × worst_case`` like the dense grid.
+  * **page 0 is the trash page.** Unallocated page-table entries point at
+    physical page 0; free slots and not-yet-extended tails scatter their
+    (masked, discarded) writes there. It is never handed out.
+  * pages are fixed-size, so there is **no external fragmentation**: any
+    request of ``n <= available()`` pages always succeeds
+    (``tests/test_paged_cache.py`` pins this as a hypothesis property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List
+
+TRASH_PAGE = 0
+
+
+class PagesExhausted(RuntimeError):
+    """Allocation beyond reservation + free pages (allocator misuse)."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0            # pages handed out
+    frees: int = 0             # pages returned
+    reserve_fails: int = 0     # admission-time parks
+    highwater: int = 0         # peak pages in use
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PagePool:
+    """Allocator over ``n_pages`` fixed pages; page 0 reserved as trash."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list -> recently-freed pages are reused first (warm HBM)
+        self._free: List[int] = list(range(n_pages - 1, TRASH_PAGE, -1))
+        self._owned: Dict[Hashable, List[int]] = {}
+        self._reserved: Dict[Hashable, int] = {}
+        self.stats = PoolStats()
+
+    # ---- accounting ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the trash page excluded)."""
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def reserved_outstanding(self) -> int:
+        """Reserved-but-not-yet-allocated pages across all owners."""
+        return sum(self._reserved.values())
+
+    def available(self) -> int:
+        """Pages a new reservation may claim right now."""
+        return len(self._free) - self.reserved_outstanding
+
+    @property
+    def idle(self) -> bool:
+        """No owner holds pages or reservations — nothing will ever free."""
+        return not self._owned and not self._reserved
+
+    def pages(self, owner: Hashable) -> List[int]:
+        """Pages currently owned, in logical (allocation) order."""
+        return list(self._owned.get(owner, ()))
+
+    def reservation(self, owner: Hashable) -> int:
+        return self._reserved.get(owner, 0)
+
+    # ---- lifecycle -------------------------------------------------------
+    def reserve(self, owner: Hashable, n: int) -> bool:
+        """Set aside ``n`` more pages for ``owner``. False when the pool
+        cannot honour it (the caller parks the request)."""
+        if n < 0:
+            raise ValueError("cannot reserve a negative page count")
+        if self.available() < n:
+            self.stats.reserve_fails += 1
+            return False
+        self._reserved[owner] = self._reserved.get(owner, 0) + n
+        return True
+
+    def alloc(self, owner: Hashable, n: int) -> List[int]:
+        """Hand ``owner`` ``n`` physical pages, drawing its reservation down
+        first; anything beyond the reservation must fit in the unreserved
+        free pages or :class:`PagesExhausted` is raised."""
+        if n < 0:
+            raise ValueError("cannot alloc a negative page count")
+        if n == 0:
+            return []
+        from_res = min(self._reserved.get(owner, 0), n)
+        if (n - from_res) > self.available():
+            raise PagesExhausted(
+                f"alloc({n}) for {owner!r}: reservation {from_res}, "
+                f"available {self.available()}"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        if from_res:
+            left = self._reserved[owner] - from_res
+            if left:
+                self._reserved[owner] = left
+            else:
+                del self._reserved[owner]
+        self._owned.setdefault(owner, []).extend(pages)
+        self.stats.allocs += n
+        self.stats.highwater = max(self.stats.highwater, self.in_use)
+        return pages
+
+    def free(self, owner: Hashable) -> int:
+        """Return all of ``owner``'s pages and cancel its remaining
+        reservation. Returns the number of pages released."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(reversed(pages))
+        self._reserved.pop(owner, None)
+        self.stats.frees += len(pages)
+        return len(pages)

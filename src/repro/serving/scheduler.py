@@ -38,6 +38,7 @@ from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.core.dingo import NEG_INF
 
 from .cache import UNREACHABLE, CompiledConstraint, ConstraintCache
+from .paged import PagePool
 from .types import Constraint, Request
 
 PLACEHOLDER_PATTERN = r"(.|\n)*"
@@ -80,15 +81,25 @@ class ContinuousBatchingScheduler:
         block_size: int,
         decode: str = DINGO,
         max_blocks: int = 8,
+        page_pool: Optional[PagePool] = None,
+        prompt_len_fn=None,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if page_pool is not None and prompt_len_fn is None:
+            raise ValueError("page_pool admission needs a prompt_len_fn")
         self.n_slots = n_slots
         self.cache = cache
         self.tok = tokenizer
         self.block_size = block_size
         self.decode = decode
         self.max_blocks = max_blocks
+        # paged-KV admission: reserve each request's worst-case page span up
+        # front (prompt + whole block budget) so incremental per-block allocs
+        # can never dead-end mid-generation; prompt_len_fn maps a request to
+        # its padded prompt length (the engine's bucketing rule)
+        self.page_pool = page_pool
+        self.prompt_len_fn = prompt_len_fn
         self.queue: "deque[Request]" = deque()
         self.slots = [Slot(index=i) for i in range(n_slots)]
         # the match-anything constraint free slots (and unconstrained requests
@@ -121,23 +132,50 @@ class ContinuousBatchingScheduler:
         return len(self.active_slots)
 
     # ---- admission -------------------------------------------------------
-    def admit(self) -> Tuple[List[Slot], List[Tuple[Request, CompiledConstraint]]]:
-        """Fill free slots from the queue (FIFO). Returns (admitted, rejected);
-        the engine must prefill each admitted slot's prompt before the next
-        block runs. A request whose shortest possible match exceeds its token
-        budget is rejected up front instead of burning a slot on a string the
-        DFA can never close."""
+    def admit(self) -> Tuple[List[Slot], List[Tuple[Request, str]]]:
+        """Fill free slots from the queue (FIFO). Returns (admitted, rejected)
+        where rejected items carry a human-readable reason; the engine must
+        prefill each admitted slot's prompt before the next block runs.
+
+        Two up-front rejections: a constraint whose shortest possible match
+        exceeds the token budget (the DFA can never close), and — under paged
+        KV — a request whose worst-case page span exceeds the whole pool. A
+        request that merely cannot get pages *right now* is **parked**: pushed
+        back to the queue head (FIFO preserved) until a retiring slot frees
+        pages. Parking requires a non-idle pool (someone must eventually
+        free), so it cannot deadlock."""
         admitted: List[Slot] = []
-        rejected: List[Tuple[Request, CompiledConstraint]] = []
+        rejected: List[Tuple[Request, str]] = []
         d = self.block_size
+        pool = self.page_pool
+        parked = False
         for slot in (s for s in self.slots if s.free):
+            if parked:
+                break
             while self.queue:
                 req = self.queue.popleft()
                 entry, hit = self._compile(req.constraint)
                 blocks = min(self.max_blocks, max(1, -(-req.max_new_tokens // d)))
                 if req.constraint.constrained and entry.min_tokens > blocks * d:
-                    rejected.append((req, entry))
+                    rejected.append((req, "constraint needs >= "
+                                     f"{entry.min_tokens} tokens, budget too small"))
                     continue
+                if pool is not None:
+                    need = -(-(self.prompt_len_fn(req) + blocks * d)
+                             // pool.page_size)
+                    if need > pool.capacity:
+                        rejected.append((req, f"needs {need} KV pages > pool "
+                                         f"capacity {pool.capacity}"))
+                        continue
+                    if not pool.reserve(slot.index, need):
+                        if pool.idle:   # nothing in flight will ever free
+                            rejected.append((req, f"needs {need} KV pages, "
+                                             f"{pool.available()} available in "
+                                             "an idle pool"))
+                            continue
+                        self.queue.appendleft(req)   # park at the head
+                        parked = True
+                        break
                 td = entry.tokendfa
                 slot.request = req
                 slot.entry = entry
@@ -315,5 +353,8 @@ class ContinuousBatchingScheduler:
         return r & td.live
 
     def release(self, slot: Slot) -> None:
+        if self.page_pool is not None:
+            # pages + any unexercised reservation (early EOS retirement)
+            self.page_pool.free(slot.index)
         self._park(slot)
         self._stacked_key = None

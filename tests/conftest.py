@@ -8,6 +8,16 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # registered programmatically so `pytest -m "not slow"` never warns on a
+    # bare pytest install that didn't pick up pyproject's [tool.pytest.ini_options]
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy e2e tests (trained models, subprocess dry-runs) excluded "
+        "from the quick CI job via -m 'not slow'",
+    )
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,290 @@
+"""Paged KV cache: PagePool allocator invariants (deterministic stress +
+hypothesis properties), module-level paged-vs-dense cache-op equivalence for
+GQA and MLA, and the Pallas paged decode kernel vs the dense kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MLAConfig, ModelConfig
+from repro.models import attention, mla
+from repro.serving import PagePool, PagesExhausted
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests run in CI; units always run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# PagePool: unit behavior
+# ---------------------------------------------------------------------------
+def test_pool_basics():
+    pool = PagePool(8, 4)
+    assert pool.capacity == 7 and pool.available() == 7 and pool.idle
+    assert pool.reserve("a", 3)
+    assert pool.available() == 4 and not pool.idle
+    pages = pool.alloc("a", 2)
+    assert len(pages) == 2 and pool.reservation("a") == 1
+    assert pool.pages("a") == pages
+    assert 0 not in pages                      # trash page never handed out
+    assert pool.in_use == 2 and pool.available() == 4
+    assert pool.free("a") == 2                 # pages + leftover reservation
+    assert pool.idle and pool.available() == 7
+    assert pool.stats.allocs == 2 and pool.stats.frees == 2
+
+
+def test_pool_reserve_fail_and_exhaustion():
+    pool = PagePool(5, 4)                      # capacity 4
+    assert not pool.reserve("a", 5)
+    assert pool.stats.reserve_fails == 1
+    assert pool.reserve("a", 4)
+    assert not pool.reserve("b", 1)            # fully reserved
+    with pytest.raises(PagesExhausted):
+        pool.alloc("b", 1)                     # b has no reservation, none free
+    assert pool.alloc("a", 4) and pool.in_use == 4
+    pool.free("a")
+    assert pool.available() == 4
+
+
+def test_pool_pages_unique_and_reused():
+    pool = PagePool(6, 2)
+    a = pool.alloc("a", 2)                     # alloc beyond reservation is
+    b = pool.alloc("b", 3)                     # allowed when pages are free
+    assert len(set(a) | set(b)) == 5
+    pool.free("a")
+    c = pool.alloc("c", 2)
+    assert set(c) == set(a)                    # LIFO reuse of freed pages
+    assert set(c).isdisjoint(b)
+
+
+# ---------------------------------------------------------------------------
+# PagePool: model-checked op sequences (shared by the deterministic stress
+# test and the hypothesis property test)
+# ---------------------------------------------------------------------------
+def _run_ops(n_pages, ops):
+    """Execute (kind, owner, n) ops against a PagePool while checking the
+    allocator's invariants after every step: page 0 never allocated, no page
+    owned twice, conservation, and no fragmentation (any reserve within
+    available() succeeds)."""
+    pool = PagePool(n_pages, 4)
+    owned = {}       # model: owner -> set of pages
+    reserved = {}    # model: owner -> outstanding reservation
+    for kind, owner, n in ops:
+        if kind == "reserve":
+            ok = pool.reserve(owner, n)
+            model_avail = (pool.capacity - sum(len(s) for s in owned.values())
+                           - sum(reserved.values()))
+            assert ok == (n <= model_avail), "no-fragmentation property"
+            if ok:
+                reserved[owner] = reserved.get(owner, 0) + n
+        elif kind == "alloc":
+            from_res = min(reserved.get(owner, 0), n)
+            spare = (pool.capacity - sum(len(s) for s in owned.values())
+                     - sum(reserved.values()))
+            if (n - from_res) > spare:
+                with pytest.raises(PagesExhausted):
+                    pool.alloc(owner, n)
+                continue
+            pages = pool.alloc(owner, n)
+            assert len(pages) == n and 0 not in pages
+            for other, s in owned.items():
+                assert s.isdisjoint(pages), "double allocation"
+            owned.setdefault(owner, set()).update(pages)
+            reserved[owner] = reserved.get(owner, 0) - from_res
+            if not reserved[owner]:
+                del reserved[owner]
+        else:  # free
+            got = pool.free(owner)
+            assert got == len(owned.pop(owner, set())), "incomplete free"
+            reserved.pop(owner, None)
+        # conservation after every op
+        assert pool.in_use == sum(len(s) for s in owned.values())
+        assert pool.available() == (pool.capacity - pool.in_use
+                                    - sum(reserved.values()))
+        assert pool.available() >= 0
+    for owner in set(owned) | set(reserved):
+        assert pool.free(owner) == len(owned.pop(owner, set()))
+    assert pool.idle and pool.available() == pool.capacity
+
+
+def _random_ops(rng, n_ops, n_owners=5, max_n=6):
+    kinds = ["reserve", "alloc", "alloc", "free"]
+    return [(kinds[rng.integers(len(kinds))], int(rng.integers(n_owners)),
+             int(rng.integers(max_n + 1))) for _ in range(n_ops)]
+
+
+def test_pool_invariants_deterministic_stress():
+    for seed in range(8):
+        r = np.random.default_rng(seed)
+        _run_ops(int(r.integers(2, 24)), _random_ops(r, 200))
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.tuples(st.sampled_from(["reserve", "alloc", "free"]),
+                  st.integers(0, 4), st.integers(0, 8)),
+        max_size=60,
+    )
+
+    @settings(max_examples=200, deadline=None)
+    @given(n_pages=st.integers(2, 32), ops=_ops)
+    def test_pool_invariants_hypothesis(n_pages, ops):
+        _run_ops(n_pages, ops)
+
+
+# ---------------------------------------------------------------------------
+# paged cache ops == dense cache ops (module level)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def gqa_cfg():
+    return ModelConfig(name="paged-test", arch_type="dense", num_layers=1,
+                       d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=64, dtype="float32")
+
+
+def _paged_mirror_of(cfg, dense, page_size, rng):
+    """Build a PagedKVCache holding the same logical content as ``dense``
+    through a randomly permuted page assignment."""
+    b, s = dense.k.shape[:2]
+    p = s // page_size
+    n_pages = 1 + b * p
+    perm = rng.permutation(np.arange(1, n_pages)).reshape(b, p).astype(np.int32)
+    k_pool = np.zeros((n_pages, page_size) + dense.k.shape[2:], np.float32)
+    v_pool = np.zeros_like(k_pool)
+    dk, dv = np.asarray(dense.k), np.asarray(dense.v)
+    for bi in range(b):
+        for j in range(p):
+            k_pool[perm[bi, j]] = dk[bi, j * page_size:(j + 1) * page_size]
+            v_pool[perm[bi, j]] = dv[bi, j * page_size:(j + 1) * page_size]
+    return attention.PagedKVCache(
+        k=jnp.asarray(k_pool), v=jnp.asarray(v_pool),
+        page_table=jnp.asarray(perm), length=dense.length,
+    )
+
+
+def test_paged_append_gather_matches_dense(gqa_cfg, rng):
+    cfg, ps = gqa_cfg, 4
+    b, s, steps = 3, 32, 3
+    dense = attention.cache_init(cfg, b, s, jnp.float32)
+    dense = dense._replace(length=jnp.asarray([0, 5, 9], jnp.int32))
+    paged = _paged_mirror_of(cfg, dense, ps, rng)
+    for _ in range(steps):
+        k_new = jnp.asarray(rng.normal(size=(b, 4, cfg.num_kv_heads, cfg.head_dim)),
+                            jnp.float32)
+        v_new = jnp.asarray(rng.normal(size=k_new.shape), jnp.float32)
+        dense = attention.cache_append(dense, k_new, v_new)
+        paged = attention.cache_append(paged, k_new, v_new)   # dispatches
+    assert isinstance(paged, attention.PagedKVCache)
+    np.testing.assert_array_equal(np.asarray(dense.length), np.asarray(paged.length))
+    gk, gv = attention.paged_gather(paged)
+    dk, dv = np.asarray(dense.k), np.asarray(dense.v)
+    for bi, ln in enumerate(np.asarray(dense.length)):
+        np.testing.assert_array_equal(dk[bi, :ln], np.asarray(gk)[bi, :ln])
+        np.testing.assert_array_equal(dv[bi, :ln], np.asarray(gv)[bi, :ln])
+
+
+def test_attn_apply_paged_matches_dense(gqa_cfg, rng):
+    """Full attention layer: decode against a paged cache == decode against
+    the dense cache with identical logical content."""
+    cfg, ps = gqa_cfg, 4
+    b, s, blk = 2, 16, 4
+    p = attention.attn_init(jax.random.PRNGKey(0), cfg)
+    dense = attention.cache_init(cfg, b, s, jnp.float32)
+    pre_k = jnp.asarray(rng.normal(size=(b, 8, cfg.num_kv_heads, cfg.head_dim)),
+                        jnp.float32)
+    pre_v = jnp.asarray(rng.normal(size=pre_k.shape), jnp.float32)
+    dense = attention.cache_append(dense, pre_k, pre_v)
+    dense = dense._replace(length=jnp.asarray([8, 6], jnp.int32))  # hetero rows
+    paged = _paged_mirror_of(cfg, dense, ps, rng)
+
+    x = jnp.asarray(rng.normal(size=(b, blk, cfg.d_model)), jnp.float32)
+    pos = 8 + jnp.broadcast_to(jnp.arange(blk, dtype=jnp.int32)[None], (b, blk))
+    out_d, cd = attention.attn_apply(p, x, cfg, pos, dense, commit=True)
+    out_p, cp = attention.attn_apply(p, x, cfg, pos, paged, commit=True)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_p),
+                               rtol=1e-5, atol=1e-5)
+    assert isinstance(cp, attention.PagedKVCache)
+    np.testing.assert_array_equal(np.asarray(cd.length), np.asarray(cp.length))
+
+
+def test_mla_absorbed_paged_matches_dense(rng):
+    cfg = ModelConfig(
+        name="mla-paged-test", arch_type="moe", num_layers=1, d_model=64,
+        num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+        dtype="float32",
+    )
+    ps, b, s, blk = 4, 2, 16, 3
+    p = mla.mla_init(jax.random.PRNGKey(0), cfg)
+    xp = jnp.asarray(rng.normal(size=(b, 8, cfg.d_model)), jnp.float32)
+    pos_p = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (b, 8))
+    dense = mla.mla_cache_init(cfg, b, s, jnp.float32)
+    _, dense = mla.mla_expanded(p, xp, cfg, pos_p, dense, commit=True)
+
+    # mirror latents into a permuted page pool
+    n_pages = 1 + b * (s // ps)
+    perm = rng.permutation(np.arange(1, n_pages)).reshape(b, -1).astype(np.int32)
+    c_pool = np.zeros((n_pages, ps, cfg.mla.kv_lora_rank), np.float32)
+    r_pool = np.zeros((n_pages, ps, cfg.mla.qk_rope_head_dim), np.float32)
+    dc, dr = np.asarray(dense.c_kv), np.asarray(dense.k_rope)
+    for bi in range(b):
+        for j in range(s // ps):
+            c_pool[perm[bi, j]] = dc[bi, j * ps:(j + 1) * ps]
+            r_pool[perm[bi, j]] = dr[bi, j * ps:(j + 1) * ps]
+    paged = mla.PagedMLACache(
+        c_kv=jnp.asarray(c_pool), k_rope=jnp.asarray(r_pool),
+        page_table=jnp.asarray(perm), length=dense.length,
+    )
+
+    xb = jnp.asarray(rng.normal(size=(b, blk, cfg.d_model)), jnp.float32)
+    pos_b = 8 + jnp.broadcast_to(jnp.arange(blk, dtype=jnp.int32)[None], (b, blk))
+    out_d, cd = mla.mla_absorbed(p, xb, cfg, pos_b, dense, commit=True)
+    out_p, cp = mla.mla_absorbed(p, xb, cfg, pos_b, paged, commit=True)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_p),
+                               rtol=1e-5, atol=1e-5)
+    assert isinstance(cp, mla.PagedMLACache)
+    np.testing.assert_array_equal(np.asarray(cd.length), np.asarray(cp.length))
+    # the committed block landed in the right pages: re-gather and compare
+    gc, gr = mla.paged_mla_gather(cp)
+    for bi, ln in enumerate(np.asarray(cd.length)):
+        np.testing.assert_allclose(np.asarray(cd.c_kv)[bi, :ln],
+                                   np.asarray(gc)[bi, :ln], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged decode kernel (interpret mode) vs the dense kernel
+# ---------------------------------------------------------------------------
+def test_paged_decode_kernel_matches_dense(rng):
+    from repro.kernels.decode_attention import (
+        decode_attention_pallas,
+        paged_decode_attention_pallas,
+    )
+
+    b, h, kvh, dh, ps, p = 3, 4, 2, 16, 8, 4
+    n_pages = 1 + b * p
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    dense_k = rng.normal(size=(b, p * ps, kvh, dh)).astype(np.float32)
+    dense_v = rng.normal(size=(b, p * ps, kvh, dh)).astype(np.float32)
+    lengths = np.asarray([5, 17, 32], np.int32)
+    perm = rng.permutation(np.arange(1, n_pages)).reshape(b, p).astype(np.int32)
+    k_pool = np.zeros((n_pages, ps, kvh, dh), np.float32)
+    v_pool = np.zeros_like(k_pool)
+    for bi in range(b):
+        for j in range(p):
+            k_pool[perm[bi, j]] = dense_k[bi, j * ps:(j + 1) * ps]
+            v_pool[perm[bi, j]] = dense_v[bi, j * ps:(j + 1) * ps]
+
+    ref = decode_attention_pallas(q, jnp.asarray(dense_k), jnp.asarray(dense_v),
+                                  jnp.asarray(lengths), block_s=8, interpret=True)
+    got = paged_decode_attention_pallas(
+        q, jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(perm), jnp.asarray(lengths), interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)

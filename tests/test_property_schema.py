@@ -1,0 +1,141 @@
+"""Property test for the JSON-Schema -> regex frontend: randomly generated
+fixed-schema objects always compile to a regex whose DFA accepts the
+``json.dumps`` of conforming instances and rejects mutated serializations.
+
+The generator is driven by a ``random.Random`` so the same logic runs both
+deterministically (always, seeded) and under hypothesis (``st.randoms()``,
+when hypothesis is installed — the CI property job)."""
+import json
+import random
+import re
+import string
+
+import pytest
+
+from repro.core import compile_pattern
+from repro.serving import schema_to_regex
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# characters valid in the frontend's default string content ([a-zA-Z0-9 _.-])
+_SAFE = string.ascii_letters + string.digits + " _.-"
+
+
+def _gen_word(rng, chars=string.ascii_lowercase, lo=1, hi=5):
+    return "".join(rng.choice(chars) for _ in range(rng.randint(lo, hi)))
+
+
+def _gen_value_schema(rng, depth):
+    """Returns (schema_fragment, instance_generator)."""
+    kinds = ["string", "integer", "number", "boolean", "null", "enum", "const",
+             "array"]
+    if depth > 0:
+        kinds.append("object")
+    kind = rng.choice(kinds)
+    if kind == "string":
+        return {"type": "string"}, lambda r: _gen_word(r, _SAFE, 0, 8)
+    if kind == "integer":
+        digits = rng.randint(1, 4)
+        signed = rng.random() < 0.5
+        sch = {"type": "integer", "maxDigits": digits}
+        if not signed:
+            sch["minimum"] = 0
+        def gen_int(r, digits=digits, signed=signed):
+            v = r.randrange(10 ** digits)
+            return -v if (signed and v and r.random() < 0.5) else v
+        return sch, gen_int
+    if kind == "number":
+        sch = {"type": "number", "maxDigits": 3, "minimum": 0}
+        def gen_num(r):
+            if r.random() < 0.5:
+                return r.randrange(1000)
+            # d-digit decimal strings round-trip through float repr with no
+            # extra digits (shortest-repr), so json.dumps stays in-language
+            return float(f"{r.randrange(1000)}.{r.randrange(1, 10)}")
+        return sch, gen_num
+    if kind == "boolean":
+        return {"type": "boolean"}, lambda r: r.random() < 0.5
+    if kind == "null":
+        return {"type": "null"}, lambda r: None
+    if kind == "enum":
+        opts = list({_gen_word(rng) for _ in range(rng.randint(2, 4))})
+        if rng.random() < 0.3:
+            opts.append(rng.randrange(100))
+        return {"enum": opts}, lambda r, o=opts: r.choice(o)
+    if kind == "const":
+        v = _gen_word(rng) if rng.random() < 0.7 else rng.randrange(100)
+        return {"const": v}, lambda r, v=v: v
+    if kind == "array":
+        lo = rng.randint(0, 2)
+        hi = rng.randint(max(lo, 1), 4)
+        sch = {"type": "array", "minItems": lo, "maxItems": hi,
+               "items": {"type": "integer", "maxDigits": 2, "minimum": 0}}
+        def gen_arr(r, lo=lo, hi=hi):
+            return [r.randrange(100) for _ in range(r.randint(lo, hi))]
+        return sch, gen_arr
+    return _gen_object_schema(rng, depth - 1)
+
+
+def _gen_object_schema(rng, depth=1):
+    names = []
+    while len(names) < rng.randint(1, 4):
+        w = _gen_word(rng)
+        if w not in names:
+            names.append(w)
+    props, gens, required = {}, {}, []
+    for i, name in enumerate(names):
+        sch, gen = _gen_value_schema(rng, depth)
+        props[name] = sch
+        gens[name] = gen
+        if i == 0 or rng.random() < 0.7:
+            required.append(name)
+    schema = {"type": "object", "properties": props, "required": required}
+
+    def gen_obj(r):
+        return {n: gens[n](r) for n in names
+                if n in required or r.random() < 0.5}
+
+    return schema, gen_obj
+
+
+def _mutations(s: str):
+    """Serializations provably outside the fixed-schema language: every match
+    ends with '}', key-value separators are exactly '\": \"', the first key is
+    a [a-z]+ literal right after '{\"', and nothing follows the final '}'."""
+    yield s[:-1]                          # unterminated object
+    yield s.replace('": ', '":', 1)       # canonical spacing broken
+    yield s + "x"                         # trailing garbage
+    assert s.startswith('{"')
+    yield s[:2] + "~" + s[3:]             # first key no longer matches
+
+
+def check_roundtrip(rng: random.Random):
+    schema, gen = _gen_object_schema(rng)
+    pattern = schema_to_regex(schema)
+    dfa = compile_pattern(pattern)
+    for _ in range(5):
+        obj = gen(rng)
+        s = json.dumps(obj)
+        assert json.loads(s) == obj
+        assert re.fullmatch(pattern, s), (pattern, s)
+        assert dfa.accepting[dfa.run(s.encode())], (pattern, s)
+        for bad in _mutations(s):
+            assert not dfa.accepting[dfa.run(bad.encode())], (pattern, bad)
+            assert not re.fullmatch(pattern, bad), (pattern, bad)
+
+
+def test_schema_roundtrip_deterministic():
+    for seed in range(25):
+        check_roundtrip(random.Random(seed))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.randoms(use_true_random=False))
+    def test_schema_roundtrip_hypothesis(rng):
+        check_roundtrip(rng)

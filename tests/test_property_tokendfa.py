@@ -1,0 +1,89 @@
+"""Property test for token-DFA table construction: for random small regexes
+over a byte-tokenizer vocabulary, the token-level transitions agree with the
+character-level DFA on random token sequences, the packed class decomposition
+reproduces the full transition table, and special tokens are killed.
+
+Same dual-mode pattern as ``test_property_schema``: a ``random.Random``-driven
+checker runs deterministically always and under hypothesis in CI."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import build_token_dfa, compile_pattern
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# byte-tokenizer-style vocab: raw chars + multi-char merges + 2 specials
+VOCAB = [b"a", b"b", b"c", b"+", b"ab", b"ba", b"bc", b"abc", b"aa",
+         None, None]
+MASK, EOS = 9, 10
+NORMAL = [t for t, b_ in enumerate(VOCAB) if b_ is not None]
+
+
+def _gen_regex(rng: random.Random, depth: int = 3) -> str:
+    """Random pattern in the repo's regex subset over {a, b, c, +}."""
+    roll = rng.random()
+    if depth == 0 or roll < 0.35:
+        return rng.choice(["a", "b", "c", "\\+", "[ab]", "[a-c]", "[bc]"])
+    if roll < 0.55:
+        return _gen_regex(rng, depth - 1) + _gen_regex(rng, depth - 1)
+    if roll < 0.7:
+        return "(" + _gen_regex(rng, depth - 1) + "|" + _gen_regex(rng, depth - 1) + ")"
+    op = rng.choice(["*", "+", "?"])
+    return "(" + _gen_regex(rng, depth - 1) + ")" + op
+
+
+def check_token_dfa(rng: random.Random):
+    pattern = _gen_regex(rng)
+    cd = compile_pattern(pattern)
+    td = build_token_dfa(cd, VOCAB, mask_token_id=MASK, eos_token_id=EOS)
+
+    # packed class decomposition reproduces δ_t exactly
+    np.testing.assert_array_equal(td.cnext[:, td.class_id], td.trans)
+    # specials (and zero-length tokens) are killed everywhere
+    assert (td.trans[:, MASK] == td.dead).all()
+
+    # token-level run == char-level run at every token boundary: the token
+    # state equals the char state when it is live, else the dead sink (and
+    # once dead, stays dead — non-live char states never recover)
+    for _ in range(20):
+        seq = [rng.choice(NORMAL) for _ in range(rng.randint(0, 8))]
+        q_tok = td.start
+        text = b""
+        for t in seq:
+            q_tok = int(td.trans[q_tok, t])
+            text += VOCAB[t]
+            q_char = cd.run(text)
+            if cd.live[q_char]:
+                assert q_tok == q_char, (pattern, text, q_tok, q_char)
+                assert bool(td.accepting[q_tok]) == bool(cd.accepting[q_char])
+            else:
+                assert q_tok == td.dead, (pattern, text, q_tok)
+        # td.run agrees with the step-by-step fold
+        assert td.run(seq) == q_tok
+
+    # EOS terminator: accepting char states step to the accepting EOS loop
+    for q in range(cd.num_states):
+        if cd.accepting[q]:
+            e = int(td.trans[q, EOS])
+            assert td.accepting[e] and int(td.trans[e, EOS]) == e
+        else:
+            assert int(td.trans[q, EOS]) == td.dead
+
+
+def test_token_dfa_matches_char_dfa_deterministic():
+    for seed in range(40):
+        check_token_dfa(random.Random(seed))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=80, deadline=None)
+    @given(st.randoms(use_true_random=False))
+    def test_token_dfa_matches_char_dfa_hypothesis(rng):
+        check_token_dfa(rng)

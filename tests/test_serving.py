@@ -129,6 +129,40 @@ def test_cache_key_includes_vocab_fingerprint(tok):
     assert e1.tokendfa.vocab_size != e2.tokendfa.vocab_size
 
 
+def test_cache_capacity_one_exact_stats(tok):
+    """Capacity-1 LRU: every distinct pattern evicts the previous one, stats
+    count every lookup exactly, and compile time accumulates only on misses."""
+    cache = ConstraintCache(capacity=1)
+    e1, h1 = cache.get_or_compile(r"(ab)+", tok)
+    _, h2 = cache.get_or_compile(r"(ab)+", tok)        # hit
+    e2, h3 = cache.get_or_compile(r"(ba)+", tok)       # evicts (ab)+
+    assert (h1, h2, h3) == (False, True, False)
+    assert len(cache) == 1 and cache.stats.evictions == 1
+    _, h4 = cache.get_or_compile(r"(ab)+", tok)        # miss again (evicted)
+    assert not h4 and cache.stats.evictions == 2
+    assert (cache.stats.hits, cache.stats.misses, cache.stats.lookups) == (1, 3, 4)
+    assert cache.stats.hit_rate == pytest.approx(0.25)
+    # compile time is exactly the sum over the 3 compiles (misses only)
+    e3 = cache.lookup(r"(ab)+", tok)
+    assert cache.stats.hits == 2                       # lookup counts as a hit
+    assert cache.stats.compile_time_s == pytest.approx(
+        e1.compile_time_s + e2.compile_time_s + e3.compile_time_s)
+
+
+def test_cache_capacity_one_fingerprint_keying(tok):
+    """The same pattern under two tokenizers ping-pongs a capacity-1 cache:
+    fingerprint 'collisions' (same pattern string) are keyed apart, never
+    silently shared."""
+    other = ByteTokenizer(merges=("ab",))
+    cache = ConstraintCache(capacity=1)
+    ea, _ = cache.get_or_compile(r"(ab)+", tok)
+    eb, hit = cache.get_or_compile(r"(ab)+", other)
+    assert not hit and cache.stats.evictions == 1      # keyed apart -> evict
+    assert ea.tokendfa.vocab_size != eb.tokendfa.vocab_size
+    assert cache.lookup(r"(ab)+", tok) is None         # evicted, not aliased
+    assert cache.stats.misses == 3                     # failed lookup counts
+
+
 def test_cache_min_tokens(tok):
     cache = ConstraintCache()
     e, _ = cache.get_or_compile(r"(ab|ba)+", tok)
@@ -227,6 +261,78 @@ def test_scheduler_budget_live_tightens(tok):
     live1 = np.asarray(sched.stacked_tables().live)[0]
     assert live1.sum() <= live0.sum()
     np.testing.assert_array_equal(live1[: td.num_states], td.accepting)
+
+
+def test_scheduler_stress_no_slot_leak(tok):
+    """50-request mixed stream with random budgets through a 4-slot grid,
+    driven at the scheduler level (synthetic blocks, no model): no slot is
+    ever double-occupied, every admitted request retires exactly once,
+    infeasible requests are rejected at admission, and the grid (and, in the
+    paged variant, the page pool) drains completely."""
+    from repro.serving import PagePool
+
+    rng = np.random.default_rng(0)
+    for pool in (None, PagePool(4 * 6 + 1, 8)):
+        sched = ContinuousBatchingScheduler(
+            4, ConstraintCache(), tok, block_size=8, decode="dingo",
+            max_blocks=4,
+            page_pool=pool, prompt_len_fn=(lambda r: 16) if pool else None,
+        )
+        reqs, infeasible = [], set()
+        for i in range(50):
+            if i % 10 == 7:
+                # 50 mandatory bytes can never fit 4 blocks of 8
+                r = Request(f"p{i} ", Constraint.regex(r"[x]{50}"),
+                            max_new_tokens=int(rng.integers(1, 33)))
+                infeasible.add(r.request_id)
+            else:
+                r = Request(f"p{i} ", Constraint.regex(r"(ab|ba)+"),
+                            max_new_tokens=int(rng.integers(1, 33)))
+            reqs.append(r)
+            sched.submit(r)
+
+        ab = tok.encode("ab")
+        retired, rejected_ids, admitted_ids = [], set(), set()
+        blocks = 0
+        while (sched.pending or sched.busy) and blocks < 400:
+            admitted, rejected = sched.admit()
+            rejected_ids.update(r.request_id for r, _ in rejected)
+            for s in admitted:
+                assert s.request.request_id not in admitted_ids, "slot reuse leak"
+                admitted_ids.add(s.request.request_id)
+                s.pos = 16                      # engine would set after prefill
+                if pool is not None:
+                    pool.alloc(s.index, 2)      # prompt pages (16 tokens / 8)
+            if not sched.busy:
+                break
+            if pool is not None:
+                for s in sched.active_slots:    # incremental block alloc
+                    need = -(-(s.pos + 8) // 8)
+                    have = len(pool.pages(s.index))
+                    if need > have:
+                        pool.alloc(s.index, need - have)
+            # synthesize a committed block: 'abab...' then run the DFA
+            block = np.zeros((4, 8), np.int32)
+            qf = np.zeros(4, np.int32)
+            for s in sched.slots:
+                row = (ab * 8)[:8]
+                block[s.index] = row
+                td = s.entry.tokendfa
+                qf[s.index] = td.run(row, s.q_state)
+            for s in sched.record_block(block, np.ones(4, bool), qf, steps=2):
+                retired.append(s.request.request_id)
+                sched.release(s)
+            blocks += 1
+
+        assert blocks < 400, "scheduler failed to drain"
+        assert rejected_ids == infeasible
+        assert sorted(retired) == sorted(admitted_ids)
+        assert admitted_ids | rejected_ids == {r.request_id for r in reqs}
+        assert sched.busy == 0 and sched.pending == 0
+        assert all(s.free for s in sched.slots)
+        if pool is not None:
+            assert pool.in_use == 0 and pool.idle
+            assert pool.available() == pool.capacity
 
 
 # ---------------------------------------------------------------------------
