@@ -1,0 +1,48 @@
+"""Offline batch generation with the ``choice`` constraint frontend.
+
+A classification-shaped workload: every request must answer with exactly one
+of a fixed set of literals. ``Constraint.choice([...])`` normalizes the
+options to an alternation regex through the frontend registry, so the
+compiled automaton flows through the same LRU constraint cache as regexes
+and JSON Schemas — and because ``Engine.generate`` shares that cache, the
+batch path compiles each distinct option set exactly once.
+
+    PYTHONPATH=src python examples/generate_choice.py
+"""
+import jax
+
+from repro.api import Constraint, Engine, Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.models import init_model
+from repro.tokenizer import default_tokenizer
+
+
+def main():
+    tok = default_tokenizer()
+    cfg = e2e_config(tok.vocab_size)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    scfg = ServeConfig(gen_len=8, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    eng = Engine(params, cfg, scfg, tok)
+
+    sentiment = Constraint.choice(["positive", "negative", "neutral"])
+    answer = Constraint.choice(["yes", "no"])
+    reqs = [
+        Request("review: loved it! sentiment: ", sentiment, max_new_tokens=8),
+        Request("review: meh. sentiment: ", sentiment, max_new_tokens=8),
+        Request("is the sky green? ", answer, max_new_tokens=8),
+        Request("is water wet? ", answer, max_new_tokens=8),
+    ]
+    print(f"choice pattern: {sentiment.pattern!r}")
+    for c in eng.generate(reqs, seed=0):
+        print(f"[req {c.request_id}] valid={c.valid} matched={c.matched} "
+              f"-> {c.text!r}")
+    s = eng.cache_stats
+    print(f"constraint cache: {s.hits} hits / {s.misses} misses "
+          f"(2 distinct option sets -> 2 compiles)")
+
+
+if __name__ == "__main__":
+    main()

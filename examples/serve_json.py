@@ -1,7 +1,7 @@
 """End-to-end SERVING driver (the paper's kind of workload): a stream of
-requests with per-request JSON-Schema constraints served through the
-continuous-batching engine (``repro.serving``) — the small-scale reproduction
-of paper Table 2 (JSON-Mode-Eval).
+requests with per-request JSON-Schema constraints served through the unified
+API surface (``repro.api.Engine.serve``) — the small-scale reproduction of
+paper Table 2 (JSON-Mode-Eval).
 
     PYTHONPATH=src python examples/serve_json.py --requests 12 [--train-steps 150]
 
@@ -25,7 +25,8 @@ from repro.configs.llada_repro import e2e_config
 from repro.data import synthetic
 from repro.data.loader import TaskDataLoader
 from repro.models import init_model
-from repro.serving import Constraint, ConstraintCache, Request, ServingEngine, schema_for_fields
+from repro.api import Constraint, ConstraintCache, Engine, Request
+from repro.constraints import schema_for_fields
 from repro.tokenizer import default_tokenizer
 from repro.training import checkpoint, init_train_state, make_train_step
 
@@ -81,8 +82,8 @@ def main():
             gen_len=args.gen_len, block_size=args.block,
             diffusion_steps_per_block=args.steps_per_block, decode=method,
         )
-        eng = ServingEngine(params, cfg, scfg, tok, n_slots=args.slots,
-                            max_prompt_len=48, constraint_cache=cache)
+        eng = Engine(params, cfg, scfg, tok, n_slots=args.slots,
+                     max_prompt_len=48, constraint_cache=cache)
         reqs = []
         for ex in examples:
             sidx = ex.meta["schema"]

@@ -1,0 +1,262 @@
+"""Unified generation surface: one Engine, two modes, one Request type.
+
+The paper's promise — provably distribution-preserving decoding under any
+user-specified regular constraint — is exposed through a single facade:
+
+    from repro.api import Constraint, Engine, Request
+
+    eng = Engine(params, cfg, scfg, tokenizer)
+    done = eng.generate([Request("prompt ", Constraint.regex(r"(ab|ba)+"))])
+    for c in eng.serve(stream):         # continuous batching
+        ...
+
+``generate`` runs an offline batch through the one-shot
+:class:`~repro.diffusion.engine.DiffusionEngine`; ``serve`` drives the
+continuous-batching :class:`~repro.serving.engine.ServingEngine`. Both take
+the same :class:`Request`/:class:`~repro.constraints.Constraint` objects,
+return the same :class:`Completion`, and compile constraints through the
+same shared LRU :class:`~repro.constraints.ConstraintCache` — batch
+generation amortizes constraint precompute exactly like the server does.
+
+Batch-mode conventions (deterministic, so results are reproducible and
+differentially testable against a hand-driven ``DiffusionEngine``):
+
+  * requests are grouped by ``max_new_tokens`` rounded up to whole blocks,
+    and each group runs as one batch — a request is never decoded past its
+    own budget;
+  * within a group, prompts are left-padded with EOS to the group's longest
+    encoded prompt;
+  * per-request tables are padded to the group's power-of-two (Q, C) bucket
+    and stacked; unconstrained requests under a table-driven decode
+    strategy ride the match-anything placeholder automaton.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+from repro.config import ModelConfig, ServeConfig
+from repro.constraints import (
+    PLACEHOLDER_PATTERN,
+    CompiledConstraint,
+    Constraint,
+    ConstraintCache,
+    qc_bucket,
+)
+
+__all__ = [
+    "Constraint",
+    "ConstraintCache",
+    "Request",
+    "Completion",
+    "Engine",
+]
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a prompt plus a constraint spec. In serve mode
+    ``max_new_tokens`` is rounded up to whole diffusion blocks per request;
+    in batch mode the whole batch runs the rounded maximum."""
+
+    prompt: str
+    constraint: Constraint
+    max_new_tokens: int = 32
+    request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # filled by the engine at submit time (host wall-clock, perf_counter domain)
+    submit_time_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request — yielded as its slot retires (serve mode) or
+    returned with the batch (generate mode)."""
+
+    request_id: int
+    text: str
+    tokens: List[int]
+    valid: bool                 # decoder-reported constraint satisfaction
+    matched: Optional[bool]     # host-side DFA full-match re-check (None: unconstrained)
+    blocks: int                 # diffusion blocks consumed
+    steps: int                  # diffusion steps consumed
+    latency_s: float            # submit -> completion
+    queue_s: float              # submit -> slot admission (0 in batch mode)
+    cache_hit: bool             # constraint came from the compiled-constraint cache
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Engine:
+    """Facade over both generation modes with a shared constraint cache.
+
+    The serving engine (slot grid, jitted step functions) is built lazily on
+    the first :meth:`serve` call; :meth:`generate` builds a one-shot batch
+    engine per call (its shape depends on the batch).
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        scfg: ServeConfig,
+        tokenizer,
+        *,
+        constraint_cache: Optional[ConstraintCache] = None,
+        n_slots: int = 4,
+        max_prompt_len: int = 64,
+        kv_layout: str = "dense",
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        seed: int = 0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.tok = tokenizer
+        self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        self._seed = seed
+        self._serving_kwargs = dict(
+            n_slots=n_slots, max_prompt_len=max_prompt_len,
+            kv_layout=kv_layout, page_size=page_size, n_pages=n_pages,
+        )
+        self._serving = None
+
+    # ---- shared constraint compilation -----------------------------------
+    def _compile(self, constraint: Constraint, needs_tables: bool = True):
+        """(CompiledConstraint | None, cache_hit) through the shared LRU
+        cache. Under a table-driven decode strategy, unconstrained specs
+        ride the match-anything placeholder; when the strategy needs no
+        tables, an unconstrained spec compiles nothing at all."""
+        if not constraint.constrained:
+            if not needs_tables:
+                return None, False
+            return self.cache.get_or_compile(PLACEHOLDER_PATTERN, self.tok)
+        return self.cache.get_or_compile(constraint.pattern, self.tok)
+
+    # ---- offline batch ----------------------------------------------------
+    def generate(self, requests: Iterable[Request], seed: int = 0) -> List[Completion]:
+        """Run ``requests`` offline; returns completions in request order.
+        Requests are grouped by their rounded block budget and each group
+        runs as one batch — per-request ``max_new_tokens`` is honored (a
+        short-budget constraint is never decoded past its own closure), and
+        within a group heterogeneous constraints are bucketed/stacked per
+        row."""
+        from repro.core import decoders
+
+        reqs = list(requests)
+        if not reqs:
+            return []
+        now = time.perf_counter()
+        for r in reqs:
+            if r.submit_time_s is None:
+                r.submit_time_s = now
+
+        strategy = decoders.get_strategy(self.scfg.decode)
+        compiled = [self._compile(r.constraint, strategy.needs_tables)
+                    for r in reqs]
+
+        d = self.scfg.block_size
+        groups: Dict[int, List[int]] = {}
+        for i, r in enumerate(reqs):
+            groups.setdefault(max(1, -(-r.max_new_tokens // d)), []).append(i)
+
+        out: List[Optional[Completion]] = [None] * len(reqs)
+        for n_blocks in sorted(groups):
+            idxs = groups[n_blocks]
+            for i, c in zip(idxs, self._generate_group(
+                    [reqs[i] for i in idxs], [compiled[i] for i in idxs],
+                    n_blocks, strategy.needs_tables, seed)):
+                out[i] = c
+        return out
+
+    def _generate_group(self, reqs, compiled, n_blocks: int,
+                        needs_tables: bool, seed: int) -> List[Completion]:
+        """One uniform-budget batch through a one-shot DiffusionEngine."""
+        import jax.numpy as jnp
+        import jax.tree_util
+        import numpy as np
+
+        from repro.core import pad_tables
+        from repro.diffusion.engine import DiffusionEngine
+
+        entries: List[Optional[CompiledConstraint]] = [e for e, _ in compiled]
+        tables = None
+        if needs_tables:
+            qb = qc_bucket(max(e.tokendfa.num_states for e in entries))
+            cb = qc_bucket(max(e.tokendfa.num_classes for e in entries))
+            padded = [pad_tables(e.tokendfa, qb, cb) for e in entries]
+            tables = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+        ids = [self.tok.encode(r.prompt) for r in reqs]
+        m = max(1, max(len(i) for i in ids))
+        prompts = np.full((len(reqs), m), self.tok.eos_token_id, np.int32)
+        for row, i in zip(prompts, ids):
+            row[m - len(i):] = i[:m]
+
+        scfg = dataclasses.replace(self.scfg, gen_len=n_blocks * self.scfg.block_size)
+        eng = DiffusionEngine(self.params, self.cfg, scfg,
+                              self.tok.mask_token_id, tables)
+        res = eng.generate(prompts, seed=seed)
+        done = time.perf_counter()
+
+        out = []
+        for i, (req, entry) in enumerate(zip(reqs, entries)):
+            tokens = [int(t) for t in res.tokens[i]]
+            if req.constraint.constrained:
+                td = entry.tokendfa
+                matched = bool(td.accepting[td.run(tokens)])
+            else:
+                matched = None
+            trimmed = list(tokens)
+            while trimmed and trimmed[-1] == self.tok.eos_token_id:
+                trimmed.pop()
+            out.append(Completion(
+                request_id=req.request_id,
+                text=self.tok.decode(trimmed),
+                tokens=tokens,
+                valid=bool(res.valid[i]),
+                matched=matched,
+                blocks=n_blocks,
+                steps=res.steps,
+                latency_s=done - (req.submit_time_s or done),
+                queue_s=0.0,
+                cache_hit=compiled[i][1],
+                metadata=dict(req.metadata),
+            ))
+        return out
+
+    # ---- continuous batching ---------------------------------------------
+    @property
+    def serving(self):
+        """The lazily-built continuous-batching engine (shares this Engine's
+        constraint cache)."""
+        if self._serving is None:
+            from repro.serving.engine import ServingEngine
+
+            self._serving = ServingEngine(
+                self.params, self.cfg, self.scfg, self.tok,
+                constraint_cache=self.cache, seed=self._seed,
+                **self._serving_kwargs,
+            )
+        return self._serving
+
+    def submit(self, request: Request) -> int:
+        """Queue a request on the serving engine (admitted at the next block
+        boundary of a :meth:`serve` drive)."""
+        return self.serving.submit(request)
+
+    def serve(self, requests: Iterable[Request] = ()) -> Iterator[Completion]:
+        """Submit ``requests`` and yield completions as slots retire; more
+        work may be submitted (``submit``) between yields."""
+        return self.serving.serve(requests)
+
+    # ---- introspection ----------------------------------------------------
+    @property
+    def cache_stats(self):
+        """Hit/miss/eviction/compile-time stats of the shared constraint
+        cache, across both generation modes."""
+        return self.cache.stats

@@ -1,0 +1,51 @@
+"""Constraint specification + compilation: the single home for everything
+between "user spec" and "packed decoder tables".
+
+    spec     Constraint + pluggable frontend registry (regex, json_schema,
+             choice, none; register your own via register_frontend)
+    schema   JSON-Schema -> regex frontend (JSON-Mode-Eval workload)
+    cache    LRU compiled-constraint cache, (pattern, vocab fp) ->
+             CompiledConstraint (TokenDFA + DingoTables + dist-to-accept)
+
+Both generation surfaces (`repro.api.Engine.generate` offline batch and
+`.serve` continuous batching) compile through the same cache, so constraint
+precompute is amortized identically in either mode.
+"""
+from .cache import (
+    UNREACHABLE,
+    CacheStats,
+    CompiledConstraint,
+    ConstraintCache,
+    dist_to_accept,
+    qc_bucket,
+    vocab_fingerprint,
+)
+from .schema import SchemaError, regex_escape, schema_for_fields, schema_to_regex
+from .spec import (
+    PLACEHOLDER_PATTERN,
+    Constraint,
+    ConstraintSpec,
+    frontend,
+    frontends,
+    register_frontend,
+)
+
+__all__ = [
+    "Constraint",
+    "ConstraintSpec",
+    "register_frontend",
+    "frontend",
+    "frontends",
+    "PLACEHOLDER_PATTERN",
+    "SchemaError",
+    "regex_escape",
+    "schema_to_regex",
+    "schema_for_fields",
+    "ConstraintCache",
+    "CompiledConstraint",
+    "CacheStats",
+    "vocab_fingerprint",
+    "dist_to_accept",
+    "qc_bucket",
+    "UNREACHABLE",
+]

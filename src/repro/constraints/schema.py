@@ -1,0 +1,166 @@
+"""JSON-Schema -> regex frontend (paper JSON-Mode-Eval; Appendix G regexes).
+
+Compiles a *fixed-schema* JSON Schema — ``type: object`` with an ordered
+``properties`` map — into a regex over the canonical serialization the model
+is trained to emit: ``{"k1": v1, "k2": v2}`` with exactly one space after each
+colon and comma and no other whitespace. Fixing the serialization keeps the
+DFA small (no whitespace self-loops) while ``json.loads`` still accepts every
+string in the language.
+
+Supported value schemas:
+
+    string      default content ``[a-z A-Z 0-9 _ . -]*``; honours ``pattern``
+                (content regex, repo subset), ``minLength``/``maxLength``
+    integer     strict JSON integers (no leading zeros); ``minimum >= 0``
+                drops the sign; ``maxDigits`` (extension) bounds magnitude
+    number      integer plus optional ``.`` fraction (1-6 digits)
+    boolean     ``true|false``
+    null        ``null``
+    enum/const  alternation of the JSON-encoded literals
+    array       ``items`` schema with ``minItems``/``maxItems``
+                (``maxItems`` defaults to 4 — the DFA must stay finite)
+    object      nested fixed-schema object (recursive)
+
+Properties not listed in ``required`` may be omitted, but the *first* property
+must be required (it anchors the comma placement); schemas violating that
+raise :class:`SchemaError`.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+# Characters with a special meaning in repro.core.regex outside a char class.
+_SPECIALS = set("\\.^$*+?()[]{}|-")
+
+DEFAULT_STRING_CONTENT = r"[a-zA-Z0-9 _\.\-]*"
+DEFAULT_MAX_DIGITS = 8
+DEFAULT_MAX_ITEMS = 4
+
+
+class SchemaError(ValueError):
+    """Unsupported or malformed JSON-Schema construct."""
+
+
+def regex_escape(text: str) -> str:
+    """Escape ``text`` so it matches literally in the repo's regex subset."""
+    return "".join("\\" + c if c in _SPECIALS else c for c in text)
+
+
+def _literal_regex(value: Any) -> str:
+    return regex_escape(json.dumps(value))
+
+
+def _string_regex(schema: Dict[str, Any]) -> str:
+    if "pattern" in schema:
+        content = schema["pattern"]
+    else:
+        lo = int(schema.get("minLength", 0))
+        hi = schema.get("maxLength")
+        if lo == 0 and hi is None:
+            content = DEFAULT_STRING_CONTENT
+        else:
+            hi_s = "" if hi is None else str(int(hi))
+            content = DEFAULT_STRING_CONTENT[:-1] + "{%d,%s}" % (lo, hi_s)
+    return '"' + content + '"'
+
+
+def _integer_regex(schema: Dict[str, Any]) -> str:
+    digits = int(schema.get("maxDigits", DEFAULT_MAX_DIGITS))
+    if digits < 1:
+        raise SchemaError("maxDigits must be >= 1")
+    body = "[0-9]" if digits == 1 else "(0|[1-9][0-9]{0,%d})" % (digits - 1)
+    minimum = schema.get("minimum")
+    if minimum is not None and minimum >= 0:
+        return body
+    return "(\\-)?" + body
+
+
+def _number_regex(schema: Dict[str, Any]) -> str:
+    return _integer_regex(schema) + r"(\.[0-9]{1,6})?"
+
+
+def _array_regex(schema: Dict[str, Any]) -> str:
+    item = _value_regex(schema.get("items", {"type": "integer"}))
+    lo = int(schema.get("minItems", 0))
+    hi = int(schema.get("maxItems", max(lo, DEFAULT_MAX_ITEMS)))
+    if hi < lo:
+        raise SchemaError(f"maxItems {hi} < minItems {lo}")
+    if hi == 0:
+        return r"\[\]"
+    rest = "(, %s){%d,%d}" % (item, max(lo - 1, 0), hi - 1)
+    body = item + rest if hi > 1 else item
+    if lo == 0:
+        return r"\[(" + body + r")?\]"
+    return r"\[" + body + r"\]"
+
+
+def _value_regex(schema: Dict[str, Any]) -> str:
+    if "const" in schema:
+        return _literal_regex(schema["const"])
+    if "enum" in schema:
+        opts = schema["enum"]
+        if not opts:
+            raise SchemaError("empty enum")
+        return "(" + "|".join(_literal_regex(v) for v in opts) + ")"
+    typ = schema.get("type")
+    if typ == "string":
+        return _string_regex(schema)
+    if typ == "integer":
+        return _integer_regex(schema)
+    if typ == "number":
+        return _number_regex(schema)
+    if typ == "boolean":
+        return "(true|false)"
+    if typ == "null":
+        return "null"
+    if typ == "array":
+        return _array_regex(schema)
+    if typ == "object":
+        return _object_regex(schema)
+    raise SchemaError(f"unsupported value schema: {schema!r}")
+
+
+def _object_regex(schema: Dict[str, Any]) -> str:
+    props = schema.get("properties")
+    if not props:
+        raise SchemaError("object schema needs non-empty 'properties'")
+    required = set(schema.get("required", list(props)))
+    unknown = required - set(props)
+    if unknown:
+        raise SchemaError(f"required names not in properties: {sorted(unknown)}")
+    names = list(props)
+    if names[0] not in required:
+        raise SchemaError("first property must be required (anchors the commas)")
+    parts = []
+    for i, name in enumerate(names):
+        field = '"%s": %s' % (regex_escape(name), _value_regex(props[name]))
+        if i == 0:
+            parts.append(field)
+        elif name in required:
+            parts.append(", " + field)
+        else:
+            parts.append("(, " + field + ")?")
+    return r"\{" + "".join(parts) + r"\}"
+
+
+def schema_to_regex(schema: Dict[str, Any]) -> str:
+    """Compile a fixed-schema JSON Schema to a regex (repo subset).
+
+    Top level must be an object schema (the JSON-Mode-Eval setting)."""
+    if schema.get("type") != "object":
+        raise SchemaError("top-level schema must have type 'object'")
+    return _object_regex(schema)
+
+
+def schema_for_fields(fields) -> Dict[str, Any]:
+    """Convenience: build the JSON Schema matching the synthetic task's
+    ``(name, kind)`` field tuples (kind in {str, int}) — the schema-frontend
+    equivalent of ``repro.data.synthetic.json_schema_regex``."""
+    props = {}
+    for name, kind in fields:
+        if kind == "str":
+            props[name] = {"type": "string", "pattern": "[a-z]+"}
+        else:
+            props[name] = {"type": "integer", "maxDigits": 4, "minimum": 0}
+    return {"type": "object", "properties": props, "required": list(props)}

@@ -1,0 +1,158 @@
+"""Constraint specification: pluggable frontends over one canonical pattern.
+
+Every user-facing constraint spec — a raw regex, a JSON Schema, a choice
+between literals, or "no constraint" — normalizes to a single canonical
+``pattern`` string in the repo's regex subset (``repro.core.regex``). That
+pattern is the compilation key: downstream, everything funnels through the
+shared LRU :class:`~repro.constraints.cache.ConstraintCache` keyed by
+``(pattern, vocab fingerprint)``, regardless of which frontend produced it.
+
+Frontends are plugins registered by name (:func:`register_frontend`); the
+built-ins are ``regex``, ``json_schema``, ``choice`` and ``none``. New spec
+languages (e.g. a CFG frontend that over-approximates to a regular language)
+drop in without touching the engines:
+
+    class CfgFrontend:
+        name = "cfg"
+        def to_pattern(self, payload):
+            return my_cfg_to_regular_approximation(payload)
+
+    register_frontend(CfgFrontend())
+    c = Constraint.from_spec("cfg", grammar)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Protocol, Sequence, runtime_checkable
+
+from .schema import regex_escape, schema_to_regex
+
+# Matches every string: the stand-in constraint for unconstrained requests
+# decoded under a constrained strategy (and for free serving slots).
+PLACEHOLDER_PATTERN = r"(.|\n)*"
+
+
+@runtime_checkable
+class ConstraintSpec(Protocol):
+    """A constraint frontend: normalizes a spec payload to a canonical
+    pattern (or ``None`` for "unconstrained")."""
+
+    name: str
+
+    def to_pattern(self, payload: Any) -> Optional[str]:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class _FnFrontend:
+    """Adapter wrapping a plain ``payload -> pattern`` function."""
+    name: str
+    fn: Any
+
+    def to_pattern(self, payload: Any) -> Optional[str]:
+        return self.fn(payload)
+
+
+_FRONTENDS: Dict[str, ConstraintSpec] = {}
+
+
+def register_frontend(spec: ConstraintSpec, *, overwrite: bool = False) -> ConstraintSpec:
+    """Register a constraint frontend under ``spec.name``."""
+    name = spec.name
+    if not overwrite and name in _FRONTENDS:
+        raise ValueError(f"frontend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _FRONTENDS[name] = spec
+    return spec
+
+
+def frontend(name: str) -> ConstraintSpec:
+    try:
+        return _FRONTENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown constraint frontend {name!r}; registered: "
+            f"{sorted(_FRONTENDS)}"
+        ) from None
+
+
+def frontends() -> tuple:
+    """Registered frontend names (sorted)."""
+    return tuple(sorted(_FRONTENDS))
+
+
+def _choice_pattern(options: Sequence[Any]) -> str:
+    if not options:
+        raise ValueError("choice constraint needs at least one option")
+    parts = [regex_escape(o) if isinstance(o, str) else regex_escape(json.dumps(o))
+             for o in options]
+    return "(" + "|".join(parts) + ")"
+
+
+register_frontend(_FnFrontend("regex", lambda p: p))
+register_frontend(_FnFrontend("json_schema", schema_to_regex))
+register_frontend(_FnFrontend("choice", _choice_pattern))
+register_frontend(_FnFrontend("none", lambda _payload: None))
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """Normalized decode constraint: a regex over the output bytes.
+
+    Build with :meth:`regex`, :meth:`json_schema`, :meth:`choice`,
+    :meth:`none`, or :meth:`from_spec` for any registered frontend;
+    ``pattern`` is always a pattern in the repo's regex subset (``None``
+    for unconstrained). ``source`` records the frontend that produced it.
+
+    Equality and hashing are defined on ``(pattern, source)`` only — the
+    original ``spec`` payload (e.g. an unhashable JSON-Schema dict) is
+    carried for provenance but never participates, so ``Constraint`` can
+    key dicts and dedupe through sets. ``schema`` is the old
+    ``serving.types.Constraint`` field (kept for direct-construction
+    back-compat); it mirrors ``spec`` for the ``json_schema`` frontend.
+    """
+
+    pattern: Optional[str]
+    source: str = "regex"
+    spec: Any = dataclasses.field(default=None, compare=False, repr=False)
+    schema: Optional[Dict[str, Any]] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        # whichever the caller provided (new spec= or old schema=), keep both
+        # views consistent
+        if self.schema is not None and self.spec is None:
+            object.__setattr__(self, "spec", self.schema)
+        elif (self.schema is None and self.source == "json_schema"
+              and isinstance(self.spec, dict)):
+            object.__setattr__(self, "schema", self.spec)
+
+    @classmethod
+    def from_spec(cls, source: str, payload: Any = None) -> "Constraint":
+        """Normalize ``payload`` through the registered ``source`` frontend."""
+        return cls(pattern=frontend(source).to_pattern(payload),
+                   source=source, spec=payload)
+
+    @classmethod
+    def regex(cls, pattern: str) -> "Constraint":
+        return cls.from_spec("regex", pattern)
+
+    @classmethod
+    def json_schema(cls, schema: Dict[str, Any]) -> "Constraint":
+        return cls.from_spec("json_schema", schema)
+
+    @classmethod
+    def choice(cls, options: Sequence[Any]) -> "Constraint":
+        """Exactly one of ``options``: strings match literally, anything else
+        matches its JSON encoding (enum-of-literals)."""
+        return cls.from_spec("choice", tuple(options))
+
+    @classmethod
+    def none(cls) -> "Constraint":
+        """Unconstrained request (no DFA; decoded with argmax)."""
+        return cls.from_spec("none")
+
+    @property
+    def constrained(self) -> bool:
+        return self.pattern is not None

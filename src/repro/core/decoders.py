@@ -1,14 +1,35 @@
-"""Decoder plug-ins for the diffusion engine.
+"""Decoder strategy registry for the diffusion engines.
 
 A decoder consumes the post-remask per-position log distribution of the current
 block (committed positions are one-hot; remasked positions are one-hot on ⊥) and
 returns the block's token string for this diffusion step, plus carry state for
 semi-autoregressive threading (paper Appendix D).
+
+Strategies are plugins with a uniform :class:`DecodeOut` contract, registered
+by name (:func:`register`); the built-ins are ``unconstrained``, ``greedy``
+and ``dingo``. Each strategy supplies
+
+    decode(logp, tables, carry, *, impl)          one (d, V) block
+    batched(logp, tables, carry, *, t_ax, impl)   a (B, d, V) grid; ``t_ax``
+                                                  is 0 when tables carry a
+                                                  per-row batch axis
+                                                  (``stack_tables``), None
+                                                  when shared
+    init_carry(tables, batch)                     the (B, ...) carry at the
+                                                  DFA start state
+    carry_next(tables, carry, q_final, tokens,    thread the carry across a
+               *, t_ax)                           block boundary (semi-AR);
+                                                  identity when the carry is
+                                                  constant
+
+so the one-shot :class:`~repro.diffusion.engine.DiffusionEngine` and the
+continuous-batching serve step dispatch through the same table. A new decode
+rule (e.g. sampling-based DINGO) is one ``register(...)`` call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +49,157 @@ class DecodeOut(NamedTuple):
     logprob: jax.Array   # () f32
 
 
+def _identity_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+    return carry
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderStrategy:
+    """One registered decode rule. ``carry`` is strategy-defined: DINGO
+    threads (Q,) log-weights, greedy a (Q,) bool reachable set.
+
+    ``carry_next(tables, carry, q_final, tokens, *, t_ax)`` threads the
+    per-row carry across a block boundary (semi-AR, paper Appendix D) from
+    the block's decode outputs; strategies whose carry is constant (e.g.
+    unconstrained) use the identity default."""
+
+    name: str
+    needs_tables: bool
+    decode: Callable[..., DecodeOut]
+    batched: Callable[..., tuple]
+    init_carry: Callable[..., jax.Array]
+    carry_next: Callable[..., jax.Array] = _identity_carry_next
+
+
+_REGISTRY: Dict[str, DecoderStrategy] = {}
+
+
+def register(
+    name: str,
+    *,
+    decode: Callable[..., DecodeOut],
+    batched: Callable[..., tuple],
+    init_carry: Callable[..., jax.Array],
+    carry_next: Callable[..., jax.Array] = _identity_carry_next,
+    needs_tables: bool = True,
+    overwrite: bool = False,
+) -> DecoderStrategy:
+    """Register a decode strategy under ``name``."""
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"decode strategy {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    strat = DecoderStrategy(name=name, needs_tables=needs_tables,
+                            decode=decode, batched=batched,
+                            init_carry=init_carry, carry_next=carry_next)
+    _REGISTRY[name] = strat
+    return strat
+
+
+def get_strategy(name: str) -> DecoderStrategy:
+    """Resolve a strategy by name; unknown names list what IS registered."""
+    strat = _REGISTRY.get(name)
+    if strat is None:
+        raise ValueError(
+            f"unknown decode strategy {name!r}; registered strategies: "
+            f"{registered()}"
+        )
+    return strat
+
+
+def registered() -> tuple:
+    """Registered strategy names (sorted)."""
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in strategies
+# ---------------------------------------------------------------------------
+def _unconstrained_decode(logp, tables, carry, *, impl="jnp") -> DecodeOut:
+    toks = unconstrained_decode(logp)
+    lp = jnp.take_along_axis(logp, toks[:, None], axis=1).sum()
+    return DecodeOut(toks, jnp.array(True), jnp.array(-1, jnp.int32), lp)
+
+
+def _unconstrained_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
+    toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
+    b = logp.shape[0]
+    return toks, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32)
+
+
+def _unconstrained_carry(tables, batch: int):
+    return jnp.zeros((batch, 1), jnp.float32)
+
+
+def _greedy_decode(logp, tables, carry, *, impl="jnp") -> DecodeOut:
+    r = greedy_decode(logp, tables, carry)
+    return DecodeOut(r.tokens, r.valid, jnp.array(-1, jnp.int32), r.logprob)
+
+
+def _greedy_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
+    res = jax.vmap(
+        lambda lp, t, r: greedy_decode(lp, t, r), in_axes=(0, t_ax, 0)
+    )(logp, tables, carry.astype(bool))
+    return res.tokens, res.valid, jnp.zeros((logp.shape[0],), jnp.int32)
+
+
+def _greedy_carry(tables, batch: int):
+    q = tables.cnext.shape[-2]
+    start = jnp.broadcast_to(jnp.asarray(tables.start), (batch,))
+    return jnp.arange(q)[None, :] == start[:, None]
+
+
+def _greedy_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+    """Advance each row's reachable set through its committed block."""
+
+    def per_seq(r, toks, tb):
+        def step(rr, t):
+            nxt = jnp.take(tb.cnext, tb.class_id[t], axis=1)   # (Q,)
+            q = rr.shape[0]
+            r_new = jnp.zeros((q,), jnp.int32).at[nxt].max(rr.astype(jnp.int32)) > 0
+            return r_new & tb.live, None
+
+        r_final, _ = jax.lax.scan(step, r, toks)
+        return r_final
+
+    return jax.vmap(per_seq, in_axes=(0, 0, t_ax))(
+        carry.astype(bool), tokens, tables)
+
+
+def _dingo_decode(logp, tables, carry, *, impl="jnp") -> DecodeOut:
+    r = dingo_decode(logp, tables, carry, impl=impl)
+    return DecodeOut(r.tokens, r.valid, r.q_final, r.logprob)
+
+
+def _dingo_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
+    res = jax.vmap(
+        lambda lp, t, w: dingo_decode(lp, t, w, impl=impl),
+        in_axes=(0, t_ax, 0),
+    )(logp, tables, carry)
+    return res.tokens, res.valid, res.q_final
+
+
+def _dingo_carry(tables, batch: int):
+    return jnp.where(_greedy_carry(tables, batch), 0.0, NEG_INF)
+
+
+def _dingo_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+    """Restart each row's DP from its block-end state (one-hot log-weights)."""
+    q = tables.cnext.shape[-2]
+    return jnp.where(jax.nn.one_hot(q_final, q, dtype=bool), 0.0, NEG_INF)
+
+
+register(UNCONSTRAINED, decode=_unconstrained_decode,
+         batched=_unconstrained_batched, init_carry=_unconstrained_carry,
+         needs_tables=False)
+register(GREEDY, decode=_greedy_decode, batched=_greedy_batched,
+         init_carry=_greedy_carry, carry_next=_greedy_carry_next)
+register(DINGO, decode=_dingo_decode, batched=_dingo_batched,
+         init_carry=_dingo_carry, carry_next=_dingo_carry_next)
+
+
+# ---------------------------------------------------------------------------
+# uniform entry point
+# ---------------------------------------------------------------------------
 def decode_block(
     method: str,
     logp: jax.Array,
@@ -37,19 +209,16 @@ def decode_block(
     *,
     impl: str = "jnp",
 ) -> DecodeOut:
-    if method == UNCONSTRAINED:
-        toks = unconstrained_decode(logp)
-        lp = jnp.take_along_axis(logp, toks[:, None], axis=1).sum()
-        return DecodeOut(toks, jnp.array(True), jnp.array(-1, jnp.int32), lp)
-    if tables is None:
-        raise ValueError(f"method {method!r} requires DINGO tables")
-    if method == GREEDY:
-        r = greedy_decode(logp, tables, reach0)
-        return DecodeOut(r.tokens, r.valid, jnp.array(-1, jnp.int32), r.logprob)
-    if method == DINGO:
-        r = dingo_decode(logp, tables, w0, impl=impl)
-        return DecodeOut(r.tokens, r.valid, r.q_final, r.logprob)
-    raise ValueError(f"unknown decode method {method!r}")
+    """Decode one (d, V) block with the named strategy. ``w0`` (DINGO
+    log-weights) and ``reach0`` (greedy reachable set) are alternative carry
+    encodings; whichever is non-None is handed to the strategy."""
+    strat = get_strategy(method)
+    if strat.needs_tables and tables is None:
+        raise ValueError(
+            f"decode strategy {method!r} requires DINGO tables (got tables=None)"
+        )
+    carry = w0 if w0 is not None else reach0
+    return strat.decode(logp, tables, carry, impl=impl)
 
 
 def initial_w0(tables: DingoTables, dtype=jnp.float32) -> jax.Array:

@@ -25,10 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
-from repro.core import NEG_INF, DingoTables
-from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
-from repro.core.dingo import dingo_decode
-from repro.core.greedy import greedy_decode
+from repro.core import NEG_INF, DingoTables, decoders
 from repro.models import ModelInputs, forward, init_caches
 
 from .remask import confidence, select_commits
@@ -66,7 +63,8 @@ class DiffusionEngine:
         self.scfg = scfg
         self.mask_id = mask_token_id
         self.tables = tables
-        if scfg.decode != UNCONSTRAINED and tables is None:
+        self._strategy = decoders.get_strategy(scfg.decode)
+        if self._strategy.needs_tables and tables is None:
             raise ValueError(f"decode={scfg.decode} requires DINGO tables")
 
         cfg_ = cfg
@@ -91,6 +89,7 @@ class DiffusionEngine:
         self._prefill = prefill
         self._block_logits = block_logits
         self._decode_fns = self._build_decoders()
+        self._carry_next_fn = self._build_carry_next()
 
     @property
     def _batched_tables(self) -> bool:
@@ -99,39 +98,31 @@ class DiffusionEngine:
         return self.tables is not None and self.tables.cnext.ndim == 3
 
     def _build_decoders(self):
-        method = self.scfg.decode
+        """Jit the registered strategy's batched decode over this engine's
+        (possibly per-row stacked) tables."""
+        strat = self._strategy
         impl = self.scfg.kernel_impl
+        tables = self.tables
         t_ax = 0 if self._batched_tables else None
 
-        if method == UNCONSTRAINED:
-            @jax.jit
-            def dec(logp, w0):
-                toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
-                b = logp.shape[0]
-                return toks, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32)
-            return dec
-        if method == DINGO:
-            tables = self.tables
+        @jax.jit
+        def dec(logp, carry):
+            return strat.batched(logp, tables, carry, t_ax=t_ax, impl=impl)
 
-            @jax.jit
-            def dec(logp, w0):
-                res = jax.vmap(
-                    lambda lp, t, w: dingo_decode(lp, t, w, impl=impl),
-                    in_axes=(0, t_ax, 0),
-                )(logp, tables, w0)
-                return res.tokens, res.valid, res.q_final
-            return dec
-        if method == GREEDY:
-            tables = self.tables
+        return dec
 
-            @jax.jit
-            def dec(logp, reach0):
-                res = jax.vmap(
-                    lambda lp, t, r: greedy_decode(lp, t, r), in_axes=(0, t_ax, 0)
-                )(logp, tables, reach0)
-                return res.tokens, res.valid, jnp.zeros((logp.shape[0],), jnp.int32)
-            return dec
-        raise ValueError(method)
+    def _build_carry_next(self):
+        """Jit the strategy's block-boundary carry threading (Appendix D)."""
+        strat = self._strategy
+        tables = self.tables
+        t_ax = 0 if self._batched_tables else None
+
+        @jax.jit
+        def nxt(carry, q_final, block_tokens):
+            return strat.carry_next(tables, carry, q_final, block_tokens,
+                                    t_ax=t_ax)
+
+        return nxt
 
     # ------------------------------------------------------------------
     def _decoder_logp(self, logits, block_tokens, committed, to_commit):
@@ -155,25 +146,7 @@ class DiffusionEngine:
         return out
 
     def _carry0(self, batch: int):
-        if self.scfg.decode not in (DINGO, GREEDY):
-            return jnp.zeros((batch, 1))
-        q = self.tables.cnext.shape[-2]
-        start = jnp.broadcast_to(jnp.asarray(self.tables.start), (batch,))
-        onehot = jnp.arange(q)[None, :] == start[:, None]          # (B, Q)
-        if self.scfg.decode == DINGO:
-            return jnp.where(onehot, 0.0, NEG_INF)
-        return onehot
-
-    def _carry_next(self, q_final, valid):
-        if self.scfg.decode == DINGO:
-            q = self.tables.cnext.shape[0]
-            w0 = jnp.where(jax.nn.one_hot(q_final, q, dtype=bool), 0.0, NEG_INF)
-            return w0
-        if self.scfg.decode == GREEDY:
-            # greedy threads the reachable set implicitly: rerun from tokens is
-            # costly, so we keep the per-block reach final — handled in generate()
-            return None
-        return None
+        return self._strategy.init_carry(self.tables, batch)
 
     # ------------------------------------------------------------------
     def generate(self, prompt_tokens: np.ndarray, seed: int = 0) -> GenerationResult:
@@ -192,7 +165,6 @@ class DiffusionEngine:
 
         rng = jax.random.PRNGKey(seed)
         carry = self._carry0(b)
-        reach_carry = carry if scfg.decode == GREEDY else None
         all_tokens = []
         all_valid = np.ones((b,), bool)
 
@@ -209,8 +181,7 @@ class DiffusionEngine:
                 conf = confidence(logits, scfg.remask, sub, impl=scfg.kernel_impl)
                 new_committed = select_commits(conf, committed, d - n_mask_after)
                 logp = self._decoder_logp(logits, block_tokens, committed, new_committed)
-                dec_carry = reach_carry if scfg.decode == GREEDY else carry
-                toks, ok, qf = self._decode_fns(logp, dec_carry)
+                toks, ok, qf = self._decode_fns(logp, carry)
                 # keep mask token at still-masked positions for the next forward
                 block_tokens = jnp.where(new_committed, toks, self.mask_id)
                 committed = new_committed
@@ -219,31 +190,10 @@ class DiffusionEngine:
             caches = self._prefill(self.params, caches, block_tokens, start, attend_cache=True)
             all_tokens.append(np.asarray(block_tokens))
             all_valid &= np.asarray(valid)
-            if scfg.decode == DINGO:
-                carry = self._carry_next(q_final, valid)
-            elif scfg.decode == GREEDY:
-                # advance the reachable set through the committed block
-                reach_carry = self._advance_reach(reach_carry, block_tokens)
+            carry = self._carry_next_fn(carry, q_final, block_tokens)
         return GenerationResult(
             tokens=np.concatenate(all_tokens, axis=1),
             valid=all_valid,
             time_s=time.perf_counter() - t0,
             steps=n_blocks * steps_per_block,
         )
-
-    @functools.partial(jax.jit, static_argnums=0)
-    def _advance_reach(self, reach, tokens):
-        tables = self.tables
-        t_ax = 0 if self._batched_tables else None
-
-        def per_seq(r, toks, tb):
-            def step(rr, t):
-                nxt = jnp.take(tb.cnext, tb.class_id[t], axis=1)  # (Q,)
-                q = rr.shape[0]
-                r_new = jnp.zeros((q,), jnp.int32).at[nxt].max(rr.astype(jnp.int32)) > 0
-                return r_new & tb.live, None
-
-            r_final, _ = jax.lax.scan(step, r, toks)
-            return r_final
-
-        return jax.vmap(per_seq, in_axes=(0, 0, t_ax))(reach, tokens, tables)

@@ -14,10 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, ServeConfig
-from repro.core import NEG_INF, DingoTables
-from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
-from repro.core.dingo import dingo_decode
-from repro.core.greedy import greedy_decode
+from repro.core import NEG_INF, DingoTables, decoders
 from repro.models import ModelInputs, forward, with_page_tables
 
 from .remask import confidence, select_commits
@@ -61,7 +58,7 @@ def make_serve_step(
     ``page_tables_arg`` (paged KV serving) is the (B, max_pages) slot→page
     mapping for this block; it is installed into every paged cache leaf before
     the forward so the attention gather reads each slot's current pages."""
-    method = scfg.decode
+    strategy = decoders.get_strategy(scfg.decode)
     impl = scfg.kernel_impl
 
     def serve_step(params, caches, block_tokens, committed, w0, start, rng,
@@ -86,24 +83,7 @@ def make_serve_step(
         conf = confidence(logits, scfg.remask, rng, impl=impl)
         new_committed = select_commits(conf, committed, n_commit_in)
         logp = decoder_logp(logits, block_tokens, committed, new_committed, mask_id)
-        if method == UNCONSTRAINED:
-            toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
-            valid = jnp.ones((b,), bool)
-            qf = jnp.zeros((b,), jnp.int32)
-        elif method == DINGO:
-            res = jax.vmap(
-                lambda lp, t, w: dingo_decode(lp, t, w, impl=impl),
-                in_axes=(0, t_ax, 0),
-            )(logp, tables_in, w0)
-            toks, valid, qf = res.tokens, res.valid, res.q_final
-        elif method == GREEDY:
-            res = jax.vmap(
-                lambda lp, t, r: greedy_decode(lp, t, r), in_axes=(0, t_ax, 0)
-            )(logp, tables_in, w0.astype(bool))
-            toks, valid = res.tokens, res.valid
-            qf = jnp.zeros((b,), jnp.int32)
-        else:
-            raise ValueError(method)
+        toks, valid, qf = strategy.batched(logp, tables_in, w0, t_ax=t_ax, impl=impl)
         block_tokens = jnp.where(new_committed, toks, mask_id)
         return block_tokens, new_committed, valid, qf, caches
 

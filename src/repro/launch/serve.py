@@ -1,12 +1,15 @@
 """Serving launcher: batched constrained generation with any registered arch.
 
-One-shot batch (the original path):
+Both modes drive the unified :class:`repro.api.Engine` surface with the same
+``Request``/``Constraint`` objects and the shared compiled-constraint cache.
+
+One-shot batch (offline ``Engine.generate``):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --decode dingo --regex '<<[a-j]( \\+ [a-j])*>>' --batch 2
 
-Continuous-batching server (``repro.serving``): admits a mixed regex /
-JSON-Schema request stream into batch slots, amortizing constraint
+Continuous-batching server (``Engine.serve``): admits a mixed regex /
+JSON-Schema / choice request stream into batch slots, amortizing constraint
 compilation through the LRU cache:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
@@ -18,26 +21,24 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
+from repro.api import Constraint, ConstraintCache, Engine, Request
 from repro.config import ServeConfig
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import build_token_dfa, compile_pattern, tables_from_tokendfa
-from repro.diffusion import DiffusionEngine
 from repro.models import init_model
 from repro.tokenizer import default_tokenizer
 from repro.training import checkpoint
 
 
 def _demo_stream(args, n):
-    """Mixed regex / JSON-Schema request stream for --server mode."""
+    """Mixed regex / JSON-Schema / choice request stream for --server mode."""
+    from repro.constraints import schema_for_fields
     from repro.data import synthetic
-    from repro.serving import Constraint, Request, schema_for_fields
 
     reqs = []
     json_budget = max(args.gen_len, 32)   # a minimal schema object needs ~20 tokens
     for i in range(n):
-        kind = i % 3
+        kind = i % 4
         if kind == 0:
             fields, name = synthetic.JSON_SCHEMAS[i % len(synthetic.JSON_SCHEMAS)][0], "json"
             c = Constraint.json_schema(schema_for_fields(fields))
@@ -46,34 +47,46 @@ def _demo_stream(args, n):
         elif kind == 1:
             reqs.append(Request(args.prompt, Constraint.regex(args.regex),
                                 max_new_tokens=args.gen_len, metadata={"kind": "regex"}))
-        else:
+        elif kind == 2:
             reqs.append(Request(f"say ab {i} ", Constraint.regex(r"(ab|ba)+"),
                                 max_new_tokens=args.gen_len, metadata={"kind": "regex"}))
+        else:
+            reqs.append(Request(f"pick one {i} ", Constraint.choice(["yes", "no", "maybe"]),
+                                max_new_tokens=args.gen_len, metadata={"kind": "choice"}))
     return reqs
 
 
-def run_server(args, cfg, tok, params):
-    from repro.serving import ConstraintCache, ServingEngine
+def _report_cache(cache: ConstraintCache) -> str:
+    s = cache.stats
+    return (f"constraint cache: {s.hits} hits / {s.misses} misses "
+            f"({s.compile_time_s*1e3:.0f} ms compiling)")
 
-    scfg = ServeConfig(
-        gen_len=max(args.gen_len, 32), block_size=args.block,
-        diffusion_steps_per_block=args.steps, decode=args.decode, remask=args.remask,
-    )
-    cache = ConstraintCache()
-    eng = ServingEngine(params, cfg, scfg, tok, n_slots=args.slots,
-                        max_prompt_len=64, constraint_cache=cache,
-                        kv_layout="paged" if args.paged else "dense",
-                        page_size=args.page_size)
-    reqs = _demo_stream(args, args.requests)
+
+def run_server(args, eng: Engine, n_requests: int):
+    reqs = _demo_stream(args, n_requests)
     t0 = time.time()
     for c in eng.serve(reqs):
         print(f"[req {c.request_id}] valid={c.valid} matched={c.matched} "
               f"blocks={c.blocks} latency={c.latency_s:.2f}s -> {c.text!r}")
     dt = time.time() - t0
-    s = cache.stats
-    print(f"{dt:.2f}s total | {len(reqs)/dt:.2f} req/s | {eng.blocks_run} blocks | "
-          f"constraint cache: {s.hits} hits / {s.misses} misses "
-          f"({s.compile_time_s*1e3:.0f} ms compiling)")
+    print(f"{dt:.2f}s total | {len(reqs)/dt:.2f} req/s | "
+          f"{eng.serving.blocks_run} blocks | {_report_cache(eng.cache)}")
+
+
+def run_batch(args, eng: Engine):
+    if args.decode == "unconstrained":
+        constraint = Constraint.none()
+    else:
+        constraint = Constraint.regex(args.regex)
+    reqs = [Request(args.prompt, constraint, max_new_tokens=args.gen_len)
+            for _ in range(args.batch)]
+    t0 = time.time()
+    done = eng.generate(reqs, seed=0)
+    dt = time.time() - t0
+    for i, c in enumerate(done):
+        print(f"[{i}] valid={c.valid} matched={c.matched} -> {c.text!r}")
+    print(f"{dt:.2f}s total, {dt/args.batch:.2f}s/request, "
+          f"{done[0].steps} diffusion steps | {_report_cache(eng.cache)}")
 
 
 def main():
@@ -111,34 +124,20 @@ def main():
     if args.ckpt:
         params = checkpoint.restore(args.ckpt, params)
 
-    if args.server:
-        run_server(args, cfg, tok, params)
-        return
-
-    tables = None
-    if args.decode != "unconstrained":
-        td = build_token_dfa(
-            compile_pattern(args.regex), tok.token_bytes,
-            mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
-            special_token_ids=tok.special_token_ids,
-        )
-        tables = tables_from_tokendfa(td)
-        print(f"DFA: {td.num_states} states, {td.num_classes} classes "
-              f"({td.build_time_s*1e3:.1f} ms precompute)")
-
     scfg = ServeConfig(
-        gen_len=args.gen_len, block_size=args.block,
+        gen_len=max(args.gen_len, 32) if args.server else args.gen_len,
+        block_size=args.block,
         diffusion_steps_per_block=args.steps, decode=args.decode, remask=args.remask,
     )
-    eng = DiffusionEngine(params, cfg, scfg, tok.mask_token_id, tables)
-    prompt_ids = tok.encode(args.prompt)
-    prompts = np.asarray([prompt_ids] * args.batch, np.int32)
-    t0 = time.time()
-    res = eng.generate(prompts, seed=0)
-    dt = time.time() - t0
-    for i in range(args.batch):
-        print(f"[{i}] valid={bool(res.valid[i])} -> {tok.decode(res.tokens[i])!r}")
-    print(f"{dt:.2f}s total, {dt/args.batch:.2f}s/request, {res.steps} diffusion steps")
+    eng = Engine(params, cfg, scfg, tok, n_slots=args.slots,
+                 max_prompt_len=64, constraint_cache=ConstraintCache(),
+                 kv_layout="paged" if args.paged else "dense",
+                 page_size=args.page_size)
+
+    if args.server:
+        run_server(args, eng, args.requests)
+    else:
+        run_batch(args, eng)
 
 
 if __name__ == "__main__":

@@ -2,25 +2,60 @@
 
 Layers:
 
-    types      Request / Completion / Constraint (regex or JSON-Schema spec)
-    schema     JSON-Schema -> regex frontend (JSON-Mode-Eval workload)
-    cache      LRU compiled-constraint cache keyed by (pattern, vocab fp)
     paged      fixed-size KV page allocator (reserve/alloc, trash page 0)
     scheduler  slot-based continuous batching, (Q, C)-bucketed table stacking
     engine     serve loop driving make_serve_step; yields completions
                (kv_layout='dense' per-slot grid or 'paged' shared page pool)
+
+The request/constraint surface moved to the unified API (PR 3): build
+``Request``/``Completion`` from :mod:`repro.api` and ``Constraint`` /
+``ConstraintCache`` / the JSON-Schema frontend from :mod:`repro.constraints`
+— or drive everything through :class:`repro.api.Engine`. The old names below
+still resolve here, via deprecation shims.
 """
-from .cache import CacheStats, CompiledConstraint, ConstraintCache, vocab_fingerprint
+from __future__ import annotations
+
+import warnings
+
+from repro import api as _api
+from repro import constraints as _constraints
+
 from .engine import ServingEngine
 from .paged import PagePool, PagesExhausted, PoolStats
-from .schema import SchemaError, schema_for_fields, schema_to_regex
 from .scheduler import ContinuousBatchingScheduler, Slot, qc_bucket
-from .types import Completion, Constraint, Request
+
+# Old import paths (pre repro.api/repro.constraints): same objects, resolved
+# through __getattr__ so `from repro.serving import Constraint` keeps working
+# but emits a DeprecationWarning pointing at the new home.
+_DEPRECATED = {
+    "Constraint": ("repro.constraints", _constraints.Constraint),
+    "ConstraintCache": ("repro.constraints", _constraints.ConstraintCache),
+    "CompiledConstraint": ("repro.constraints", _constraints.CompiledConstraint),
+    "CacheStats": ("repro.constraints", _constraints.CacheStats),
+    "vocab_fingerprint": ("repro.constraints", _constraints.vocab_fingerprint),
+    "SchemaError": ("repro.constraints", _constraints.SchemaError),
+    "schema_to_regex": ("repro.constraints", _constraints.schema_to_regex),
+    "schema_for_fields": ("repro.constraints", _constraints.schema_for_fields),
+    "Request": ("repro.api", _api.Request),
+    "Completion": ("repro.api", _api.Completion),
+}
 
 __all__ = [
-    "CacheStats", "CompiledConstraint", "ConstraintCache", "vocab_fingerprint",
     "ServingEngine", "PagePool", "PagesExhausted", "PoolStats",
-    "SchemaError", "schema_for_fields", "schema_to_regex",
     "ContinuousBatchingScheduler", "Slot", "qc_bucket",
-    "Completion", "Constraint", "Request",
+    *_DEPRECATED,
 ]
+
+
+def __getattr__(name: str):
+    try:
+        new_home, obj = _DEPRECATED[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    warnings.warn(
+        f"repro.serving.{name} is deprecated; import {name} from "
+        f"{new_home} instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return obj

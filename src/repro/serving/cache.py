@@ -1,166 +1,29 @@
-"""LRU compiled-constraint cache.
-
-DINGO's efficiency story (paper §4, Table 3) rests on the regex -> DFA ->
-token-DFA -> packed-table precomputation being amortized across requests.
-In a serving deployment the same handful of schemas/regexes recur constantly
-(DOMINO makes the same observation for AR constrained decoding), so the cache
-maps
-
-    (pattern, vocab fingerprint)  ->  CompiledConstraint(TokenDFA, DingoTables)
-
-with LRU eviction and hit/miss/compile-time stats. The vocab fingerprint is
-part of the key because the token-level automaton depends on the tokenizer's
-byte surface forms and special-token layout, not just the pattern — two
-deployments sharing a cache across tokenizers must never alias entries.
+"""Deprecated module: the compiled-constraint cache moved to
+:mod:`repro.constraints.cache` so the offline batch path caches too.
+This shim re-exports the same objects with a :class:`DeprecationWarning`;
+see ``docs/API.md`` for the migration table.
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import time
-from collections import OrderedDict
-from typing import Optional, Tuple
+import warnings
 
-import numpy as np
+from repro.constraints import cache as _cache
 
-from repro.core import (
-    DingoTables,
-    TokenDFA,
-    build_token_dfa,
-    compile_pattern,
-    tables_from_tokendfa,
+_NAMES = (
+    "UNREACHABLE", "CacheStats", "CompiledConstraint", "ConstraintCache",
+    "dist_to_accept", "qc_bucket", "vocab_fingerprint",
 )
 
-
-# dist_to_accept() sentinel for states that cannot reach acceptance
-UNREACHABLE = np.iinfo(np.int32).max // 2
+__all__ = list(_NAMES)
 
 
-def vocab_fingerprint(tokenizer) -> str:
-    """Stable digest of the tokenizer's byte surface forms + special ids.
-    Each token is length-prefixed (token bytes may themselves contain any
-    byte value, so a bare separator would let distinct vocabularies collide)
-    and the vocab size is mixed in."""
-    h = hashlib.blake2b(digest_size=12)
-    h.update(len(tokenizer.token_bytes).to_bytes(4, "little"))
-    for tb in tokenizer.token_bytes:
-        if tb is None:
-            h.update((0xFFFFFFFF).to_bytes(4, "little"))
-        else:
-            h.update(len(tb).to_bytes(4, "little") + tb)
-    h.update(bytes(f"|{tokenizer.mask_token_id}|{tokenizer.eos_token_id}|"
-                   f"{tuple(tokenizer.special_token_ids)}", "utf-8"))
-    return h.hexdigest()
-
-
-def dist_to_accept(td: TokenDFA) -> "np.ndarray":
-    """(Q,) int32 — per-state shortest token count to reach an accepting state
-    (a large sentinel when unreachable, e.g. the dead sink). Killed/special
-    tokens already route to the dead state in ``trans``, so they never help;
-    EOS terminator transitions are real rows and count like any token."""
-    dist = np.where(td.accepting, 0, UNREACHABLE).astype(np.int64)
-    for _ in range(td.num_states):
-        nd = np.minimum(dist, dist[td.trans].min(axis=1) + 1)
-        if (nd == dist).all():
-            break
-        dist = nd
-    return dist.astype(np.int32)
-
-
-@dataclasses.dataclass
-class CompiledConstraint:
-    pattern: str
-    tokendfa: TokenDFA
-    tables: DingoTables
-    compile_time_s: float
-    dist: "np.ndarray" = None   # (Q,) tokens-to-accept; filled at compile
-
-    @property
-    def shape(self) -> Tuple[int, int]:
-        """(Q, C) — the scheduler's bucketing key."""
-        return (self.tokendfa.num_states, self.tokendfa.num_classes)
-
-    @property
-    def min_tokens(self) -> int:
-        """Shortest full match, in tokens, from the start state."""
-        return int(self.dist[self.tokendfa.start])
-
-
-@dataclasses.dataclass
-class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0
-    compile_time_s: float = 0.0   # total time spent compiling (misses only)
-
-    @property
-    def lookups(self) -> int:
-        return self.hits + self.misses
-
-    @property
-    def hit_rate(self) -> float:
-        return self.hits / self.lookups if self.lookups else 0.0
-
-    def as_dict(self) -> dict:
-        return dict(hits=self.hits, misses=self.misses, evictions=self.evictions,
-                    compile_time_s=self.compile_time_s, hit_rate=self.hit_rate)
-
-
-class ConstraintCache:
-    """LRU cache of compiled constraints, keyed by (pattern, vocab fp)."""
-
-    def __init__(self, capacity: int = 64):
-        if capacity < 1:
-            raise ValueError("capacity must be >= 1")
-        self.capacity = capacity
-        self._entries: "OrderedDict[Tuple[str, str], CompiledConstraint]" = OrderedDict()
-        self.stats = CacheStats()
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, key) -> bool:
-        return key in self._entries
-
-    def key_for(self, pattern: str, tokenizer) -> Tuple[str, str]:
-        return (pattern, vocab_fingerprint(tokenizer))
-
-    def lookup(self, pattern: str, tokenizer) -> Optional[CompiledConstraint]:
-        """Peek without compiling. Counts as a hit (and refreshes LRU) when
-        present, as a miss when absent — every lookup lands in the stats."""
-        key = self.key_for(pattern, tokenizer)
-        entry = self._entries.get(key)
-        if entry is not None:
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
-        else:
-            self.stats.misses += 1
-        return entry
-
-    def get_or_compile(self, pattern: str, tokenizer) -> Tuple[CompiledConstraint, bool]:
-        """Returns (entry, was_hit); compiles and inserts on miss."""
-        key = self.key_for(pattern, tokenizer)
-        entry = self._entries.get(key)
-        if entry is not None:
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
-            return entry, True
-        t0 = time.perf_counter()
-        td = build_token_dfa(
-            compile_pattern(pattern), tokenizer.token_bytes,
-            mask_token_id=tokenizer.mask_token_id,
-            eos_token_id=tokenizer.eos_token_id,
-            special_token_ids=tokenizer.special_token_ids,
-        )
-        entry = CompiledConstraint(
-            pattern=pattern, tokendfa=td, tables=tables_from_tokendfa(td),
-            compile_time_s=0.0, dist=dist_to_accept(td),
-        )
-        entry.compile_time_s = time.perf_counter() - t0
-        self.stats.misses += 1
-        self.stats.compile_time_s += entry.compile_time_s
-        self._entries[key] = entry
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
-            self.stats.evictions += 1
-        return entry, False
+def __getattr__(name: str):
+    if name not in _NAMES:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    warnings.warn(
+        f"repro.serving.cache.{name} is deprecated; import {name} from "
+        "repro.constraints instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return getattr(_cache, name)

@@ -56,10 +56,11 @@ from repro.models import (
     with_page_tables,
 )
 
-from .cache import ConstraintCache
+from repro.api import Completion, Request
+from repro.constraints import ConstraintCache
+
 from .paged import PagePool
 from .scheduler import ContinuousBatchingScheduler, Slot
-from .types import Completion, Request
 
 
 def _round_up(n: int, mult: int) -> int:

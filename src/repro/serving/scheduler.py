@@ -4,7 +4,7 @@ The serving batch is a fixed grid of ``n_slots`` slots. Requests queue FIFO
 and are admitted into free slots at block boundaries; each slot owns
 
   * a compiled constraint (token DFA + packed DINGO tables, from the
-    :class:`~repro.serving.cache.ConstraintCache`),
+    :class:`~repro.constraints.cache.ConstraintCache`),
   * its DFA carry across blocks — the DINGO end state ``q_final``
     (paper Appendix D) or the greedy reachable set,
   * its absolute cache position (slots sit at *heterogeneous* positions; the
@@ -33,20 +33,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Request
+from repro.constraints import (
+    PLACEHOLDER_PATTERN,
+    UNREACHABLE,
+    CompiledConstraint,
+    Constraint,
+    ConstraintCache,
+    qc_bucket,
+)
 from repro.core import DingoTables, pad_tables
 from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.core.dingo import NEG_INF
 
-from .cache import UNREACHABLE, CompiledConstraint, ConstraintCache
 from .paged import PagePool
-from .types import Constraint, Request
-
-PLACEHOLDER_PATTERN = r"(.|\n)*"
-
-
-def qc_bucket(n: int, floor: int = 8) -> int:
-    """Next power of two >= n (min ``floor``)."""
-    return max(floor, 1 << (int(n) - 1).bit_length())
 
 
 @dataclasses.dataclass

@@ -1,82 +1,35 @@
-"""Request/completion types for the continuous-batching serving layer.
+"""Deprecated module: the serving types moved to the unified API surface.
 
-A :class:`Request` carries a prompt plus a *constraint spec*: either a raw
-regex (the repo's regex subset, ``repro.core.regex``) or a fixed-schema JSON
-object compiled to a regex by :mod:`repro.serving.schema` — the serving-side
-reproduction of the paper's JSON-Mode-Eval workload, where every request
-arrives with its own output schema.
-
-The spec is normalized to a single canonical ``pattern`` string, which is the
-cache key half on the constraint side (:mod:`repro.serving.cache`).
+``Constraint`` lives in :mod:`repro.constraints`; ``Request`` and
+``Completion`` live in :mod:`repro.api` (both modes share them). This shim
+re-exports the same objects with a :class:`DeprecationWarning`; see
+``docs/API.md`` for the migration table.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Any, Dict, List, Optional
+import warnings
 
-_req_counter = itertools.count()
+from repro import api as _api
+from repro import constraints as _constraints
 
+_MOVED = {
+    "Constraint": ("repro.constraints", _constraints.Constraint),
+    "Request": ("repro.api", _api.Request),
+    "Completion": ("repro.api", _api.Completion),
+}
 
-@dataclasses.dataclass(frozen=True)
-class Constraint:
-    """Normalized decode constraint: a regex over the output bytes.
-
-    Build with :meth:`regex` or :meth:`json_schema`; ``pattern`` is always a
-    pattern in the repo's regex subset. ``source`` records the frontend that
-    produced it (``"regex"`` | ``"json_schema"`` | ``"none"``).
-    """
-
-    pattern: Optional[str]
-    source: str = "regex"
-    schema: Optional[Dict[str, Any]] = dataclasses.field(default=None, hash=False)
-
-    @classmethod
-    def regex(cls, pattern: str) -> "Constraint":
-        return cls(pattern=pattern, source="regex")
-
-    @classmethod
-    def json_schema(cls, schema: Dict[str, Any]) -> "Constraint":
-        from .schema import schema_to_regex
-
-        return cls(pattern=schema_to_regex(schema), source="json_schema", schema=schema)
-
-    @classmethod
-    def none(cls) -> "Constraint":
-        """Unconstrained request (no DFA; decoded with argmax)."""
-        return cls(pattern=None, source="none")
-
-    @property
-    def constrained(self) -> bool:
-        return self.pattern is not None
+__all__ = list(_MOVED)
 
 
-@dataclasses.dataclass
-class Request:
-    """One serving request. ``max_new_tokens`` is rounded up to a whole number
-    of diffusion blocks by the scheduler."""
-
-    prompt: str
-    constraint: Constraint
-    max_new_tokens: int = 32
-    request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
-    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
-    # filled by the engine at submit time (host wall-clock, perf_counter domain)
-    submit_time_s: Optional[float] = None
-
-
-@dataclasses.dataclass
-class Completion:
-    """A finished request, yielded by the engine as soon as its slot retires."""
-
-    request_id: int
-    text: str
-    tokens: List[int]
-    valid: bool                 # decoder-reported constraint satisfaction
-    matched: Optional[bool]     # host-side DFA full-match re-check (None: unconstrained)
-    blocks: int                 # diffusion blocks consumed
-    steps: int                  # diffusion steps consumed
-    latency_s: float            # submit -> completion
-    queue_s: float              # submit -> slot admission
-    cache_hit: bool             # constraint came from the compiled-constraint cache
-    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+def __getattr__(name: str):
+    try:
+        new_home, obj = _MOVED[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    warnings.warn(
+        f"repro.serving.types.{name} is deprecated; import {name} from "
+        f"{new_home} instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return obj

@@ -1,0 +1,116 @@
+"""Public-API snapshot for the unified surface (PR 3): pins
+``repro.api.__all__`` / ``repro.constraints.__all__`` so surface changes are
+deliberate, and proves the old ``repro.serving`` import paths still resolve
+to the same objects — through a DeprecationWarning."""
+import warnings
+
+import pytest
+
+import repro.api
+import repro.constraints
+import repro.serving
+import repro.serving.cache
+import repro.serving.schema
+import repro.serving.types
+
+API_ALL = [
+    "Constraint",
+    "ConstraintCache",
+    "Request",
+    "Completion",
+    "Engine",
+]
+
+CONSTRAINTS_ALL = [
+    "Constraint",
+    "ConstraintSpec",
+    "register_frontend",
+    "frontend",
+    "frontends",
+    "PLACEHOLDER_PATTERN",
+    "SchemaError",
+    "regex_escape",
+    "schema_to_regex",
+    "schema_for_fields",
+    "ConstraintCache",
+    "CompiledConstraint",
+    "CacheStats",
+    "vocab_fingerprint",
+    "dist_to_accept",
+    "qc_bucket",
+    "UNREACHABLE",
+]
+
+
+def test_api_all_pinned():
+    assert list(repro.api.__all__) == API_ALL
+    for name in API_ALL:
+        assert getattr(repro.api, name) is not None
+
+
+def test_constraints_all_pinned():
+    assert sorted(repro.constraints.__all__) == sorted(CONSTRAINTS_ALL)
+    for name in CONSTRAINTS_ALL:
+        assert getattr(repro.constraints, name) is not None
+
+
+def test_api_reexports_are_canonical():
+    assert repro.api.Constraint is repro.constraints.Constraint
+    assert repro.api.ConstraintCache is repro.constraints.ConstraintCache
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old imports warn but resolve to the SAME objects
+# ---------------------------------------------------------------------------
+SERVING_SHIMS = {
+    "Constraint": repro.constraints.Constraint,
+    "ConstraintCache": repro.constraints.ConstraintCache,
+    "CompiledConstraint": repro.constraints.CompiledConstraint,
+    "CacheStats": repro.constraints.CacheStats,
+    "vocab_fingerprint": repro.constraints.vocab_fingerprint,
+    "SchemaError": repro.constraints.SchemaError,
+    "schema_to_regex": repro.constraints.schema_to_regex,
+    "schema_for_fields": repro.constraints.schema_for_fields,
+    "Request": repro.api.Request,
+    "Completion": repro.api.Completion,
+}
+
+
+@pytest.mark.parametrize("name", sorted(SERVING_SHIMS))
+def test_serving_package_shim_warns_and_resolves(name):
+    with pytest.warns(DeprecationWarning, match=f"repro.serving.{name}"):
+        obj = getattr(repro.serving, name)
+    assert obj is SERVING_SHIMS[name]
+
+
+@pytest.mark.parametrize("mod,name,target", [
+    (repro.serving.types, "Constraint", repro.constraints.Constraint),
+    (repro.serving.types, "Request", repro.api.Request),
+    (repro.serving.types, "Completion", repro.api.Completion),
+    (repro.serving.cache, "ConstraintCache", repro.constraints.ConstraintCache),
+    (repro.serving.cache, "CompiledConstraint", repro.constraints.CompiledConstraint),
+    (repro.serving.cache, "vocab_fingerprint", repro.constraints.vocab_fingerprint),
+    (repro.serving.schema, "schema_to_regex", repro.constraints.schema_to_regex),
+    (repro.serving.schema, "SchemaError", repro.constraints.SchemaError),
+])
+def test_serving_module_shims_warn_and_resolve(mod, name, target):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        obj = getattr(mod, name)
+    assert obj is target
+
+
+def test_shim_unknown_attribute_raises():
+    with pytest.raises(AttributeError):
+        repro.serving.types.NotAThing
+    with pytest.raises(AttributeError):
+        repro.serving.NotAThing
+
+
+def test_canonical_imports_do_not_warn():
+    """The new-path imports must be silent — CI runs
+    ``python -W error::DeprecationWarning -c "import repro.api"``."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        from repro.api import Completion, Constraint, Engine, Request  # noqa: F401
+        from repro.constraints import ConstraintCache, schema_to_regex  # noqa: F401
+        from repro.serving import ServingEngine  # noqa: F401

@@ -1,0 +1,131 @@
+"""repro.constraints: Constraint identity semantics, the pluggable frontend
+registry (regex / json_schema / choice / none + custom), and the canonical
+pattern normalization every frontend funnels into."""
+import re
+
+import pytest
+
+from repro.constraints import (
+    Constraint,
+    frontend,
+    frontends,
+    register_frontend,
+    schema_to_regex,
+)
+from repro.constraints import spec as spec_mod
+from repro.core import compile_pattern
+
+
+# ---------------------------------------------------------------------------
+# Constraint equality / hashing (regression: the old serving.types.Constraint
+# compared the unhashable schema dict in __eq__)
+# ---------------------------------------------------------------------------
+def test_constraint_eq_hash_on_pattern_source_only():
+    sch = {"type": "object", "properties": {"a": {"type": "integer"}}}
+    c1 = Constraint.json_schema(sch)
+    c2 = Constraint.json_schema({"type": "object",
+                                 "properties": {"a": {"type": "integer"}}})
+    assert c1 == c2
+    assert hash(c1) == hash(c2)
+    # keys dicts and dedupes sets despite carrying a dict payload
+    assert {c1: "x"}[c2] == "x"
+    assert len({c1, c2}) == 1
+    # same pattern from a different frontend is a DIFFERENT constraint
+    c3 = Constraint.regex(c1.pattern)
+    assert c3 != c1
+    assert len({c1, c2, c3}) == 2
+
+
+def test_constraint_schema_accessor_and_spec_payload():
+    sch = {"type": "object", "properties": {"a": {"type": "boolean"}}}
+    c = Constraint.json_schema(sch)
+    assert c.schema is sch                      # back-compat accessor
+    assert c.spec is sch
+    assert c.pattern == schema_to_regex(sch)
+    assert Constraint.regex("a+").schema is None
+    assert Constraint.choice(["a", "b"]).schema is None
+
+
+def test_constraint_old_style_direct_construction():
+    """The old serving.types.Constraint was built directly with schema= (or
+    positionally); both still work and sync into the new spec field."""
+    sch = {"type": "object", "properties": {"a": {"type": "integer"}}}
+    pat = schema_to_regex(sch)
+    kw = Constraint(pattern=pat, source="json_schema", schema=sch)
+    assert kw.schema is sch and kw.spec is sch
+    assert kw == Constraint.json_schema(sch)
+    pos = Constraint(pat, "json_schema", sch)   # old positional order
+    assert pos.schema is sch and pos == kw
+    assert hash(kw) == hash(Constraint.json_schema(sch))
+
+
+def test_constraint_none_and_constrained_flag():
+    c = Constraint.none()
+    assert c.pattern is None and not c.constrained and c.source == "none"
+    assert Constraint.regex("a+").constrained
+
+
+# ---------------------------------------------------------------------------
+# choice frontend
+# ---------------------------------------------------------------------------
+def test_choice_literal_escaping_and_match():
+    c = Constraint.choice(["a.b", "c|d", "x*"])
+    dfa = compile_pattern(c.pattern)
+    for s in ("a.b", "c|d", "x*"):
+        assert dfa.accepting[dfa.run(s.encode())], s
+    for s in ("axb", "c", "d", "xx", ""):
+        assert not dfa.accepting[dfa.run(s.encode())], s
+
+
+def test_choice_non_string_literals_json_encoded():
+    c = Constraint.choice(["yes", 3, True])
+    dfa = compile_pattern(c.pattern)
+    for s in ("yes", "3", "true"):
+        assert dfa.accepting[dfa.run(s.encode())], s
+    assert not dfa.accepting[dfa.run(b"True")]
+
+
+def test_choice_empty_raises():
+    with pytest.raises(ValueError, match="at least one option"):
+        Constraint.choice([])
+
+
+# ---------------------------------------------------------------------------
+# frontend registry
+# ---------------------------------------------------------------------------
+def test_builtin_frontends_registered():
+    assert {"regex", "json_schema", "choice", "none"} <= set(frontends())
+
+
+def test_unknown_frontend_lists_registered():
+    with pytest.raises(KeyError, match="registered.*regex"):
+        frontend("not-a-frontend")
+    with pytest.raises(KeyError):
+        Constraint.from_spec("not-a-frontend", "x")
+
+
+def test_register_custom_frontend_roundtrip():
+    class Digits:
+        name = "digits-test"
+
+        def to_pattern(self, payload):
+            return "[0-9]{%d}" % int(payload)
+
+    try:
+        register_frontend(Digits())
+        c = Constraint.from_spec("digits-test", 3)
+        assert c.pattern == "[0-9]{3}"
+        assert c.source == "digits-test"
+        assert c.spec == 3
+        assert re.fullmatch(c.pattern, "123")
+        # duplicate registration is an error unless overwrite is explicit
+        with pytest.raises(ValueError, match="already registered"):
+            register_frontend(Digits())
+        register_frontend(Digits(), overwrite=True)
+    finally:
+        spec_mod._FRONTENDS.pop("digits-test", None)
+
+
+def test_regex_frontend_is_identity():
+    assert Constraint.regex("(ab)+").pattern == "(ab)+"
+    assert Constraint.from_spec("regex", "(ab)+") == Constraint.regex("(ab)+")

@@ -1,0 +1,109 @@
+"""Decoder-strategy registry: named plugins with a uniform DecodeOut
+contract, helpful unknown-name errors, and tables-requirement enforcement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig
+from repro.core import build_token_dfa, compile_pattern, decoders, tables_from_tokendfa
+from repro.core.decoders import DecodeOut, decode_block, get_strategy, registered
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tables():
+    tok = default_tokenizer()
+    td = build_token_dfa(
+        compile_pattern(r"(ab|ba)+"), tok.token_bytes,
+        mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
+        special_token_ids=tok.special_token_ids,
+    )
+    return tables_from_tokendfa(td)
+
+
+def _logp(d=4, v=300, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((d, v)).astype(np.float32)
+    return jnp.asarray(x - jax.nn.logsumexp(jnp.asarray(x), axis=-1, keepdims=True))
+
+
+def test_builtins_registered():
+    assert {"unconstrained", "greedy", "dingo"} <= set(registered())
+
+
+def test_unknown_strategy_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        decode_block("not-a-method", _logp(), None)
+    msg = str(ei.value)
+    assert "not-a-method" in msg
+    for name in ("dingo", "greedy", "unconstrained"):
+        assert name in msg, msg
+    with pytest.raises(ValueError, match="registered strategies"):
+        get_strategy("nope")
+
+
+def test_constrained_strategy_requires_tables():
+    for method in ("dingo", "greedy"):
+        with pytest.raises(ValueError, match="requires DINGO tables"):
+            decode_block(method, _logp(), None)
+    # unconstrained never needs tables
+    out = decode_block("unconstrained", _logp(), None)
+    assert isinstance(out, DecodeOut)
+    assert bool(out.valid) and int(out.q_final) == -1
+
+
+def test_engine_rejects_unknown_decode_with_names():
+    from repro.configs.llada_repro import e2e_config
+    from repro.diffusion import DiffusionEngine
+
+    tok = default_tokenizer()
+    cfg = e2e_config(tok.vocab_size)
+    scfg = ServeConfig(decode="bogus")
+    with pytest.raises(ValueError, match="registered strategies"):
+        DiffusionEngine(params=None, cfg=cfg, scfg=scfg,
+                        mask_token_id=tok.mask_token_id)
+
+
+def test_decode_out_contract_across_strategies(tables):
+    """Every registered built-in returns the same DecodeOut shape family."""
+    logp = _logp(v=int(tables.class_id.shape[0]))
+    w0 = jnp.where(jnp.arange(tables.cnext.shape[0]) == tables.start, 0.0,
+                   decoders.NEG_INF)
+    reach0 = jnp.arange(tables.cnext.shape[0]) == tables.start
+    outs = {
+        "unconstrained": decode_block("unconstrained", logp, None),
+        "dingo": decode_block("dingo", logp, tables, w0=w0),
+        "greedy": decode_block("greedy", logp, tables, reach0=reach0),
+    }
+    for name, out in outs.items():
+        assert isinstance(out, DecodeOut), name
+        assert out.tokens.shape == (4,) and out.tokens.dtype == jnp.int32
+        assert out.valid.shape == () and out.q_final.shape == ()
+
+
+def test_register_custom_strategy_dispatches_through_decode_block():
+    def _decode(logp, tables, carry, *, impl="jnp"):
+        toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
+        return DecodeOut(toks, jnp.array(True), jnp.array(-1, jnp.int32),
+                         jnp.array(0.0, jnp.float32))
+
+    def _batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
+        toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)
+        b = logp.shape[0]
+        return toks, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32)
+
+    name = "argmax-test"
+    try:
+        decoders.register(name, decode=_decode, batched=_batched,
+                          init_carry=lambda tables, b: jnp.zeros((b, 1)),
+                          needs_tables=False)
+        with pytest.raises(ValueError, match="already registered"):
+            decoders.register(name, decode=_decode, batched=_batched,
+                              init_carry=lambda tables, b: jnp.zeros((b, 1)))
+        out = decode_block(name, _logp(), None)
+        ref = decode_block("unconstrained", _logp(), None)
+        np.testing.assert_array_equal(np.asarray(out.tokens), np.asarray(ref.tokens))
+        assert name in registered()
+    finally:
+        decoders._REGISTRY.pop(name, None)

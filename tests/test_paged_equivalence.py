@@ -16,13 +16,9 @@ from repro.config import ServeConfig
 from repro.configs.llada_repro import e2e_config
 from repro.data import synthetic
 from repro.models import init_model
-from repro.serving import (
-    Constraint,
-    ConstraintCache,
-    Request,
-    ServingEngine,
-    schema_for_fields,
-)
+from repro.api import Request
+from repro.constraints import Constraint, ConstraintCache, schema_for_fields
+from repro.serving import ServingEngine
 from repro.tokenizer import default_tokenizer
 
 
@@ -157,7 +153,8 @@ def test_paged_parking_under_page_pressure(tok, setup):
 def test_scheduler_rejects_request_larger_than_pool(tok):
     """A request whose worst-case page span exceeds the whole pool can never
     run: it is rejected with a pages reason, not parked forever."""
-    from repro.serving import ConstraintCache as CC, ContinuousBatchingScheduler, PagePool
+    from repro.constraints import ConstraintCache as CC
+    from repro.serving import ContinuousBatchingScheduler, PagePool
 
     pool = PagePool(4, 8)                 # capacity 3 pages = 24 tokens
     sched = ContinuousBatchingScheduler(

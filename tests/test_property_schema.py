@@ -13,7 +13,7 @@ import string
 import pytest
 
 from repro.core import compile_pattern
-from repro.serving import schema_to_regex
+from repro.constraints import schema_to_regex
 
 try:
     from hypothesis import given, settings

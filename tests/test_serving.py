@@ -14,18 +14,16 @@ from repro.configs.llada_repro import e2e_config
 from repro.core import compile_pattern
 from repro.data import synthetic
 from repro.models import init_model
-from repro.serving import (
+from repro.api import Request
+from repro.constraints import (
     Constraint,
     ConstraintCache,
-    ContinuousBatchingScheduler,
-    Request,
     SchemaError,
-    ServingEngine,
-    qc_bucket,
     schema_for_fields,
     schema_to_regex,
     vocab_fingerprint,
 )
+from repro.serving import ContinuousBatchingScheduler, ServingEngine, qc_bucket
 from repro.tokenizer import ByteTokenizer, default_tokenizer
 
 
