@@ -7,8 +7,14 @@ JSON-Schema and raw-regex constraints, cold vs warm compiled-constraint cache:
   * p50/p95 request latency (submit -> completion)
   * constraint-compile time cold (every pattern compiled) vs warm (all cache
     hits) — the amortization DINGO's serving story rests on (paper Table 3)
+  * per-slot block clocks vs the lockstep grid on an OPEN-LOOP mixed-length
+    workload: requests arrive every few diffusion steps, so a lockstep grid
+    rounds every admission up to its block barrier while the slot clock
+    admits into freed slots mid-block (``arrivals_*`` keys)
 
-Emits the standard CSV rows plus ``experiments/BENCH_serving.json``.
+Emits the standard CSV rows plus ``experiments/BENCH_serving.json``. The
+committed JSON doubles as the CI regression baseline: the ``bench-smoke`` job
+re-runs this bench and gates req/s through ``benchmarks/ci_compare.py``.
 """
 from __future__ import annotations
 
@@ -36,7 +42,12 @@ BENCH_PAGED_JSON = "experiments/BENCH_paged.json"
 
 
 def _stream(n: int, gen_len: int):
-    """Mixed stream: >= 3 distinct constraints, JSON-Schema + raw regex."""
+    """Mixed-length stream: >= 3 distinct constraints (JSON-Schema, raw
+    regex, choice). The choice requests carry a full-length budget although
+    their language is a handful of tokens — the realistic "give it headroom"
+    request whose tail is pure EOS padding, which per-slot block clocks
+    retire mid-grid-block (EOS fast path) while a lockstep grid burns whole
+    barrier-to-barrier blocks on it."""
     reqs = []
     for i in range(n):
         kind = i % 4
@@ -51,9 +62,9 @@ def _stream(n: int, gen_len: int):
                                 max_new_tokens=gen_len // 2,
                                 metadata={"kind": "regex"}))
         else:
-            c = Constraint.regex(r"(ab|ba)+")
-            reqs.append(Request(f"say ab {i} ", c, max_new_tokens=gen_len // 2,
-                                metadata={"kind": "regex"}))
+            c = Constraint.choice(["yes", "no", "maybe"])
+            reqs.append(Request(f"pick one {i} ", c, max_new_tokens=gen_len,
+                                metadata={"kind": "choice"}))
     return reqs
 
 
@@ -79,6 +90,103 @@ def _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots):
         blocks=eng.blocks_run,
         compile_s=cache.stats.compile_time_s - t_compile0,
     )
+
+
+def _arrival_engine(params, cfg, scfg, tok, cache, n_slots, clock):
+    """Build one engine per clock and warm it: a short staggered drain
+    compiles this clock's step and commit variants (incl. the batch-1 row
+    commit) so the measured drives time serving, not XLA. Also calibrates the
+    engine's idle-tick duration (median wall per decode step at the warm
+    tail)."""
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=n_slots,
+                        max_prompt_len=32, constraint_cache=cache, clock=clock)
+    step = eng.step_token if clock == "slot" else eng.step_block
+    warmup = _stream(4, scfg.gen_len)
+    eng.submit(warmup[0])
+    eng.submit(warmup[1])
+    step()
+    eng.submit(warmup[2])
+    eng.submit(warmup[3])
+    ticks = []
+    while eng.sched.pending or eng.sched.busy:
+        t0, s0 = time.perf_counter(), eng.decode_steps
+        step()
+        if eng.decode_steps > s0:
+            ticks.append((time.perf_counter() - t0) / (eng.decode_steps - s0))
+    eng.decode_steps = 0
+    # the tail of the drain is compile-free; the median resists stragglers
+    step_s = float(np.median(ticks[len(ticks) // 2:])) if ticks else 1e-3
+    return eng, step, step_s
+
+
+def _drive_arrivals(eng, step, step_s, n_requests, gen_len, gap_steps):
+    """Open-loop mixed-length workload: request ``i`` arrives after
+    ``i * gap_steps`` diffusion micro-steps. The arrival clock is the
+    engine's own ``decode_steps`` counter, so both block clocks face the
+    IDENTICAL schedule — but the lockstep grid can only act on an arrival at
+    its next block barrier (up to T-1 steps late for every admission), while
+    per-slot clocks admit into a freed slot at the very next micro-step. An
+    idle grid waiting for the next arrival ticks in real time (one step of
+    wall per step of clock), as a synchronous serving loop does. Also reports
+    mean busy slots per decode step (grid utilization)."""
+    reqs = _stream(n_requests, gen_len)
+    eng.decode_steps = 0
+    done, i = [], 0
+    busy_steps = 0
+    t0 = time.perf_counter()
+    t_prev, s_prev = t0, 0
+    while i < len(reqs) or eng.sched.pending or eng.sched.busy:
+        now = time.perf_counter()
+        while i < len(reqs) and eng.decode_steps >= i * gap_steps:
+            # a request that came due DURING the last step call arrived
+            # mid-block: stamp its true (interpolated) arrival time, not the
+            # barrier at which a lockstep grid first LOOKS at the queue —
+            # otherwise lockstep's latency hides exactly the wait it causes
+            due = i * gap_steps
+            frac = ((due - s_prev) / (eng.decode_steps - s_prev)
+                    if eng.decode_steps > s_prev else 1.0)
+            reqs[i].submit_time_s = t_prev + max(0.0, min(1.0, frac)) * (now - t_prev)
+            eng.submit(reqs[i])
+            i += 1
+        if not (eng.sched.pending or eng.sched.busy):
+            time.sleep(step_s)             # idle tick: wall passes for real
+            eng.decode_steps += 1
+            t_prev, s_prev = time.perf_counter(), eng.decode_steps
+            continue
+        before = eng.decode_steps
+        busy = eng.sched.busy
+        t_prev, s_prev = time.perf_counter(), before
+        out = step()
+        done.extend(out)
+        # mean of pre/post-step busy: slots admitted or retired inside the
+        # step were busy for part of it, and averaging the endpoints gives
+        # each such slot exactly half credit
+        busy_steps += 0.5 * (busy + eng.sched.busy) * (eng.decode_steps - before)
+    wall = time.perf_counter() - t0
+    lat = [c.latency_s for c in done]
+    toks = sum(len(c.tokens) for c in done)
+    return dict(
+        clock=eng.clock,
+        wall_s=wall,
+        req_s=len(done) / wall,
+        tok_s=toks / wall,
+        p50_s=float(np.percentile(lat, 50)),
+        p95_s=float(np.percentile(lat, 95)),
+        n=len(done),
+        n_matched=sum(1 for c in done if c.matched),
+        decode_steps=eng.decode_steps,
+        mean_busy_slots=busy_steps / max(1, eng.decode_steps),
+        gap_steps=gap_steps,
+    )
+
+
+def _median_of(runs, keys=("req_s", "tok_s", "p50_s", "p95_s", "wall_s",
+                           "mean_busy_slots")):
+    out = dict(runs[-1])
+    for k in keys:
+        out[k] = float(np.median([r[k] for r in runs]))
+    out["reps"] = len(runs)
+    return out
 
 
 def _batch_once(params, cfg, scfg, tok, cache, n_requests):
@@ -139,7 +247,7 @@ def _paged_compare(params, cfg, scfg, tok, n_requests):
              for i in range(n_requests)]
 
     dense = ServingEngine(params, cfg, scfg, tok, n_slots=4,
-                          max_prompt_len=32, kv_layout="dense")
+                          max_prompt_len=32, kv_layout="dense", clock="block")
     dense_bytes = _kv_bytes(dense)
     d_done, d_peak, d_wall = _drive_peak(dense, [dataclasses.replace(r) for r in short])
 
@@ -147,7 +255,8 @@ def _paged_compare(params, cfg, scfg, tok, n_requests):
     pages_budget = 4 * (dense.max_len // page_size) + 1   # dense-parity HBM
     paged = ServingEngine(params, cfg, scfg, tok, n_slots=16,
                           max_prompt_len=32, kv_layout="paged",
-                          page_size=page_size, n_pages=pages_budget)
+                          page_size=page_size, n_pages=pages_budget,
+                          clock="block")
     paged_bytes = _kv_bytes(paged)
     p_done, p_peak, p_wall = _drive_peak(paged, short)
 
@@ -183,6 +292,24 @@ def run(quick: bool = True) -> None:
     cold = _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots)
     warm = _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots)
 
+    # open-loop arrivals: lockstep grid vs per-slot block clocks on the same
+    # mixed-length stream and arrival schedule (warm cache, one warmed engine
+    # per clock, interleaved repetitions, medians). LLaDA-scale blocks
+    # (d=16, T=16) are the regime per-slot clocks target: the lockstep grid
+    # rounds every admission up to a 16-step barrier and burns whole barriers
+    # on forced-EOS tails, while the slot clock admits/retires mid-block
+    arr_scfg = dataclasses.replace(scfg, block_size=16,
+                                   diffusion_steps_per_block=16)
+    gap, reps = 11, (3 if quick else 2)
+    lock_eng = _arrival_engine(params, cfg, arr_scfg, tok, cache, n_slots, "block")
+    slot_eng = _arrival_engine(params, cfg, arr_scfg, tok, cache, n_slots, "slot")
+    lock_runs, slot_runs = [], []
+    for _ in range(reps):
+        lock_runs.append(_drive_arrivals(*lock_eng, n_requests, arr_scfg.gen_len, gap))
+        slot_runs.append(_drive_arrivals(*slot_eng, n_requests, arr_scfg.gen_len, gap))
+    arr_lock = _median_of(lock_runs)
+    arr_slot = _median_of(slot_runs)
+
     # batch path (Engine.generate) through its OWN cache: cold pass compiles,
     # warm pass must be all hits — the first time the offline path gets the
     # amortization the serving story rests on
@@ -209,6 +336,11 @@ def run(quick: bool = True) -> None:
          f"batch cache {batch_warm['cache_hits']} hits / "
          f"{batch_warm['cache_misses']} misses warm "
          f"({batch_cold['cache_misses']} compiles cold)")
+    gain = arr_slot["req_s"] / max(arr_lock["req_s"], 1e-9)
+    emit("serving_slot_clock_req", 1e6 / arr_slot["req_s"],
+         f"{arr_slot['req_s']:.2f} req/s slot clock vs "
+         f"{arr_lock['req_s']:.2f} lockstep on arrivals ({gain:.2f}x), "
+         f"p50 {arr_slot['p50_s']:.2f}s vs {arr_lock['p50_s']:.2f}s")
 
     paged = _paged_compare(params, cfg, scfg, tok, n_requests=16)
     emit("serving_paged_slots", 1e6 / max(paged["slot_gain_x"], 1e-9),
@@ -247,4 +379,17 @@ def run(quick: bool = True) -> None:
             "batch_warm": batch_warm,
             "batch_warm_all_hits": batch_warm["cache_misses"] == 0,
             "batch_cache": batch_cache.stats.as_dict(),
+            # additive (PR 4): per-slot block clocks vs lockstep on the
+            # open-loop mixed-length arrival workload (same schedule, warm
+            # cache); the CI bench-smoke job gates on these req/s keys too
+            "arrivals_lockstep": arr_lock,
+            "arrivals_slot_clock": arr_slot,
+            "slot_clock_req_s_gain_x": arr_slot["req_s"] / max(arr_lock["req_s"], 1e-9),
+            "slot_clock_p50_gain_x": arr_lock["p50_s"] / max(arr_slot["p50_s"], 1e-9),
+            "slot_clock_higher_req_s": arr_slot["req_s"] > arr_lock["req_s"],
+            # makespan in DECODE STEPS is machine-independent: mid-block
+            # admission + forced-EOS retirement let the slot clock finish the
+            # identical arrival schedule in fewer grid steps
+            "slot_clock_steps_gain_x": (arr_lock["decode_steps"]
+                                        / max(1, arr_slot["decode_steps"])),
         }, f, indent=1)

@@ -1,0 +1,164 @@
+"""CI benchmark-regression gate for the serving bench.
+
+Compares a freshly produced ``BENCH_serving.json`` against the committed
+baseline and fails (exit 1) when a gated metric regresses by more than the
+tolerance. Two kinds of gates:
+
+* **ratio keys** (machine-independent): metrics that compare two arms of the
+  SAME run and are deterministic — ``slot_clock_steps_gain_x``, the
+  decode-step makespan of lockstep vs per-slot clocks on the identical
+  step-indexed arrival schedule. These cancel runner speed entirely and
+  gate tightly. Wall-clock ratios (``slot_clock_req_s_gain_x``,
+  ``slot_clock_p50_gain_x``) are REPORTED but never gate — an 8-request p50
+  on a shared runner is too noisy to fail a required job on.
+* **throughput keys** (machine-relative): absolute req/s numbers. A CI
+  runner is not the machine that committed the baseline, so raw comparison
+  is noise; unless ``--no-normalize`` is given, every throughput metric is
+  divided by the value of ``batch_warm.req_s`` *in its own file* (the
+  offline batch path exercises the same model/config but not the serving
+  loop), so runner speed cancels while serving-loop regressions do not.
+
+Keys are dotted paths into the JSON. Keys missing from the BASELINE are
+skipped (additive evolution: new benches must not fail old baselines); keys
+missing from the NEW file fail loudly (a bench silently dropped a metric).
+
+    python -m benchmarks.ci_compare baseline.json new.json --max-regression 0.20
+
+Exit codes: 0 ok, 1 regression (or missing new key), 2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RATIO_KEYS = ("slot_clock_steps_gain_x",)
+REPORT_KEYS = (
+    "slot_clock_req_s_gain_x",
+    "slot_clock_p50_gain_x",
+)
+THROUGHPUT_KEYS = (
+    "cold.req_s",
+    "warm.req_s",
+    "arrivals_lockstep.req_s",
+    "arrivals_slot_clock.req_s",
+)
+DEFAULT_NORMALIZE = "batch_warm.req_s"
+
+
+def get_path(doc: dict, dotted: str):
+    """Resolve a dotted path; None when any hop is missing."""
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def compare(
+    baseline: dict,
+    new: dict,
+    *,
+    max_regression: float,
+    ratio_keys=RATIO_KEYS,
+    throughput_keys=THROUGHPUT_KEYS,
+    normalize: str | None = DEFAULT_NORMALIZE,
+):
+    """Returns (failures, report_rows). A metric fails when
+    ``new < (1 - max_regression) * baseline`` after normalization."""
+    failures, rows = [], []
+
+    def check(key: str, base_val, new_val, kind: str):
+        if base_val is None:
+            rows.append((key, kind, None, new_val, "skipped (no baseline)"))
+            return
+        if new_val is None:
+            failures.append(f"{key}: present in baseline but missing from new run")
+            rows.append((key, kind, base_val, None, "MISSING"))
+            return
+        floor = (1.0 - max_regression) * base_val
+        ok = new_val >= floor
+        rows.append((key, kind, base_val, new_val, "ok" if ok else f"REGRESSED below {floor:.4g}"))
+        if not ok:
+            failures.append(
+                f"{key}: {new_val:.4g} < {floor:.4g} "
+                f"(baseline {base_val:.4g}, tolerance {max_regression:.0%})"
+            )
+
+    for key in ratio_keys:
+        check(key, get_path(baseline, key), get_path(new, key), "ratio")
+    for key in REPORT_KEYS:
+        b, n = get_path(baseline, key), get_path(new, key)
+        bs = "-" if b is None else f"{b:.4g}"
+        rows.append((key, "wall ratio", b, n, f"report-only (baseline {bs})"))
+
+    base_norm = get_path(baseline, normalize) if normalize else None
+    new_norm = get_path(new, normalize) if normalize else None
+    use_norm = bool(base_norm and new_norm)
+    for key in throughput_keys:
+        b, n = get_path(baseline, key), get_path(new, key)
+        if use_norm and b is not None and n is not None:
+            check(key, b / base_norm, n / new_norm, f"req/s over {normalize}")
+        else:
+            check(key, b, n, "req/s (raw)")
+    return failures, rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_serving.json")
+    ap.add_argument("new", help="freshly produced BENCH_serving.json")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="allowed fractional drop per metric (default 0.20)",
+    )
+    ap.add_argument(
+        "--no-normalize",
+        action="store_true",
+        help="compare raw req/s instead of runner-normalized",
+    )
+    ap.add_argument(
+        "--keys",
+        default=None,
+        help="comma-separated throughput keys overriding the default set",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ci_compare: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+
+    throughput = tuple(args.keys.split(",")) if args.keys else THROUGHPUT_KEYS
+    failures, rows = compare(
+        baseline,
+        new,
+        max_regression=args.max_regression,
+        throughput_keys=throughput,
+        normalize=None if args.no_normalize else DEFAULT_NORMALIZE,
+    )
+    width = max(len(r[0]) for r in rows)
+    for key, kind, b, n, verdict in rows:
+        bs = "-" if b is None else f"{b:.4g}"
+        ns = "-" if n is None else f"{n:.4g}"
+        print(f"{key:<{width}}  {bs:>10} -> {ns:>10}  [{kind}] {verdict}")
+    if failures:
+        head = f"{len(failures)} metric(s) regressed more than {args.max_regression:.0%}:"
+        print("\n" + head, file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\nall gated metrics within {args.max_regression:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

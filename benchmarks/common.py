@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable
 
 import jax
 import numpy as np

@@ -12,7 +12,6 @@ import numpy as np
 from repro.config import ServeConfig
 from repro.configs.llada_repro import e2e_config
 from repro.core import (
-    NEG_INF,
     build_token_dfa,
     compile_pattern,
     dingo_decode,

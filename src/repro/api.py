@@ -111,6 +111,7 @@ class Engine:
         kv_layout: str = "dense",
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        clock: str = "slot",
         seed: int = 0,
     ):
         self.params = params
@@ -122,6 +123,7 @@ class Engine:
         self._serving_kwargs = dict(
             n_slots=n_slots, max_prompt_len=max_prompt_len,
             kv_layout=kv_layout, page_size=page_size, n_pages=n_pages,
+            clock=clock,
         )
         self._serving = None
 
@@ -245,13 +247,18 @@ class Engine:
         return self._serving
 
     def submit(self, request: Request) -> int:
-        """Queue a request on the serving engine (admitted at the next block
-        boundary of a :meth:`serve` drive)."""
+        """Queue a request on the serving engine. Under the default
+        ``clock="slot"`` it is admitted into the first slot that frees —
+        mid-block, at the next micro-step of a :meth:`serve` drive; under
+        ``clock="block"`` admission waits for the grid's block boundary."""
         return self.serving.submit(request)
 
     def serve(self, requests: Iterable[Request] = ()) -> Iterator[Completion]:
         """Submit ``requests`` and yield completions as slots retire; more
-        work may be submitted (``submit``) between yields."""
+        work may be submitted (``submit``) between yields. Each slot runs its
+        own block clock (``clock="slot"``, the default): completions surface
+        the micro-step a slot's DFA reaches closure or EOS, and queued work
+        back-fills freed slots without waiting on neighbours' blocks."""
         return self.serving.serve(requests)
 
     # ---- introspection ----------------------------------------------------

@@ -15,16 +15,32 @@ and ``dingo``. Each strategy supplies
                                                   per-row batch axis
                                                   (``stack_tables``), None
                                                   when shared
-    init_carry(tables, batch)                     the (B, ...) carry at the
-                                                  DFA start state
+    init_carry(tables, batch,                     the (B, ...) carry at the
+               *, reset_mask, prev)               DFA start state; with
+                                                  ``prev`` given, only rows
+                                                  where ``reset_mask`` is True
+                                                  are re-seeded (per-row
+                                                  resettable — slot clocks)
     carry_next(tables, carry, q_final, tokens,    thread the carry across a
-               *, t_ax)                           block boundary (semi-AR);
-                                                  identity when the carry is
-                                                  constant
+               *, t_ax, update_mask)              block boundary (semi-AR);
+                                                  rows where ``update_mask``
+                                                  is False keep their carry
+                                                  (per-slot block clocks:
+                                                  only rows AT their own
+                                                  boundary advance); identity
+                                                  when the carry is constant
 
 so the one-shot :class:`~repro.diffusion.engine.DiffusionEngine` and the
 continuous-batching serve step dispatch through the same table. A new decode
 rule (e.g. sampling-based DINGO) is one ``register(...)`` call.
+
+``reset_mask``/``update_mask`` are traced (B,) bools: swapping which rows
+reset or advance never retraces a jitted step. Note the serving engine
+threads its carries HOST-side (``scheduler.carry_batch``/``record_block``)
+— these kwargs are the device-side form of the same per-row reset, for
+strategies that keep carries on device and for batch-mode budget-aware
+end-state forcing (per-block ``live``/carry swaps inside the jitted decode,
+ROADMAP).
 """
 from __future__ import annotations
 
@@ -34,7 +50,7 @@ from typing import Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .dingo import NEG_INF, DingoResult, DingoTables, dingo_decode
+from .dingo import NEG_INF, DingoTables, dingo_decode
 from .greedy import greedy_decode, unconstrained_decode
 
 UNCONSTRAINED = "unconstrained"
@@ -49,8 +65,15 @@ class DecodeOut(NamedTuple):
     logprob: jax.Array   # () f32
 
 
-def _identity_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+def _identity_carry_next(tables, carry, q_final, tokens, *, t_ax=None,
+                         update_mask=None):
     return carry
+
+
+def _select_rows(mask, on_true, on_false):
+    """Per-row (B, ...) select on a (B,) bool mask (broadcast over the tail)."""
+    m = jnp.asarray(mask).reshape((-1,) + (1,) * (on_true.ndim - 1))
+    return jnp.where(m, on_true, on_false)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +81,14 @@ class DecoderStrategy:
     """One registered decode rule. ``carry`` is strategy-defined: DINGO
     threads (Q,) log-weights, greedy a (Q,) bool reachable set.
 
-    ``carry_next(tables, carry, q_final, tokens, *, t_ax)`` threads the
-    per-row carry across a block boundary (semi-AR, paper Appendix D) from
-    the block's decode outputs; strategies whose carry is constant (e.g.
-    unconstrained) use the identity default."""
+    ``carry_next(tables, carry, q_final, tokens, *, t_ax, update_mask)``
+    threads the per-row carry across a block boundary (semi-AR, paper
+    Appendix D) from the block's decode outputs; strategies whose carry is
+    constant (e.g. unconstrained) use the identity default. ``update_mask``
+    (traced (B,) bool) limits the advance to rows at their OWN block
+    boundary; ``init_carry(..., reset_mask=, prev=)`` re-seeds exactly the
+    masked rows of ``prev`` at the start state — together they make the
+    carry per-row resettable without retracing."""
 
     name: str
     needs_tables: bool
@@ -126,7 +153,9 @@ def _unconstrained_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
     return toks, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32)
 
 
-def _unconstrained_carry(tables, batch: int):
+def _unconstrained_carry(tables, batch: int, *, reset_mask=None, prev=None):
+    if prev is not None and reset_mask is not None:
+        return prev                      # constant carry: reset is identity
     return jnp.zeros((batch, 1), jnp.float32)
 
 
@@ -142,13 +171,17 @@ def _greedy_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
     return res.tokens, res.valid, jnp.zeros((logp.shape[0],), jnp.int32)
 
 
-def _greedy_carry(tables, batch: int):
+def _greedy_carry(tables, batch: int, *, reset_mask=None, prev=None):
     q = tables.cnext.shape[-2]
     start = jnp.broadcast_to(jnp.asarray(tables.start), (batch,))
-    return jnp.arange(q)[None, :] == start[:, None]
+    fresh = jnp.arange(q)[None, :] == start[:, None]
+    if prev is not None and reset_mask is not None:
+        return _select_rows(reset_mask, fresh, prev.astype(bool))
+    return fresh
 
 
-def _greedy_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+def _greedy_carry_next(tables, carry, q_final, tokens, *, t_ax=None,
+                       update_mask=None):
     """Advance each row's reachable set through its committed block."""
 
     def per_seq(r, toks, tb):
@@ -161,8 +194,11 @@ def _greedy_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
         r_final, _ = jax.lax.scan(step, r, toks)
         return r_final
 
-    return jax.vmap(per_seq, in_axes=(0, 0, t_ax))(
+    advanced = jax.vmap(per_seq, in_axes=(0, 0, t_ax))(
         carry.astype(bool), tokens, tables)
+    if update_mask is not None:
+        return _select_rows(update_mask, advanced, carry.astype(bool))
+    return advanced
 
 
 def _dingo_decode(logp, tables, carry, *, impl="jnp") -> DecodeOut:
@@ -178,14 +214,21 @@ def _dingo_batched(logp, tables, carry, *, t_ax=None, impl="jnp"):
     return res.tokens, res.valid, res.q_final
 
 
-def _dingo_carry(tables, batch: int):
-    return jnp.where(_greedy_carry(tables, batch), 0.0, NEG_INF)
+def _dingo_carry(tables, batch: int, *, reset_mask=None, prev=None):
+    fresh = jnp.where(_greedy_carry(tables, batch), 0.0, NEG_INF)
+    if prev is not None and reset_mask is not None:
+        return _select_rows(reset_mask, fresh, prev)
+    return fresh
 
 
-def _dingo_carry_next(tables, carry, q_final, tokens, *, t_ax=None):
+def _dingo_carry_next(tables, carry, q_final, tokens, *, t_ax=None,
+                      update_mask=None):
     """Restart each row's DP from its block-end state (one-hot log-weights)."""
     q = tables.cnext.shape[-2]
-    return jnp.where(jax.nn.one_hot(q_final, q, dtype=bool), 0.0, NEG_INF)
+    advanced = jnp.where(jax.nn.one_hot(q_final, q, dtype=bool), 0.0, NEG_INF)
+    if update_mask is not None:
+        return _select_rows(update_mask, advanced, carry)
+    return advanced
 
 
 register(UNCONSTRAINED, decode=_unconstrained_decode,

@@ -19,7 +19,6 @@ from typing import Dict, FrozenSet, List
 import numpy as np
 
 from . import nfa as nfa_mod
-from . import regex as rx
 
 ALPHABET = 256
 

@@ -19,7 +19,6 @@ Everything here is jit-able with static (d, Q, C, V).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple, Optional, Tuple
 

@@ -7,7 +7,7 @@ Character sets are frozensets of byte values (see ``repro.core.regex``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+from typing import FrozenSet, List, Optional, Set, Tuple
 
 from . import regex as rx
 

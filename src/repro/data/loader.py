@@ -8,12 +8,12 @@ iterator interface.
 from __future__ import annotations
 
 import random
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, TrainConfig
+from repro.config import ModelConfig
 from repro.training import Batch
 
 from . import synthetic

@@ -15,10 +15,9 @@ steps are jit'd; the block/step loop runs on host (step count is static).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import time
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -37,12 +37,19 @@ def confidence(logits: jax.Array, strategy: str, rng=None, *, impl: str = "jnp")
     raise ValueError(f"unknown remask strategy {strategy!r}")
 
 
-def select_commits(conf: jax.Array, committed: jax.Array, n_commit: int):
+def select_commits(conf: jax.Array, committed: jax.Array, n_commit):
     """Pick the ``n_commit`` highest-confidence currently-masked positions.
 
-    conf (B, d); committed (B, d) bool. Returns new committed mask (B, d)."""
+    conf (B, d); committed (B, d) bool. ``n_commit`` is a static int, a traced
+    scalar, or a traced (B,) vector of PER-ROW commit counts — rows of a
+    serving grid under per-slot block clocks sit at different steps of their
+    own blocks, so each advances by its own schedule delta (0 for idle rows).
+    Returns the new committed mask (B, d)."""
     b, d = conf.shape
     masked_conf = jnp.where(committed, NEG_INF, conf)
     order = jnp.argsort(-masked_conf, axis=-1)            # best-first
     rank = jnp.argsort(order, axis=-1)                    # rank of each position
-    return committed | ((rank < n_commit) & ~committed)
+    n = jnp.asarray(n_commit)
+    if n.ndim == 1:
+        n = n[:, None]                                    # (B,) -> (B, 1)
+    return committed | ((rank < n) & ~committed)

@@ -7,7 +7,6 @@ constrained block decode (Unconstrained / Greedy / DINGO).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -54,15 +53,22 @@ def make_serve_step(
     offsets (continuous-batching slots at heterogeneous positions).
     ``tables_arg`` may carry a leading batch axis (``stack_tables`` — one
     constraint per slot); ``n_commit_arg`` overrides the static commit count
-    with a traced scalar so one compiled step serves every schedule point.
-    ``page_tables_arg`` (paged KV serving) is the (B, max_pages) slot→page
-    mapping for this block; it is installed into every paged cache leaf before
-    the forward so the attention gather reads each slot's current pages."""
+    with a traced scalar — or a traced (B,) VECTOR of per-row commit counts,
+    the per-slot block-clock form: each row sits at its own denoise-step index
+    of its own block, so each row advances by its own schedule delta (0 for
+    free rows), and one compiled step serves every mix of row clocks.
+    ``row_live_arg`` is an optional traced (B,) bool mask of occupied slots:
+    dead rows never grow their committed set, whatever their delta — swapping
+    which rows are live is data, not a retrace. ``page_tables_arg`` (paged KV
+    serving) is the (B, max_pages) slot→page mapping for this block; it is
+    installed into every paged cache leaf before the forward so the attention
+    gather reads each slot's current pages."""
     strategy = decoders.get_strategy(scfg.decode)
     impl = scfg.kernel_impl
 
     def serve_step(params, caches, block_tokens, committed, w0, start, rng,
-                   tables_arg=None, n_commit_arg=None, page_tables_arg=None):
+                   tables_arg=None, n_commit_arg=None, page_tables_arg=None,
+                   row_live_arg=None):
         tables_in = tables_arg if tables_arg is not None else tables
         n_commit_in = n_commit_arg if n_commit_arg is not None else n_commit
         if page_tables_arg is not None:
@@ -82,6 +88,8 @@ def make_serve_step(
         )
         conf = confidence(logits, scfg.remask, rng, impl=impl)
         new_committed = select_commits(conf, committed, n_commit_in)
+        if row_live_arg is not None:
+            new_committed = committed | (new_committed & row_live_arg[:, None])
         logp = decoder_logp(logits, block_tokens, committed, new_committed, mask_id)
         toks, valid, qf = strategy.batched(logp, tables_in, w0, t_ax=t_ax, impl=impl)
         block_tokens = jnp.where(new_committed, toks, mask_id)

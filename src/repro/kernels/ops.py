@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .class_max import class_max_pallas
 from .decode_attention import decode_attention_pallas

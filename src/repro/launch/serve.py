@@ -111,6 +111,9 @@ def main():
                          "page tables) instead of the dense per-slot grid")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page under --paged")
+    ap.add_argument("--clock", default="slot", choices=["slot", "block"],
+                    help="--server block clock: per-slot (admit/retire on each "
+                         "row's own boundary, mid-block) or lockstep grid")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -132,7 +135,7 @@ def main():
     eng = Engine(params, cfg, scfg, tok, n_slots=args.slots,
                  max_prompt_len=64, constraint_cache=ConstraintCache(),
                  kv_layout="paged" if args.paged else "dense",
-                 page_size=args.page_size)
+                 page_size=args.page_size, clock=args.clock)
 
     if args.server:
         run_server(args, eng, args.requests)

@@ -1,13 +1,10 @@
 """Shared model layers: norms, embeddings, RoPE / M-RoPE, MLP variants, init."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig
 from repro.sharding.api import constrain
 
 

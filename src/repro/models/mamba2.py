@@ -15,7 +15,7 @@ SSM layers are causal (DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

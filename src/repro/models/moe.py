@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, MoEConfig
+from repro.config import ModelConfig
 from repro.sharding.api import constrain, logical_axis_size
 
 from .layers import dense_init

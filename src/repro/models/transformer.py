@@ -10,9 +10,7 @@ way and scanned alongside the parameters.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

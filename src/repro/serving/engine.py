@@ -1,18 +1,30 @@
 """Continuous-batching serve loop over ``make_serve_step``.
 
 The engine owns the device state (params, per-slot KV/SSM caches, the jitted
-step/prefill/commit functions) and drives the scheduler:
+step/prefill/commit functions) and drives the scheduler. Two block clocks
+(``clock``):
 
-    while work remains:
-        admit queued requests into free slots      (per-slot prompt prefill,
-                                                    scattered into the batch
-                                                    caches at the slot index)
-        for each diffusion step of the block:      serve_step over ALL slots
-                                                    (stacked per-slot tables,
-                                                    per-slot DFA carry w0,
-                                                    per-slot start positions)
-        commit the block into the caches           (per-row append offsets)
-        retire finished slots -> yield Completions
+``clock="slot"`` (default) — per-slot block clocks, true token-level
+continuous batching. The unit of work is one diffusion MICRO-STEP over the
+grid; every slot carries its own denoise-step index within its own block:
+
+    every micro-step:
+        admit queued requests into freed slots     (mid-block: a fresh row
+                                                    starts step 0 of its own
+                                                    block immediately)
+        serve_step over ALL slots                  (per-row commit deltas,
+                                                    per-row live mask, stacked
+                                                    per-slot tables, per-row
+                                                    carry w0 and start)
+        rows whose OWN clock crossed the boundary: (per-row masked commit,
+            commit / record / retire / reset        the grid never waits)
+
+``clock="block"`` — the classic lockstep grid: every slot advances through a
+whole block together, admission and retirement happen at the global block
+barrier (``step_block``). Kept for differential testing (per-request tokens
+are IDENTICAL across clocks under a deterministic remask strategy — each
+row's trajectory depends only on its own cache row, tables, and carry) and
+as the cheaper schedule when traffic is homogeneous.
 
 Slots are at heterogeneous absolute positions: a request admitted at block k
 prefills its prompt at positions [0, m) of its *own* cache row and generates
@@ -36,14 +48,13 @@ submit more work between blocks via ``submit()``).
 from __future__ import annotations
 
 import time
-from typing import Iterable, Iterator, List, Optional
+from typing import Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
-from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.diffusion.schedule import unmask_counts
 from repro.diffusion.serve import make_serve_step
 from repro.models import (
@@ -67,6 +78,76 @@ def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
+def _select_commit_rows(old, new, commit_mask):
+    """Per-row masked cache commit: keep ``new`` only for rows whose own block
+    clock crossed its boundary this micro-step; everyone else keeps ``old``.
+
+    K/V content needs no row select — a non-committing row's forward wrote its
+    K/V at positions >= its ``length``, which every read masks out
+    (``kv_valid``) and its real commit later overwrites at the same offset
+    (paged rows land in their own reserved pages or the trash page). Only the
+    per-row ``length`` clocks must not advance. SSM state has no length
+    analogue (the recurrence itself is the clock), so its rows are selected
+    wholesale; shared paged pools have no row axis and keep the new writes."""
+
+    def one(oc, nc):
+        if isinstance(nc, (attention.KVCache, attention.PagedKVCache,
+                           mla.MLACache, mla.PagedMLACache)):
+            return nc._replace(
+                length=jnp.where(commit_mask[None], nc.length, oc.length)
+            )
+        # SSM (and any other per-row recurrent) state: leaves are
+        # (layers, B, ...) — select whole rows on the batch axis
+        return jax.tree_util.tree_map(
+            lambda o, n: jnp.where(
+                commit_mask.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o
+            ),
+            oc, nc,
+        )
+
+    return [tuple(one(o, n) for o, n in zip(oseg, nseg))
+            for oseg, nseg in zip(old, new)]
+
+
+def _row_slice(x, idx):
+    return jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+
+
+def _gather_row(caches, idx):
+    """Batch-1 view of slot ``idx``: per-row leaves are (layers, B, ...) and
+    slice on the batch axis; shared paged pools have no row axis and ride
+    along whole (their page table/length rows are sliced)."""
+
+    def one(c):
+        if isinstance(c, (attention.PagedKVCache, mla.PagedMLACache)):
+            return c._replace(page_table=_row_slice(c.page_table, idx),
+                              length=_row_slice(c.length, idx))
+        return jax.tree_util.tree_map(lambda x: _row_slice(x, idx), c)
+
+    return [tuple(one(c) for c in seg) for seg in caches]
+
+
+def _scatter_row(big, small, idx):
+    """Write a batch-1 cache view back into slot ``idx``. Paged pools take the
+    small view's pool wholesale — a batch-1 append only touched that row's own
+    pages (or the trash page) — and appends never move page tables."""
+
+    def put(bx, sx):
+        return jax.lax.dynamic_update_slice_in_dim(bx, sx.astype(bx.dtype),
+                                                   idx, axis=1)
+
+    def one(bc, sc):
+        if isinstance(bc, attention.PagedKVCache):
+            return bc._replace(k=sc.k, v=sc.v, length=put(bc.length, sc.length))
+        if isinstance(bc, mla.PagedMLACache):
+            return bc._replace(c_kv=sc.c_kv, k_rope=sc.k_rope,
+                               length=put(bc.length, sc.length))
+        return jax.tree_util.tree_map(put, bc, sc)
+
+    return [tuple(one(b_, s_) for b_, s_ in zip(bseg, sseg))
+            for bseg, sseg in zip(big, small)]
+
+
 class ServingEngine:
     """Continuous-batching constrained serving over a diffusion LM."""
 
@@ -85,11 +166,15 @@ class ServingEngine:
         kv_layout: str = "dense",
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        clock: str = "slot",
+        eos_fastpath: bool = True,
     ):
         if cfg.frontend is not None:
             raise ValueError("serving engine drives text-only models")
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be 'dense' or 'paged', got {kv_layout!r}")
+        if clock not in ("slot", "block"):
+            raise ValueError(f"clock must be 'slot' or 'block', got {clock!r}")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -119,11 +204,13 @@ class ServingEngine:
             self.pool = None
             self.page_table = None
         self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        self.eos_fastpath = eos_fastpath
         self.sched = ContinuousBatchingScheduler(
             n_slots, self.cache, tokenizer,
             block_size=d, decode=scfg.decode, max_blocks=self.max_blocks,
             page_pool=self.pool,
             prompt_len_fn=self._prompt_len if self.pool is not None else None,
+            eos_fastpath=eos_fastpath,
         )
         self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
         self._rng = jax.random.PRNGKey(seed)
@@ -133,7 +220,25 @@ class ServingEngine:
             )
         else:
             self.caches = init_caches(cfg, n_slots, self.max_len)
-        self.blocks_run = 0
+        self.blocks_run = 0       # completed blocks: grid blocks (lockstep) /
+                                  # per-row blocks (slot clock)
+        self.decode_steps = 0     # diffusion micro-steps executed (both clocks)
+
+        # ---- per-slot block clocks (clock="slot") ------------------------
+        # each row owns its denoise-step index within its OWN block; -1 marks
+        # an idle row. Block tokens / committed masks persist across
+        # micro-steps because rows cross block boundaries at different times.
+        self.clock = clock
+        self._deltas_np = np.asarray(self._commit_deltas, np.int32)
+        self._step_idx = np.full((n_slots,), -1, np.int32)
+        self._blk = jnp.full((n_slots, d), self.mask_id, jnp.int32)
+        self._cmt = jnp.zeros((n_slots, d), bool)
+        # grid snapshot memo: tables/carry/starts/live/page-tables only change
+        # at grid EVENTS (admission, a row's boundary, retirement); between
+        # events the micro-step loop reuses the device inputs untouched
+        self._grid_ver = 0
+        self._grid_snap = None
+        self._grid_snap_ver = -1
 
         cfg_ = cfg
         self._step = jax.jit(make_serve_step(cfg, scfg, self.mask_id))
@@ -151,9 +256,11 @@ class ServingEngine:
             return caches
 
         @jax.jit
-        def commit_block(params, caches, block_tokens, starts, page_tables=None):
+        def commit_block(params, caches, block_tokens, starts, page_tables=None,
+                         commit_mask=None):
             if page_tables is not None:
                 caches = with_page_tables(caches, page_tables)
+            before = caches
             b, s = block_tokens.shape
             pos = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
             if cfg_.rope_type == "mrope":
@@ -162,7 +269,28 @@ class ServingEngine:
                 params, cfg_, ModelInputs(block_tokens, pos), caches,
                 commit=True, attend_cache=True,
             )
+            if commit_mask is not None:
+                # per-slot block clocks: only rows at their own boundary commit
+                caches = _select_commit_rows(before, caches, commit_mask)
             return caches
+
+        @jax.jit
+        def commit_row(params, caches, block_row, start, idx, page_tables=None):
+            # batch-1 commit of ONE slot's finished block: the common case
+            # under per-slot clocks is a single row crossing its boundary per
+            # micro-step, and a row-sliced forward costs ~1/B of the grid pass
+            if page_tables is not None:
+                caches = with_page_tables(caches, page_tables)
+            small = _gather_row(caches, idx)
+            s = block_row.shape[1]
+            pos = start + jnp.arange(s, dtype=jnp.int32)[None]
+            if cfg_.rope_type == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, 1, s))
+            _, small, _, _ = forward(
+                params, cfg_, ModelInputs(block_row, pos), small,
+                commit=True, attend_cache=True,
+            )
+            return _scatter_row(caches, small, idx)
 
         @jax.jit
         def scatter_slot(big, small, idx):
@@ -208,6 +336,7 @@ class ServingEngine:
 
         self._prefill1 = prefill1
         self._commit_block = commit_block
+        self._commit_row = commit_row
         self._scatter_slot = scatter_slot
         self._scatter_slot_paged = scatter_slot_paged
 
@@ -222,7 +351,7 @@ class ServingEngine:
         return min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
 
     # ---- admission: prompt prefill into the slot's cache row -------------
-    def _admit(self) -> List[Completion]:
+    def _admit(self) -> Tuple[List[Slot], List[Completion]]:
         admitted, rejected = self.sched.admit()
         for slot in admitted:
             req = slot.request
@@ -248,7 +377,7 @@ class ServingEngine:
                 )
             slot.pos = mp
         now = time.perf_counter()
-        return [
+        return admitted, [
             Completion(
                 request_id=req.request_id, text="", tokens=[], valid=False,
                 matched=False, blocks=0, steps=0,
@@ -259,22 +388,28 @@ class ServingEngine:
             for req, reason in rejected
         ]
 
-    def _ensure_block_pages(self) -> None:
-        """Extend every live slot's page table to cover the block about to
-        run. Draws on the admission-time reservation, so it cannot fail."""
-        d = self.scfg.block_size
-        for s in self.sched.active_slots:
-            need = -(-(s.pos + d) // self.page_size)
-            have = len(self.pool.pages(s.index))
-            if need > have:
-                self.page_table[s.index, have:need] = self.pool.alloc(
-                    s.index, need - have
-                )
+    def _ensure_slot_pages(self, slot: Slot) -> None:
+        """Extend ONE slot's page table to cover the block it is about to run.
+        Called on the slot's OWN block boundary (admission or per-row block
+        start under the slot clock) — allocation timing follows each request's
+        clock, not the grid's. Draws on the admission-time reservation, so it
+        cannot fail."""
+        need = -(-(slot.pos + self.scfg.block_size) // self.page_size)
+        have = len(self.pool.pages(slot.index))
+        if need > have:
+            self.page_table[slot.index, have:need] = self.pool.alloc(
+                slot.index, need - have
+            )
 
-    # ---- one block over all live slots -----------------------------------
+    def _ensure_block_pages(self) -> None:
+        """Lockstep form: extend every live slot at the grid barrier."""
+        for s in self.sched.active_slots:
+            self._ensure_slot_pages(s)
+
+    # ---- one block over all live slots (clock="block": lockstep) ---------
     def step_block(self) -> List[Completion]:
         """Admit, run one diffusion block over every slot, commit, retire."""
-        out = self._admit()
+        _, out = self._admit()
         if not self.sched.busy:
             return out
         sched = self.sched
@@ -303,10 +438,115 @@ class ServingEngine:
             page_tables,
         )
         self.blocks_run += 1
+        self.decode_steps += len(self._commit_deltas)
         finished = sched.record_block(
             np.asarray(block_tokens), np.asarray(valid), np.asarray(qf),
             steps=len(self._commit_deltas),
         )
+        out.extend(self._complete(s) for s in finished)
+        return out
+
+    # ---- one micro-step over all live slots (clock="slot") ---------------
+    def step_token(self) -> List[Completion]:
+        """One diffusion micro-step of the grid under per-slot block clocks.
+
+        Admission happens HERE, every micro-step: a freed slot takes the queue
+        head immediately instead of waiting for the grid's next block
+        boundary, and each row commits/retires the moment its OWN clock
+        crosses a boundary — mid-block for everyone else. Retiring rows skip
+        the commit forward entirely (their last block's K/V can never be
+        read), so a drain of short requests costs no commit passes."""
+        sched = self.sched
+        admitted, out = self._admit()
+        for s in admitted:
+            self._step_idx[s.index] = 0
+            if self.pool is not None:
+                self._ensure_slot_pages(s)
+        if admitted:
+            reset = np.zeros((self.n_slots,), bool)
+            reset[[s.index for s in admitted]] = True
+            rm = jnp.asarray(reset)
+            self._blk = jnp.where(rm[:, None], self.mask_id, self._blk)
+            self._cmt = self._cmt & ~rm[:, None]
+            self._grid_ver += 1
+        if not sched.busy:
+            return out
+
+        b = self.n_slots
+        t_steps = len(self._commit_deltas)
+        if self._grid_snap_ver != self._grid_ver:
+            page_tables = None
+            if self.pool is not None:
+                page_tables = jnp.asarray(self.page_table)
+            starts_np = sched.starts()
+            live = np.asarray([not s.free for s in sched.slots], bool)
+            self._grid_snap = (
+                sched.stacked_tables(), jnp.asarray(sched.carry_batch()),
+                starts_np, jnp.asarray(starts_np)[:, None],
+                live, jnp.asarray(live), page_tables,
+            )
+            self._grid_snap_ver = self._grid_ver
+        (tables, carry, starts_np, starts_dev, live, live_dev,
+         page_tables) = self._grid_snap
+        # each row advances by ITS step's schedule delta; idle rows by 0
+        deltas = np.where(
+            live, self._deltas_np[np.clip(self._step_idx, 0, t_steps - 1)], 0
+        ).astype(np.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        self._blk, self._cmt, valid, qf, self.caches = self._step(
+            self.params, self.caches, self._blk, self._cmt, carry,
+            starts_dev, sub, tables_arg=tables,
+            n_commit_arg=jnp.asarray(deltas),
+            page_tables_arg=page_tables, row_live_arg=live_dev,
+        )
+        self.decode_steps += 1
+        self._step_idx[live] += 1
+
+        # a row's boundary: its own schedule ran out (the schedule commits
+        # exactly d positions over t_steps, so the committed mask is full
+        # exactly then — host-side step counting needs no device sync)
+        bnd = [i for i in range(b) if live[i] and self._step_idx[i] >= t_steps]
+        if not bnd:
+            return out
+        self._grid_ver += 1          # budgets/carries/starts change below
+        blk_np = np.asarray(self._blk)
+        finished = sched.record_block(
+            blk_np, np.asarray(valid), np.asarray(qf), steps=t_steps, rows=bnd,
+        )
+        self.blocks_run += len(bnd)
+        fin = {s.index for s in finished}
+        cont = [i for i in bnd if i not in fin]
+        if cont:
+            # rows that continue need their block in the cache before their
+            # next micro-step; rows that retire never read it again. A lone
+            # boundary row (the staggered steady state) commits through the
+            # cheap batch-1 row pass; a cluster takes one masked grid pass.
+            if 2 * len(cont) < b:
+                for i in cont:
+                    self.caches = self._commit_row(
+                        self.params, self.caches, self._blk[i:i + 1],
+                        jnp.asarray(starts_np[i], jnp.int32),
+                        jnp.asarray(i, jnp.int32), page_tables,
+                    )
+            else:
+                mask = np.zeros((b,), bool)
+                mask[cont] = True
+                self.caches = self._commit_block(
+                    self.params, self.caches, self._blk, jnp.asarray(starts_np),
+                    page_tables, jnp.asarray(mask),
+                )
+            for i in cont:
+                self._step_idx[i] = 0
+                if self.pool is not None:
+                    self._ensure_slot_pages(sched.slots[i])
+        # boundary rows start a fresh (all-mask) block; retired rows park idle
+        reset = np.zeros((b,), bool)
+        reset[bnd] = True
+        rm = jnp.asarray(reset)
+        self._blk = jnp.where(rm[:, None], self.mask_id, self._blk)
+        self._cmt = self._cmt & ~rm[:, None]
+        for i in fin:
+            self._step_idx[i] = -1
         out.extend(self._complete(s) for s in finished)
         return out
 
@@ -338,15 +578,19 @@ class ServingEngine:
         self.sched.release(slot)   # returns the slot's pages under paged KV
         if self.pool is not None:
             self.page_table[slot.index] = 0   # back to the trash page
+        self._grid_ver += 1        # the freed slot drops out of the live grid
         return out
 
     # ---- serve loop ------------------------------------------------------
     def serve(self, requests: Iterable[Request] = ()) -> Iterator[Completion]:
         """Submit ``requests`` and yield completions as slots retire. Runs
         until the queue and every slot drain; more work may be submitted from
-        the consumer between yields."""
+        the consumer between yields. Under ``clock="slot"`` the loop advances
+        one micro-step at a time, so submissions between yields are admitted
+        mid-block instead of at the next grid barrier."""
         for r in requests:
             self.submit(r)
+        step = self.step_token if self.clock == "slot" else self.step_block
         while self.sched.pending or self.sched.busy:
-            for c in self.step_block():
+            for c in step():
                 yield c

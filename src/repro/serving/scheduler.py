@@ -36,7 +36,6 @@ import numpy as np
 from repro.api import Request
 from repro.constraints import (
     PLACEHOLDER_PATTERN,
-    UNREACHABLE,
     CompiledConstraint,
     Constraint,
     ConstraintCache,
@@ -83,11 +82,13 @@ class ContinuousBatchingScheduler:
         max_blocks: int = 8,
         page_pool: Optional[PagePool] = None,
         prompt_len_fn=None,
+        eos_fastpath: bool = True,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if page_pool is not None and prompt_len_fn is None:
             raise ValueError("page_pool admission needs a prompt_len_fn")
+        self.eos_fastpath = eos_fastpath
         self.n_slots = n_slots
         self.cache = cache
         self.tok = tokenizer
@@ -111,6 +112,8 @@ class ContinuousBatchingScheduler:
         self._padded: Dict[Tuple[str, int, int], DingoTables] = {}
         self._stacked: Optional[DingoTables] = None
         self._stacked_key: Optional[tuple] = None
+        # per-pattern memo: states whose ONLY legal continuation is EOS∞
+        self._eos_only: Dict[str, np.ndarray] = {}
 
     # ---- queue -----------------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -228,20 +231,38 @@ class ContinuousBatchingScheduler:
         return [s.entry for s in self.slots]
 
     def stacked_tables(self) -> DingoTables:
-        """Batched (B, Qb, Cb) tables over all slots, memoized until the slot
-        assignment, bucket, or any slot's remaining budget changes."""
+        """Batched (B, Qb, Cb) tables over all slots, with each row's
+        budget-aware ``live`` end-state mask swapped in (:meth:`live_rows`).
+
+        The padded/stacked transition tables are memoized on (bucket, slot
+        assignment) ONLY — a slot crossing its own block boundary changes
+        just its budget, so under per-slot clocks the boundary updates a
+        (B, Qb) bool mask instead of re-padding and re-uploading every
+        table: per-row live swaps are data, never a restack or retrace."""
         qb, cb = self.bucket()
-        budgets = tuple(self._block_budget(s) for s in self.slots)
-        key = (qb, cb, budgets) + tuple(id(s.entry) for s in self.slots)
-        if self._stacked_key == key:
-            return self._stacked
-        padded = [
-            self._padded_tables(s.entry, qb, cb, budget=r)
-            for s, r in zip(self.slots, budgets)
-        ]
-        self._stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
-        self._stacked_key = key
-        return self._stacked
+        key = (qb, cb) + tuple(id(s.entry) for s in self.slots)
+        if self._stacked_key != key:
+            padded = [self._padded_tables(s.entry, qb, cb) for s in self.slots]
+            self._stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *padded
+            )
+            self._stacked_key = key
+        return self._stacked._replace(live=jnp.asarray(self.live_rows(qb)))
+
+    def live_rows(self, qb: int) -> np.ndarray:
+        """(B, Qb) per-row live end-state masks in the padded state space:
+        each constrained DINGO row's live set is restricted to states whose
+        distance-to-accept fits its remaining budget (:meth:`_block_budget`);
+        other rows keep their automaton's plain live set."""
+        live = np.zeros((self.n_slots, qb), bool)
+        for s in self.slots:
+            td = s.entry.tokendfa
+            budget = self._block_budget(s)
+            if budget is None:
+                live[s.index, : td.num_states] = td.live
+            else:
+                live[s.index, : td.num_states] = s.entry.dist <= budget
+        return live
 
     def _block_budget(self, slot: Slot) -> Optional[int]:
         """Token budget remaining AFTER the block about to run, for constrained
@@ -255,22 +276,11 @@ class ContinuousBatchingScheduler:
             return None
         return (slot.blocks_total - slot.blocks_done - 1) * self.block_size
 
-    def _padded_tables(
-        self, entry: CompiledConstraint, qb: int, cb: int, budget: Optional[int] = None
-    ) -> DingoTables:
-        if budget is not None:
-            finite = entry.dist[entry.dist < UNREACHABLE]
-            if finite.size and budget >= int(finite.max()):
-                budget = None   # every live state can close in time: plain tables
-        key = (entry.pattern, qb, cb, budget)
+    def _padded_tables(self, entry: CompiledConstraint, qb: int, cb: int) -> DingoTables:
+        key = (entry.pattern, qb, cb)
         hit = self._padded.get(key)
         if hit is None:
-            td = entry.tokendfa
-            hit = pad_tables(td, qb, cb)
-            if budget is not None:
-                live = np.zeros(qb, bool)
-                live[: td.num_states] = entry.dist <= budget
-                hit = hit._replace(live=jnp.asarray(live))
+            hit = pad_tables(entry.tokendfa, qb, cb)
             self._padded[key] = hit
             if len(self._padded) > 8 * self.n_slots + 32:
                 self._padded.pop(next(iter(self._padded)))
@@ -305,14 +315,20 @@ class ContinuousBatchingScheduler:
         valid: np.ndarray,          # (B,) decoder validity at the final step
         q_final: np.ndarray,        # (B,) DINGO end state (padded space)
         steps: int,
+        rows: Optional[List[int]] = None,
     ) -> List[Slot]:
         """Thread per-slot DFA state across the block boundary and retire
         finished slots. Returns the retired slots (engine builds Completions
-        and must call :meth:`release` on each)."""
+        and must call :meth:`release` on each).
+
+        ``rows`` restricts the recording to those slot indices — the per-slot
+        block-clock engine calls this at every micro-step with exactly the
+        rows whose OWN clock crossed a block boundary, while lockstep mode
+        (rows=None) records every occupied slot at the grid barrier."""
         finished = []
         eos = self.tok.eos_token_id
         for s in self.slots:
-            if s.free:
+            if s.free or (rows is not None and s.index not in rows):
                 continue
             row = block_tokens[s.index].tolist()
             s.tokens.extend(row)
@@ -338,9 +354,39 @@ class ContinuousBatchingScheduler:
             # an accepting state — the match is over, free the slot now
             if not done and accepting and all(t == eos for t in row):
                 done = True
+            # forced-EOS retirement: the slot's block-start state admits ONLY
+            # EOS∞ — every remaining block is pure padding, so retire NOW
+            # instead of decoding it. Purely host-side and clock-invariant:
+            # both the lockstep grid and per-slot clocks skip the identical
+            # padding blocks, keeping completions token-identical. DINGO only:
+            # it is the decoder that PROVABLY emits nothing but EOS from such
+            # a state — an unconstrained decode is not bound by the DFA, so
+            # skipping its remaining blocks would fabricate tokens it might
+            # not have produced.
+            if (not done and accepting and s.constrained and self.eos_fastpath
+                    and self.decode == DINGO
+                    and s.q_state < td.num_states
+                    and self._eos_only_states(s.entry)[s.q_state]):
+                done = True
             if done:
                 finished.append(s)
         return finished
+
+    def _eos_only_states(self, entry: CompiledConstraint) -> np.ndarray:
+        """(Q,) bool: accepting states q whose every non-EOS transition dies
+        (or strands on an un-live state) and whose EOS transition self-loops —
+        from q the ONLY legal generation is EOS padding forever."""
+        memo = self._eos_only.get(entry.pattern)
+        if memo is None:
+            td = entry.tokendfa
+            eos = self.tok.eos_token_id
+            alive = td.live[td.trans] & (td.trans != td.dead)   # (Q, V)
+            alive[:, eos] = False
+            memo = (np.asarray(td.accepting, bool)
+                    & ~alive.any(axis=1)
+                    & (td.trans[:, eos] == np.arange(td.num_states)))
+            self._eos_only[entry.pattern] = memo
+        return memo
 
     @staticmethod
     def _advance_reach(td, reach: np.ndarray, tokens: List[int]) -> np.ndarray:

@@ -7,16 +7,13 @@ plus MoE load-balance aux loss and optional MTP loss.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
 from repro.models import ModelInputs, forward, mtp_logits
-from repro.sharding.api import constrain
 
 from .optim import AdamState, adamw_update, init_adam
 

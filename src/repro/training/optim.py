@@ -6,7 +6,6 @@ shards m/v over the full mesh (ZeRO-1 style) via the partition-spec helpers in
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Tuple
 
 import jax

@@ -1,12 +1,10 @@
 """Roofline model + HLO analyzer edge cases."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.analysis.hlo import HloAnalysis, analyze_hlo_text
-from repro.analysis.roofline import analyze, model_flops_for, parse_collective_bytes
-from repro.config import V5E_HBM_BW, V5E_PEAK_FLOPS_BF16
+from repro.analysis.hlo import analyze_hlo_text
+from repro.analysis.roofline import analyze, model_flops_for
 from repro.configs import get_config
 
 

@@ -1,0 +1,105 @@
+"""benchmarks/ci_compare.py — the CI benchmark-regression gate: dotted-path
+resolution, runner normalization, additive-baseline skips, and exit codes."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.ci_compare import compare, get_path, main
+
+
+def _doc(warm=2.0, cold=1.5, batch_warm=1.0, gain=1.1, steps=1.14):
+    return {
+        "warm": {"req_s": warm},
+        "cold": {"req_s": cold},
+        "batch_warm": {"req_s": batch_warm},
+        "arrivals_lockstep": {"req_s": warm * 2},
+        "arrivals_slot_clock": {"req_s": warm * 2 * gain},
+        "slot_clock_req_s_gain_x": gain,
+        "slot_clock_steps_gain_x": steps,
+        "slot_clock_p50_gain_x": 1.2,
+    }
+
+
+def test_get_path_dotted_and_missing():
+    d = {"a": {"b": {"c": 3}}, "x": 1}
+    assert get_path(d, "a.b.c") == 3
+    assert get_path(d, "x") == 1
+    assert get_path(d, "a.b.missing") is None
+    assert get_path(d, "x.deeper") is None
+
+
+def test_identical_docs_pass():
+    failures, rows = compare(_doc(), _doc(), max_regression=0.2)
+    assert failures == []
+    gated = [r for r in rows if "report-only" not in r[-1]]
+    assert all(r[-1] == "ok" for r in gated if r[2] is not None)
+
+
+def test_regression_beyond_tolerance_fails():
+    base, new = _doc(), _doc(steps=0.8)  # 1.14 -> 0.8: -30%
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("slot_clock_steps_gain_x" in f for f in failures)
+    # within tolerance passes
+    failures, _ = compare(base, _doc(steps=1.0), max_regression=0.2)
+    assert not any("steps" in f for f in failures)
+
+
+def test_wall_clock_ratios_report_but_never_gate():
+    """p50/req_s gain ratios are too noisy for a required CI job: a collapse
+    in them shows in the report yet cannot fail the gate."""
+    failures, rows = compare(_doc(), _doc(gain=0.1), max_regression=0.2)
+    assert not any("slot_clock_req_s_gain_x" in f for f in failures)
+    assert not any("slot_clock_p50_gain_x" in f for f in failures)
+    assert any(r[0] == "slot_clock_req_s_gain_x" and "report-only" in r[-1] for r in rows)
+
+
+def test_runner_normalization_cancels_machine_speed():
+    """A uniformly 3x slower runner must NOT trip the gate (every req/s
+    scales together, including the normalizer)."""
+    base = _doc(warm=3.0, cold=2.4, batch_warm=1.5)
+    slow = _doc(warm=1.0, cold=0.8, batch_warm=0.5)
+    failures, _ = compare(base, slow, max_regression=0.2)
+    assert failures == []
+    # ... but a serving-only collapse on the same machine DOES trip it
+    bad = _doc(warm=1.5, cold=2.4, batch_warm=1.5)
+    failures, _ = compare(base, bad, max_regression=0.2)
+    assert any("warm.req_s" in f for f in failures)
+
+
+def test_additive_baseline_keys_skip_but_dropped_new_keys_fail():
+    base, new = _doc(), _doc()
+    del base["slot_clock_steps_gain_x"]  # older baseline: skip
+    failures, rows = compare(base, new, max_regression=0.2)
+    assert failures == []
+    assert any("skipped" in r[-1] for r in rows)
+    del new["warm"]  # bench dropped a gated metric: fail
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("missing from new run" in f for f in failures)
+
+
+def test_main_exit_codes(tmp_path):
+    b, n = tmp_path / "base.json", tmp_path / "new.json"
+    b.write_text(json.dumps(_doc()))
+    n.write_text(json.dumps(_doc()))
+    assert main([str(b), str(n)]) == 0
+    n.write_text(json.dumps(_doc(gain=0.5)))
+    assert main([str(b), str(n), "--max-regression", "0.2"]) == 1
+    assert main([str(b), str(n), "--max-regression", "0.99"]) == 0
+    assert main([str(tmp_path / "nope.json"), str(n)]) == 2
+
+
+def test_gate_passes_on_committed_baseline():
+    """The committed experiments/BENCH_serving.json must gate green against
+    itself — the exact check the CI bench-smoke job runs."""
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments", "BENCH_serving.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed serving baseline")
+    with open(path) as f:
+        doc = json.load(f)
+    failures, rows = compare(doc, doc, max_regression=0.2)
+    assert failures == []
+    # the keys the PR's acceptance rests on are really in the artifact
+    assert doc["slot_clock_higher_req_s"] is True
+    assert doc["slot_clock_steps_gain_x"] > 1.0

@@ -82,6 +82,53 @@ def test_decode_out_contract_across_strategies(tables):
         assert out.valid.shape == () and out.q_final.shape == ()
 
 
+def test_init_carry_per_row_reset(tables):
+    """init_carry(reset_mask=, prev=) re-seeds exactly the masked rows at the
+    DFA start state — the per-slot block-clock swap, no retrace needed."""
+    q = tables.cnext.shape[0]
+    mask = jnp.asarray([True, False, True])
+    for name in ("dingo", "greedy"):
+        strat = get_strategy(name)
+        fresh = strat.init_carry(tables, 3)
+        prev = fresh + 1.0 if name == "dingo" else ~fresh
+        out = strat.init_carry(tables, 3, reset_mask=mask, prev=prev)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(fresh[0]))
+        np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(fresh[2]))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(prev[1]))
+    # unconstrained carry is constant: reset is the identity
+    strat = get_strategy("unconstrained")
+    prev = jnp.ones((3, 1), jnp.float32)
+    out = strat.init_carry(tables, 3, reset_mask=mask, prev=prev)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(prev))
+    assert strat.init_carry(tables, 3).shape == (3, 1)
+    assert q >= 2   # the regex automaton is non-trivial
+
+
+def test_carry_next_update_mask_freezes_rows(tables):
+    """carry_next(update_mask=) advances only rows at their own boundary."""
+    tok = default_tokenizer()
+    ab = jnp.asarray([tok.encode("ab") * 2], jnp.int32)[:, :4]
+    toks = jnp.concatenate([ab, ab], axis=0)                      # (2, 4)
+    mask = jnp.asarray([True, False])
+
+    dingo = get_strategy("dingo")
+    w0 = dingo.init_carry(tables, 2)
+    qf = jnp.asarray([1, 1], jnp.int32)
+    out = dingo.carry_next(tables, w0, qf, toks, update_mask=mask)
+    # row 0 advanced to one-hot(qf); row 1 kept its start-state carry
+    assert int(np.asarray(out[0]).argmax()) == 1
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(w0[1]))
+    full = dingo.carry_next(tables, w0, qf, toks)
+    np.testing.assert_array_equal(np.asarray(full[0]), np.asarray(out[0]))
+
+    greedy = get_strategy("greedy")
+    r0 = greedy.init_carry(tables, 2)
+    out = greedy.carry_next(tables, r0, qf, toks, update_mask=mask)
+    adv = greedy.carry_next(tables, r0, qf, toks)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(adv[0]))
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(r0[1]))
+
+
 def test_register_custom_strategy_dispatches_through_decode_block():
     def _decode(logp, tables, carry, *, impl="jnp"):
         toks = jnp.argmax(logp, axis=-1).astype(jnp.int32)

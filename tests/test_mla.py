@@ -1,7 +1,6 @@
 """MLA (DeepSeek) — the absorbed decode path must equal the expanded path
 mathematically: both compute the same attention, one folds W_uk into the query
 and keeps the output in latent space."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

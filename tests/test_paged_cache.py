@@ -1,7 +1,6 @@
 """Paged KV cache: PagePool allocator invariants (deterministic stress +
 hypothesis properties), module-level paged-vs-dense cache-op equivalence for
 GQA and MLA, and the Pallas paged decode kernel vs the dense kernel."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

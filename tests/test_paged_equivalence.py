@@ -9,7 +9,6 @@ import json
 import re
 
 import jax
-import numpy as np
 import pytest
 
 from repro.config import ServeConfig

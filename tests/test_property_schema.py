@@ -10,7 +10,6 @@ import random
 import re
 import string
 
-import pytest
 
 from repro.core import compile_pattern
 from repro.constraints import schema_to_regex

@@ -8,7 +8,6 @@ checker runs deterministically always and under hypothesis in CI."""
 import random
 
 import numpy as np
-import pytest
 
 from repro.core import build_token_dfa, compile_pattern
 

@@ -1,7 +1,6 @@
 """Regex engine: parser + NFA + DFA vs Python's `re` (ground truth)."""
 import re
 
-import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@ commit-selection invariants per strategy."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.diffusion.remask import confidence, select_commits
 

@@ -1,7 +1,6 @@
 """Sharding rules: param specs divisibility, cache specs, HLO analyzer units."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

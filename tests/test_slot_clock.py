@@ -1,0 +1,164 @@
+"""Per-slot block clocks (token-level continuous batching) — differential
+acceptance against the lockstep grid plus the mid-block admission guarantee.
+
+The serving engine's two clocks must be *semantically identical per request*:
+each row's trajectory depends only on its own cache row, tables, and carry
+(deterministic remask), so scheduling rows on independent block clocks may
+change WHEN a request runs but never WHAT it generates. The latency tests pin
+the part that does change: a request admitted into a freed slot starts
+decoding at the very next micro-step, before the grid's next block boundary.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Constraint, Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import ConstraintCache, schema_for_fields
+from repro.data import synthetic
+from repro.diffusion.remask import select_commits
+from repro.models import init_model
+from repro.serving import ServingEngine
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+def _mixed_requests():
+    """Mixed 8-request stream: 4 constraint kinds, heterogeneous budgets."""
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 16),
+    ]
+    return [Request(f"prompt {i}: ", c, max_new_tokens=m)
+            for i, (c, m) in enumerate(specs)]
+
+
+def test_slot_vs_lockstep_token_identical(tok, setup):
+    """ISSUE acceptance: the mixed 8-request stream produces token-identical
+    per-request completions under lockstep vs per-slot clocks."""
+    cfg, params, scfg = setup
+
+    def run(clock):
+        eng = ServingEngine(params, cfg, scfg, tok, n_slots=3,
+                            max_prompt_len=32,
+                            constraint_cache=ConstraintCache(), seed=0,
+                            clock=clock)
+        reqs = _mixed_requests()
+        order = {r.request_id: i for i, r in enumerate(reqs)}
+        return {order[c.request_id]: c for c in eng.serve(reqs)}, len(reqs)
+
+    lock, n = run("block")
+    slot, _ = run("slot")
+    assert set(lock) == set(slot) == set(range(n))
+    for i in sorted(lock):
+        cl, cs = lock[i], slot[i]
+        assert cl.tokens == cs.tokens, f"request #{i} diverged across clocks"
+        assert cl.text == cs.text
+        assert (cl.valid, cl.matched, cl.blocks) == (cs.valid, cs.matched, cs.blocks)
+
+
+def test_mid_block_admission_before_next_boundary(tok, setup):
+    """A request admitted into a freed slot mid-block starts decoding at the
+    NEXT micro-step — strictly before its neighbour's (i.e. the old global)
+    block boundary — and commits its first tokens immediately."""
+    cfg, params, scfg = setup
+    t_steps = scfg.diffusion_steps_per_block
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=2, max_prompt_len=32,
+                        clock="slot", seed=0)
+    long_req = Request("long: ", Constraint.regex(r"(ab|ba)+"),
+                       max_new_tokens=32)
+    eng.submit(long_req)
+    # take the long request mid-block: 2 of 4 steps into its first block
+    for _ in range(2):
+        assert eng.step_token() == []
+    (slot_a,) = eng.sched.active_slots
+    assert eng._step_idx[slot_a.index] == 2          # genuinely mid-block
+
+    late = Request("late: ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8)
+    eng.submit(late)
+    steps_at_submit = eng.decode_steps
+    eng.step_token()
+    # admitted and decoding on the SAME micro-step it was submitted before —
+    # a lockstep grid would have parked it until the t_steps boundary
+    late_slot = next(s for s in eng.sched.active_slots
+                     if s.request.request_id == late.request_id)
+    assert eng._step_idx[late_slot.index] == 1
+    assert eng.decode_steps == steps_at_submit + 1
+    assert eng.decode_steps % t_steps != 0           # not a global boundary
+    committed_row = np.asarray(eng._cmt)[late_slot.index]
+    assert committed_row.sum() >= 1                  # first tokens committed
+    # the two clocks are genuinely staggered now
+    assert eng._step_idx[slot_a.index] != eng._step_idx[late_slot.index]
+
+    # drain; both requests must still complete validly on staggered clocks
+    done = {}
+    while eng.sched.pending or eng.sched.busy:
+        for c in eng.step_token():
+            done[c.request_id] = c
+    assert set(done) == {long_req.request_id, late.request_id}
+    assert all(c.valid and c.matched for c in done.values())
+
+
+def test_per_row_commit_lengths_stay_per_slot(tok, setup):
+    """Masked per-row commits: mid-drain, every occupied slot's cache length
+    equals ITS own prompt+blocks position, and idle rows never advance."""
+    cfg, params, scfg = setup
+    eng = ServingEngine(params, cfg, scfg, tok, n_slots=2, max_prompt_len=32,
+                        clock="slot", seed=0)
+    eng.submit(Request("a: ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8))
+    eng.step_token()
+    eng.step_token()
+    # second request lands two micro-steps later -> clocks are staggered
+    eng.submit(Request("b: ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=24))
+    seen_stagger = False
+    while eng.sched.pending or eng.sched.busy:
+        eng.step_token()
+        lengths = np.asarray(eng.caches[0][0].length)  # (layers, B)
+        for s in eng.sched.active_slots:
+            np.testing.assert_array_equal(lengths[:, s.index], s.pos)
+        live = sorted(s.index for s in eng.sched.active_slots)
+        if len(live) == 2:
+            seen_stagger |= (eng._step_idx[live[0]] != eng._step_idx[live[1]])
+    assert seen_stagger
+
+
+def test_select_commits_per_row_counts():
+    """(B,) commit-count vectors drive each row independently."""
+    conf = jnp.asarray(np.linspace(0.0, 1.0, 12, dtype=np.float32).reshape(3, 4))
+    committed = jnp.zeros((3, 4), bool)
+    out = select_commits(conf, committed, jnp.asarray([0, 1, 4], jnp.int32))
+    out = np.asarray(out)
+    assert out[0].sum() == 0
+    assert out[1].sum() == 1 and out[1, 3]           # highest-confidence slot
+    assert out[2].all()
+    # already-committed positions never count against the budget
+    pre = jnp.asarray(np.array([[False] * 4, [False, False, False, True],
+                                [True] * 4]))
+    out2 = np.asarray(select_commits(conf, pre, jnp.asarray([2, 1, 0], jnp.int32)))
+    assert out2[0].sum() == 2
+    assert out2[1].sum() == 2                        # 1 new on top of 1 old
+    assert out2[2].all()

@@ -1,6 +1,5 @@
 """Token-level DFA: δ_t, δ_⊥, token classes, EOS terminator, live states."""
 import numpy as np
-import pytest
 
 from repro.core import build_token_dfa, compile_pattern
 from repro.tokenizer import default_tokenizer

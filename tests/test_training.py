@@ -1,7 +1,6 @@
 """Training stack: optimizer math, schedule, loss behaviour, checkpoint
 roundtrip, loss decreases on a learnable task."""
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,6 @@ from repro.configs.llada_repro import e2e_config
 from repro.data.loader import TaskDataLoader
 from repro.tokenizer import default_tokenizer
 from repro.training import (
-    Batch,
     adamw_update,
     checkpoint,
     cosine_lr,
