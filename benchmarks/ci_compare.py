@@ -33,16 +33,31 @@ import argparse
 import json
 import sys
 
-RATIO_KEYS = ("slot_clock_steps_gain_x",)
+RATIO_KEYS = (
+    "slot_clock_steps_gain_x",
+    # bool gate (True=1.0): every uniform-budget group of the forced batch
+    # decode compiled its step exactly once — the per-block live/carry swaps
+    # are traced data, never a retrace. Deterministic, so it gates tightly.
+    "batch_forced.retrace_free",
+    # bool gate: every constrained forced completion fullmatched (the
+    # soundness claim budget-aware end-state forcing exists for)
+    "batch_forced.forced_all_matched",
+)
 REPORT_KEYS = (
     "slot_clock_req_s_gain_x",
     "slot_clock_p50_gain_x",
+    # forced vs unforced warm batch decode in the same run: wall-clock on an
+    # 8-request stream, ±20% run-to-run on a shared runner — reported, never
+    # gated; the normalized batch_forced.forced.req_s below carries the
+    # "forcing must not regress the warm batch path" gate
+    "batch_forced.forced_over_unforced_req_s_x",
 )
 THROUGHPUT_KEYS = (
     "cold.req_s",
     "warm.req_s",
     "arrivals_lockstep.req_s",
     "arrivals_slot_clock.req_s",
+    "batch_forced.forced.req_s",
 )
 DEFAULT_NORMALIZE = "batch_warm.req_s"
 

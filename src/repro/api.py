@@ -28,13 +28,22 @@ differentially testable against a hand-driven ``DiffusionEngine``):
     encoded prompt;
   * per-request tables are padded to the group's power-of-two (Q, C) bucket
     and stacked; unconstrained requests under a table-driven decode
-    strategy ride the match-anything placeholder automaton.
+    strategy ride the match-anything placeholder automaton;
+  * DINGO-constrained rows are decoded under budget-aware end-state forcing
+    (``repro.constraints.budget``): each block's end state must leave a
+    match the remaining budget can still close, so a tight
+    ``max_new_tokens`` can never strand a run mid-pattern — the same
+    guarantee serve mode enforces through the scheduler's ``live_rows``;
+  * a constrained request whose budget is below the automaton's shortest
+    accepting path is flagged (``metadata["infeasible"]``, with a warning)
+    — the batch analogue of the scheduler's up-front rejection.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Any, Dict, Iterable, Iterator, List, Optional
 
 from repro.config import ModelConfig, ServeConfig
@@ -43,6 +52,9 @@ from repro.constraints import (
     CompiledConstraint,
     Constraint,
     ConstraintCache,
+    block_budget,
+    budget_live_rows,
+    closure_pad,
     qc_bucket,
 )
 
@@ -112,6 +124,7 @@ class Engine:
         page_size: int = 16,
         n_pages: Optional[int] = None,
         clock: str = "slot",
+        force_closure: bool = True,
         seed: int = 0,
     ):
         self.params = params
@@ -119,6 +132,13 @@ class Engine:
         self.scfg = scfg
         self.tok = tokenizer
         self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        # kill-switch for batch-mode budget-aware end-state forcing (serve
+        # mode always forces through the scheduler); off restores the
+        # classic DiffusionEngine live-set semantics
+        self.force_closure = force_closure
+        # per-group jitted-decode trace counts of the LAST generate() call —
+        # every entry is 1 when per-block live swaps are pure data
+        self.last_decode_traces: List[int] = []
         self._seed = seed
         self._serving_kwargs = dict(
             n_slots=n_slots, max_prompt_len=max_prompt_len,
@@ -146,7 +166,9 @@ class Engine:
         runs as one batch — per-request ``max_new_tokens`` is honored (a
         short-budget constraint is never decoded past its own closure), and
         within a group heterogeneous constraints are bucketed/stacked per
-        row."""
+        row. DINGO-constrained rows are forced shut within their own budget
+        (``force_closure``); infeasible requests — budget below the
+        automaton's shortest accepting path — are flagged with a warning."""
         from repro.core import decoders
 
         reqs = list(requests)
@@ -163,35 +185,70 @@ class Engine:
 
         d = self.scfg.block_size
         groups: Dict[int, List[int]] = {}
+        infeasible: Dict[int, str] = {}
         for i, r in enumerate(reqs):
-            groups.setdefault(max(1, -(-r.max_new_tokens // d)), []).append(i)
+            blocks = max(1, -(-r.max_new_tokens // d))
+            groups.setdefault(blocks, []).append(i)
+            entry = compiled[i][0]
+            if (r.constraint.constrained and entry is not None
+                    and entry.min_tokens > blocks * d):
+                # same wording as the scheduler's up-front rejection; the row
+                # still decodes (batch shapes stay uniform) but can never
+                # match, so its completion reports valid=False
+                reason = (f"constraint needs >= {entry.min_tokens} tokens, "
+                          "budget too small")
+                infeasible[i] = reason
+                warnings.warn(
+                    f"request {r.request_id}: {reason} "
+                    f"(budget {blocks * d}); completion flagged infeasible",
+                    stacklevel=2,
+                )
 
+        self.last_decode_traces = []
         out: List[Optional[Completion]] = [None] * len(reqs)
         for n_blocks in sorted(groups):
             idxs = groups[n_blocks]
             for i, c in zip(idxs, self._generate_group(
                     [reqs[i] for i in idxs], [compiled[i] for i in idxs],
-                    n_blocks, strategy.needs_tables, seed)):
+                    n_blocks, strategy.needs_tables, seed,
+                    [infeasible.get(i) for i in idxs])):
                 out[i] = c
         return out
 
     def _generate_group(self, reqs, compiled, n_blocks: int,
-                        needs_tables: bool, seed: int) -> List[Completion]:
+                        needs_tables: bool, seed: int,
+                        infeasible: List[Optional[str]]) -> List[Completion]:
         """One uniform-budget batch through a one-shot DiffusionEngine."""
         import jax.numpy as jnp
         import jax.tree_util
         import numpy as np
 
         from repro.core import pad_tables
+        from repro.core.decoders import DINGO
         from repro.diffusion.engine import DiffusionEngine
 
         entries: List[Optional[CompiledConstraint]] = [e for e, _ in compiled]
+        d = self.scfg.block_size
         tables = None
+        live_masks = None
         if needs_tables:
             qb = qc_bucket(max(e.tokendfa.num_states for e in entries))
             cb = qc_bucket(max(e.tokendfa.num_classes for e in entries))
             padded = [pad_tables(e.tokendfa, qb, cb) for e in entries]
             tables = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+            if self.force_closure and self.scfg.decode == DINGO:
+                # budget-aware end-state forcing, shared with the serving
+                # scheduler: one (B, Qb) mask per block, swapped into the
+                # jitted decode as traced data (never a retrace)
+                live_masks = [
+                    budget_live_rows(
+                        entries,
+                        [block_budget(n_blocks, blk, d)
+                         if r.constraint.constrained else None for r in reqs],
+                        qb,
+                    )
+                    for blk in range(n_blocks)
+                ]
 
         ids = [self.tok.encode(r.prompt) for r in reqs]
         m = max(1, max(len(i) for i in ids))
@@ -199,35 +256,47 @@ class Engine:
         for row, i in zip(prompts, ids):
             row[m - len(i):] = i[:m]
 
-        scfg = dataclasses.replace(self.scfg, gen_len=n_blocks * self.scfg.block_size)
+        scfg = dataclasses.replace(self.scfg, gen_len=n_blocks * d)
         eng = DiffusionEngine(self.params, self.cfg, scfg,
                               self.tok.mask_token_id, tables)
-        res = eng.generate(prompts, seed=seed)
+        res = eng.generate(prompts, seed=seed, live_masks=live_masks)
+        self.last_decode_traces.append(eng.decode_trace_count)
         done = time.perf_counter()
 
         out = []
+        eos = self.tok.eos_token_id
         for i, (req, entry) in enumerate(zip(reqs, entries)):
             tokens = [int(t) for t in res.tokens[i]]
             if req.constraint.constrained:
+                # serve-parity early stop + host-side full-match re-check:
+                # once a whole block is EOS padding from an accepting state
+                # the match is over (the scheduler retires the slot there),
+                # so later blocks are rewritten as the EOS padding a retired
+                # slot implies
                 td = entry.tokendfa
-                matched = bool(td.accepting[td.run(tokens)])
+                tokens, matched = closure_pad(td, tokens, d, eos)
             else:
                 matched = None
             trimmed = list(tokens)
-            while trimmed and trimmed[-1] == self.tok.eos_token_id:
+            while trimmed and trimmed[-1] == eos:
                 trimmed.pop()
             out.append(Completion(
                 request_id=req.request_id,
                 text=self.tok.decode(trimmed),
                 tokens=tokens,
-                valid=bool(res.valid[i]),
+                # defense in depth: the decoder's validity claim must survive
+                # the host-side full match — forcing makes them agree for
+                # DINGO, while greedy (which cannot force closure) now
+                # honestly reports truncation instead of silently passing
+                valid=bool(res.valid[i]) and matched is not False,
                 matched=matched,
                 blocks=n_blocks,
                 steps=res.steps,
                 latency_s=done - (req.submit_time_s or done),
                 queue_s=0.0,
                 cache_hit=compiled[i][1],
-                metadata=dict(req.metadata),
+                metadata=(dict(req.metadata, infeasible=infeasible[i])
+                          if infeasible[i] else dict(req.metadata)),
             ))
         return out
 

@@ -10,7 +10,12 @@ between "user spec" and "packed decoder tables".
 Both generation surfaces (`repro.api.Engine.generate` offline batch and
 `.serve` continuous batching) compile through the same cache, so constraint
 precompute is amortized identically in either mode.
+
+    budget   budget-aware end-state forcing shared by both surfaces: the
+             per-block live masks that keep a tight token budget from
+             stranding a run on an uncloseable prefix (paper Alg 4/5)
 """
+from .budget import block_budget, budget_live, budget_live_rows, closure_pad
 from .cache import (
     UNREACHABLE,
     CacheStats,
@@ -48,4 +53,8 @@ __all__ = [
     "dist_to_accept",
     "qc_bucket",
     "UNREACHABLE",
+    "block_budget",
+    "budget_live",
+    "budget_live_rows",
+    "closure_pad",
 ]

@@ -1,0 +1,86 @@
+"""Budget-aware end-state forcing (paper Alg 4/5 soundness under truncation).
+
+DINGO's guarantee — every emitted string provably satisfies the constraint —
+only holds if a block can never strand the run on a prefix the REMAINING
+token budget cannot close. The fix is purely a restriction of the DP's
+end-state selection (the only place ``DingoTables.live`` is read): before
+each block, shrink the live set to states whose shortest distance-to-accept
+(:func:`repro.constraints.cache.dist_to_accept`) fits the budget left AFTER
+that block. At the last block the budget is 0 and the set degenerates to
+exactly the accepting states, forcing the match shut.
+
+This module is the single home for that computation; both generation
+surfaces consume it:
+
+  * serve mode — :meth:`ContinuousBatchingScheduler.live_rows` swaps each
+    slot's ``(B, Qb)`` mask into the stacked tables per block boundary;
+  * batch mode — :meth:`repro.api.Engine.generate` precomputes one mask per
+    block of each uniform-budget group and threads them through
+    ``DiffusionEngine.generate(live_masks=...)``.
+
+Masks are plain numpy bools handed to the jitted decode as traced data:
+swapping a mask between blocks is a device upload, never a retrace.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .cache import CompiledConstraint
+
+__all__ = ["block_budget", "budget_live", "budget_live_rows", "closure_pad"]
+
+
+def block_budget(blocks_total: int, blocks_done: int, block_size: int) -> int:
+    """Token budget remaining AFTER the block about to run (the block itself
+    contributes its ``block_size`` tokens to reaching acceptance). 0 at the
+    last block — the forced live set is then exactly the accepting states."""
+    return max(0, (blocks_total - blocks_done - 1) * block_size)
+
+
+def budget_live(entry: CompiledConstraint, budget: Optional[int]) -> np.ndarray:
+    """(Q,) bool end-state mask for one automaton: states whose shortest
+    distance-to-accept fits ``budget``. ``None`` means "no forcing" — the
+    automaton's plain live set (any extendable state is a legal block end)."""
+    td = entry.tokendfa
+    if budget is None:
+        return np.asarray(td.live, bool)
+    return np.asarray(entry.dist <= budget)
+
+
+def budget_live_rows(
+    entries: Sequence[CompiledConstraint],
+    budgets: Sequence[Optional[int]],
+    qb: int,
+) -> np.ndarray:
+    """(B, qb) per-row masks in the padded state space the rows' stacked
+    tables share; padding states stay dead (False)."""
+    live = np.zeros((len(entries), qb), bool)
+    for i, (entry, budget) in enumerate(zip(entries, budgets)):
+        n = entry.tokendfa.num_states
+        live[i, :n] = budget_live(entry, budget)
+    return live
+
+
+def closure_pad(td, tokens: List[int], block_size: int, eos_id: int):
+    """Serve-parity early stop for an offline-decoded row: returns
+    ``(tokens, matched)``.
+
+    The serving scheduler retires a slot the moment the model pads a whole
+    block with EOS from an accepting state — the match is over, the slot's
+    remaining blocks are never decoded. A fixed batch cannot retire rows, so
+    the decoder keeps producing tokens past that point (from an accepting
+    state the DP may legally re-enter the pattern); to keep ``generate()``
+    and ``serve()`` semantically identical, everything after the closing
+    all-EOS block is rewritten as the EOS padding a retired slot implies,
+    and ``matched`` is judged at the closure — exactly
+    ``ContinuousBatchingScheduler.record_block``'s early-retirement rule."""
+    q = td.start
+    for k in range(0, len(tokens), block_size):
+        row = tokens[k:k + block_size]
+        q = td.run(row, q)
+        accepting = q < td.num_states and bool(td.accepting[q])
+        if accepting and all(t == eos_id for t in row):
+            return tokens[:k + block_size] + [eos_id] * (len(tokens) - k - block_size), True
+    return tokens, bool(q < td.num_states and td.accepting[q])

@@ -38,9 +38,10 @@ rule (e.g. sampling-based DINGO) is one ``register(...)`` call.
 reset or advance never retraces a jitted step. Note the serving engine
 threads its carries HOST-side (``scheduler.carry_batch``/``record_block``)
 — these kwargs are the device-side form of the same per-row reset, for
-strategies that keep carries on device and for batch-mode budget-aware
-end-state forcing (per-block ``live``/carry swaps inside the jitted decode,
-ROADMAP).
+strategies that keep carries on device. Batch-mode budget-aware end-state
+forcing rides the same traced-data contract: ``DiffusionEngine`` swaps a
+per-block ``live`` mask (``tables._replace(live=...)``) and the per-row
+carry through one compiled decode (``repro.constraints.budget``).
 """
 from __future__ import annotations
 

@@ -7,6 +7,11 @@ Log-space (max-plus) Viterbi over (block position × DFA state):
 
 with backpointers ``(prev_state, token)`` per (i, q), then backward path
 reconstruction from the best *live* end state (Observations 1–2 in the paper).
+``tables.live`` is the ONLY gate on end-state selection, which is what makes
+budget-aware forcing a pure data swap: both generation surfaces replace it
+per block with a distance-to-accept-restricted mask
+(``repro.constraints.budget``) so a finite token budget can never strand the
+run on a prefix the remaining blocks cannot close.
 
 The per-position transition scores use the token-class decomposition
 (``tokendfa.py``): stage 1 is a segment-max of the position's log-probs into C

@@ -12,23 +12,41 @@ each block run T diffusion steps. Each step:
 
 DINGO/greedy thread their DFA state across blocks (Appendix D). All inner
 steps are jit'd; the block/step loop runs on host (step count is static).
+
+The inner step IS the serving step: the engine drives the same jitted
+``make_serve_step`` the continuous-batching server runs, so the two paths
+share one commit schedule, one decoder-logp construction, and one compiled
+program shape — ``generate()`` and ``serve()`` are numerically the same
+decode, scheduled differently. (The pre-unification engine kept its own
+step; it also passed the schedule's *cumulative* commit target where
+``select_commits`` takes the per-step count, over-committing early blocks.)
+
+Budget-aware end-state forcing (paper Alg 4/5 soundness under truncation):
+``generate(live_masks=...)`` takes one end-state mask per block — shaped like
+``tables.live``, i.e. ``(B, Q)`` over stacked per-row tables — and each
+block's step swaps it into the tables as a TRACED argument
+(``tables._replace(live=...)``, the contract ``make_serve_step`` already has
+for per-row live swaps). The decode then selects its end state only among
+states the remaining budget can still close (``repro.constraints.budget``);
+swapping masks between blocks is a data upload, never a retrace
+(``decode_trace_count`` pins this).
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
-from repro.core import NEG_INF, DingoTables, decoders
+from repro.core import DingoTables, decoders
 from repro.models import ModelInputs, forward, init_caches
 
-from .remask import confidence, select_commits
-from .schedule import masked_count
+from .schedule import unmask_counts
+from .serve import make_serve_step
 
 
 class GenerationResult(NamedTuple):
@@ -66,6 +84,10 @@ class DiffusionEngine:
         if self._strategy.needs_tables and tables is None:
             raise ValueError(f"decode={scfg.decode} requires DINGO tables")
 
+        # traces of the jitted decode step: stays at 1 per (shape, structure)
+        # however many blocks swap live masks / carries through it
+        self.decode_trace_count = 0
+
         cfg_ = cfg
 
         @functools.partial(jax.jit, static_argnames=("attend_cache",))
@@ -77,17 +99,22 @@ class DiffusionEngine:
             )
             return caches
 
-        @jax.jit
-        def block_logits(params, caches, block_tokens, start):
-            pos = _positions(cfg_, block_tokens.shape[0], start, block_tokens.shape[1])
-            logits, _, _, _ = forward(
-                params, cfg_, ModelInputs(block_tokens, pos), caches, commit=False
-            )
-            return logits
+        raw_step = make_serve_step(cfg, scfg, mask_token_id)
+
+        def step(params, caches, block_tokens, committed, carry, start, rng,
+                 tables_arg, n_commit_arg):
+            # ONE shared step for both surfaces: forward + remask +
+            # constrained block decode, exactly as the serving grid runs it.
+            # ``tables_arg`` (live mask included) and ``carry`` are traced
+            # data; the body runs once per trace, so the counter proves the
+            # per-block swaps never recompile.
+            self.decode_trace_count += 1
+            return raw_step(params, caches, block_tokens, committed, carry,
+                            start, rng, tables_arg=tables_arg,
+                            n_commit_arg=n_commit_arg)
 
         self._prefill = prefill
-        self._block_logits = block_logits
-        self._decode_fns = self._build_decoders()
+        self._step = jax.jit(step)
         self._carry_next_fn = self._build_carry_next()
 
     @property
@@ -95,20 +122,6 @@ class DiffusionEngine:
         """True when tables carry a leading per-request batch axis
         (``core.stack_tables`` — heterogeneous regexes in one batch)."""
         return self.tables is not None and self.tables.cnext.ndim == 3
-
-    def _build_decoders(self):
-        """Jit the registered strategy's batched decode over this engine's
-        (possibly per-row stacked) tables."""
-        strat = self._strategy
-        impl = self.scfg.kernel_impl
-        tables = self.tables
-        t_ax = 0 if self._batched_tables else None
-
-        @jax.jit
-        def dec(logp, carry):
-            return strat.batched(logp, tables, carry, t_ax=t_ax, impl=impl)
-
-        return dec
 
     def _build_carry_next(self):
         """Jit the strategy's block-boundary carry threading (Appendix D)."""
@@ -123,42 +136,36 @@ class DiffusionEngine:
 
         return nxt
 
-    # ------------------------------------------------------------------
-    def _decoder_logp(self, logits, block_tokens, committed, to_commit):
-        """Post-remask distributions (B, d, V) in log space."""
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        v = logp.shape[-1]
-        logp = logp.at[..., self.mask_id].set(NEG_INF)
-        logp = jnp.maximum(logp, NEG_INF)
-        onehot_tok = jnp.where(
-            jax.nn.one_hot(block_tokens, v, dtype=bool), 0.0, NEG_INF
-        )
-        onehot_mask = jnp.where(
-            jax.nn.one_hot(jnp.full_like(block_tokens, self.mask_id), v, dtype=bool),
-            0.0,
-            NEG_INF,
-        )
-        out = jnp.where(committed[..., None], onehot_tok, NEG_INF)
-        out = jnp.where((to_commit & ~committed)[..., None], logp, out)
-        still_masked = ~(committed | to_commit)
-        out = jnp.where(still_masked[..., None], onehot_mask, out)
-        return out
-
     def _carry0(self, batch: int):
         return self._strategy.init_carry(self.tables, batch)
 
     # ------------------------------------------------------------------
-    def generate(self, prompt_tokens: np.ndarray, seed: int = 0) -> GenerationResult:
-        cfg, scfg = self.cfg, self.scfg
+    def generate(
+        self,
+        prompt_tokens: np.ndarray,
+        seed: int = 0,
+        live_masks: Optional[Sequence[np.ndarray]] = None,
+    ) -> GenerationResult:
+        """Decode ``gen_len`` tokens per row. ``live_masks`` (one per block,
+        each shaped like ``tables.live``) force budget-aware match closure:
+        block ``k``'s decode selects its end state only inside
+        ``live_masks[k]`` — per-block data swaps through one compiled step."""
+        scfg = self.scfg
         b, m = prompt_tokens.shape
         d = scfg.block_size
         assert scfg.gen_len % d == 0
         n_blocks = scfg.gen_len // d
+        if live_masks is not None and len(live_masks) != n_blocks:
+            raise ValueError(
+                f"live_masks must carry one mask per block "
+                f"({n_blocks}), got {len(live_masks)}"
+            )
         steps_per_block = max(1, scfg.diffusion_steps_per_block)
+        deltas = unmask_counts(d, steps_per_block)
         max_len = m + scfg.gen_len
         t0 = time.perf_counter()
 
-        caches = init_caches(cfg, b, max_len)
+        caches = init_caches(self.cfg, b, max_len)
         caches = self._prefill(self.params, caches, jnp.asarray(prompt_tokens, jnp.int32),
                                jnp.asarray(0, jnp.int32))
 
@@ -169,22 +176,20 @@ class DiffusionEngine:
 
         for blk in range(n_blocks):
             start = jnp.asarray(m + blk * d, jnp.int32)
+            tables_arg = self.tables
+            if live_masks is not None and tables_arg is not None:
+                tables_arg = tables_arg._replace(
+                    live=jnp.asarray(live_masks[blk]))
             block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
             committed = jnp.zeros((b, d), bool)
             q_final = jnp.zeros((b,), jnp.int32)
             valid = jnp.ones((b,), bool)
-            for i in range(1, steps_per_block + 1):
+            for delta in deltas:
                 rng, sub = jax.random.split(rng)
-                logits = self._block_logits(self.params, caches, block_tokens, start)
-                n_mask_after = masked_count(d, steps_per_block, i)
-                conf = confidence(logits, scfg.remask, sub, impl=scfg.kernel_impl)
-                new_committed = select_commits(conf, committed, d - n_mask_after)
-                logp = self._decoder_logp(logits, block_tokens, committed, new_committed)
-                toks, ok, qf = self._decode_fns(logp, carry)
-                # keep mask token at still-masked positions for the next forward
-                block_tokens = jnp.where(new_committed, toks, self.mask_id)
-                committed = new_committed
-                q_final, valid = qf, ok
+                block_tokens, committed, valid, q_final, caches = self._step(
+                    self.params, caches, block_tokens, committed, carry,
+                    start, sub, tables_arg, jnp.asarray(delta, jnp.int32),
+                )
             # commit block to caches (block attends the prefix it was decoded against)
             caches = self._prefill(self.params, caches, block_tokens, start, attend_cache=True)
             all_tokens.append(np.asarray(block_tokens))

@@ -114,6 +114,10 @@ def main():
     ap.add_argument("--clock", default="slot", choices=["slot", "block"],
                     help="--server block clock: per-slot (admit/retire on each "
                          "row's own boundary, mid-block) or lockstep grid")
+    ap.add_argument("--no-force-closure", action="store_true",
+                    help="batch mode: disable budget-aware end-state forcing "
+                         "(classic live-set semantics; completions may not "
+                         "close within --gen-len)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -135,7 +139,8 @@ def main():
     eng = Engine(params, cfg, scfg, tok, n_slots=args.slots,
                  max_prompt_len=64, constraint_cache=ConstraintCache(),
                  kv_layout="paged" if args.paged else "dense",
-                 page_size=args.page_size, clock=args.clock)
+                 page_size=args.page_size, clock=args.clock,
+                 force_closure=not args.no_force_closure)
 
     if args.server:
         run_server(args, eng, args.requests)

@@ -566,7 +566,11 @@ class ServingEngine:
             request_id=req.request_id,
             text=self.tok.decode(tokens),
             tokens=list(slot.tokens),
-            valid=bool(slot.valid),
+            # defense in depth: decoder-reported validity must survive the
+            # host-side full-match re-check (greedy, which cannot force
+            # closure, otherwise reports a live-but-unclosed truncation as
+            # valid) — mirrors Engine.generate's completion semantics
+            valid=bool(slot.valid) and matched is not False,
             matched=matched,
             blocks=slot.blocks_done,
             steps=slot.steps,

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -39,6 +39,8 @@ from repro.constraints import (
     CompiledConstraint,
     Constraint,
     ConstraintCache,
+    block_budget,
+    budget_live_rows,
     qc_bucket,
 )
 from repro.core import DingoTables, pad_tables
@@ -108,8 +110,10 @@ class ContinuousBatchingScheduler:
         self.placeholder, _ = cache.get_or_compile(PLACEHOLDER_PATTERN, tokenizer)
         for s in self.slots:
             self._park(s)
-        # padded-table memo: (pattern, Qb, Cb) -> DingoTables on device
-        self._padded: Dict[Tuple[str, int, int], DingoTables] = {}
+        # padded-table memo: (pattern, Qb, Cb) -> DingoTables on device.
+        # LRU — hits refresh recency, capacity evicts the least recently used
+        self._padded: "OrderedDict[Tuple[str, int, int], DingoTables]" = OrderedDict()
+        self._padded_cap = 8 * n_slots + 32
         self._stacked: Optional[DingoTables] = None
         self._stacked_key: Optional[tuple] = None
         # per-pattern memo: states whose ONLY legal continuation is EOS∞
@@ -253,16 +257,14 @@ class ContinuousBatchingScheduler:
         """(B, Qb) per-row live end-state masks in the padded state space:
         each constrained DINGO row's live set is restricted to states whose
         distance-to-accept fits its remaining budget (:meth:`_block_budget`);
-        other rows keep their automaton's plain live set."""
-        live = np.zeros((self.n_slots, qb), bool)
-        for s in self.slots:
-            td = s.entry.tokendfa
-            budget = self._block_budget(s)
-            if budget is None:
-                live[s.index, : td.num_states] = td.live
-            else:
-                live[s.index, : td.num_states] = s.entry.dist <= budget
-        return live
+        other rows keep their automaton's plain live set. Delegates to the
+        shared :mod:`repro.constraints.budget` helper — the same masks
+        ``Engine.generate`` threads through the offline batch decode."""
+        return budget_live_rows(
+            [s.entry for s in self.slots],
+            [self._block_budget(s) for s in self.slots],
+            qb,
+        )
 
     def _block_budget(self, slot: Slot) -> Optional[int]:
         """Token budget remaining AFTER the block about to run, for constrained
@@ -274,7 +276,7 @@ class ContinuousBatchingScheduler:
         accepting states, forcing the match shut."""
         if self.decode != DINGO or slot.free or not slot.constrained:
             return None
-        return (slot.blocks_total - slot.blocks_done - 1) * self.block_size
+        return block_budget(slot.blocks_total, slot.blocks_done, self.block_size)
 
     def _padded_tables(self, entry: CompiledConstraint, qb: int, cb: int) -> DingoTables:
         key = (entry.pattern, qb, cb)
@@ -282,8 +284,10 @@ class ContinuousBatchingScheduler:
         if hit is None:
             hit = pad_tables(entry.tokendfa, qb, cb)
             self._padded[key] = hit
-            if len(self._padded) > 8 * self.n_slots + 32:
-                self._padded.pop(next(iter(self._padded)))
+            while len(self._padded) > self._padded_cap:
+                self._padded.popitem(last=False)   # least recently used
+        else:
+            self._padded.move_to_end(key)          # refresh recency on hit
         return hit
 
     def carry_batch(self) -> np.ndarray:

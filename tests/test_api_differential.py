@@ -16,6 +16,9 @@ from repro.configs.llada_repro import e2e_config
 from repro.constraints import (
     PLACEHOLDER_PATTERN,
     ConstraintCache,
+    block_budget,
+    closure_pad,
+    dist_to_accept,
     qc_bucket,
     schema_for_fields,
 )
@@ -61,17 +64,19 @@ def _mixed_requests():
 
 
 def test_batch_old_vs_new_token_identical(tok, setup):
-    """Engine.generate == hand-driven pre-refactor DiffusionEngine batches:
-    manual token-DFA builds, manual (Q, C) bucketing/stacking, manual prompt
-    padding, one manual batch per block budget (a pre-refactor caller
-    honoring per-request budgets ran one batch per gen_len) — the facade
-    must reproduce it token for token."""
+    """Engine.generate == hand-driven DiffusionEngine batches: manual
+    token-DFA builds, manual (Q, C) bucketing/stacking, manual prompt
+    padding, one manual batch per block budget, manual budget-aware
+    per-block live masks (the forcing the facade applies for DINGO rows)
+    and manual serve-parity closure/validity — the facade must reproduce
+    it token for token."""
     cfg, params, scfg = setup
     d = scfg.block_size
+    eos = tok.eos_token_id
     reqs = _mixed_requests()
     assert len({r.constraint.source for r in reqs}) == 4
 
-    # ---- old path: everything by hand, exactly as pre-refactor callers ----
+    # ---- old path: everything by hand ------------------------------------
     tds = []
     for r in reqs:
         pat = r.constraint.pattern if r.constraint.constrained else PLACEHOLDER_PATTERN
@@ -80,12 +85,14 @@ def test_batch_old_vs_new_token_identical(tok, setup):
             mask_token_id=tok.mask_token_id, eos_token_id=tok.eos_token_id,
             special_token_ids=tok.special_token_ids,
         ))
+    dists = [dist_to_accept(td) for td in tds]
     groups = {}
     for i, r in enumerate(reqs):
         groups.setdefault(max(1, -(-r.max_new_tokens // d)), []).append(i)
     assert len(groups) >= 2          # heterogeneous budgets actually exercised
     old_tokens = [None] * len(reqs)
     old_valid = [None] * len(reqs)
+    old_matched = [None] * len(reqs)
     for n_blocks in sorted(groups):
         idxs = groups[n_blocks]
         qb = qc_bucket(max(tds[i].num_states for i in idxs))
@@ -93,6 +100,18 @@ def test_batch_old_vs_new_token_identical(tok, setup):
         tables = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs),
             *[pad_tables(tds[i], qb, cb) for i in idxs])
+        # budget-aware end-state forcing, by hand: constrained rows may only
+        # end a block in a state the remaining blocks can still close
+        live_masks = []
+        for blk in range(n_blocks):
+            mask = np.zeros((len(idxs), qb), bool)
+            for j, i in enumerate(idxs):
+                if reqs[i].constraint.constrained:
+                    mask[j, : tds[i].num_states] = (
+                        dists[i] <= block_budget(n_blocks, blk, d))
+                else:
+                    mask[j, : tds[i].num_states] = tds[i].live
+            live_masks.append(mask)
         ids = [tok.encode(reqs[i].prompt) for i in idxs]
         m = max(len(i) for i in ids)
         prompts = np.full((len(idxs), m), tok.eos_token_id, np.int32)
@@ -100,10 +119,14 @@ def test_batch_old_vs_new_token_identical(tok, setup):
             row[m - len(i):] = i
         old_scfg = dataclasses.replace(scfg, gen_len=n_blocks * d)
         res = DiffusionEngine(params, cfg, old_scfg, tok.mask_token_id,
-                              tables).generate(prompts, seed=0)
+                              tables).generate(prompts, seed=0,
+                                               live_masks=live_masks)
         for j, i in enumerate(idxs):
-            old_tokens[i] = [int(t) for t in res.tokens[j]]
-            old_valid[i] = bool(res.valid[j])
+            toks = [int(t) for t in res.tokens[j]]
+            if reqs[i].constraint.constrained:
+                toks, old_matched[i] = closure_pad(tds[i], toks, d, eos)
+            old_tokens[i] = toks
+            old_valid[i] = bool(res.valid[j]) and old_matched[i] is not False
 
     # ---- new path: one facade call, shared constraint cache --------------
     eng = Engine(params, cfg, scfg, tok)
@@ -115,8 +138,7 @@ def test_batch_old_vs_new_token_identical(tok, setup):
         assert c.valid == old_valid[i]
         assert c.blocks == max(1, -(-reqs[i].max_new_tokens // d))
         if reqs[i].constraint.constrained:
-            td = tds[i]
-            assert c.matched == bool(td.accepting[td.run(c.tokens)])
+            assert c.matched == old_matched[i]
         else:
             assert c.matched is None
     # batch generation now amortizes through the cache: 4 distinct patterns

@@ -39,6 +39,11 @@ CONSTRAINTS_ALL = [
     "dist_to_accept",
     "qc_bucket",
     "UNREACHABLE",
+    # budget-aware end-state forcing (PR 5) — shared by generate() + serve()
+    "block_budget",
+    "budget_live",
+    "budget_live_rows",
+    "closure_pad",
 ]
 
 

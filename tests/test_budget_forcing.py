@@ -1,0 +1,334 @@
+"""Budget-aware end-state forcing on the offline batch path (PR 5
+acceptance): under arbitrarily tight token budgets every DINGO-constrained
+``Engine.generate`` completion must provably fullmatch its regex, tokens and
+validity must be IDENTICAL between ``generate()`` and ``serve()`` for
+uniform-budget requests, and swapping the per-block ``(B, Qb)`` live masks
+through the jitted decode must never retrace (compile-counter).
+
+Also pins the satellites: the shared ``repro.constraints.budget`` helper's
+contract (forced live sets only ever contain states whose distance-to-accept
+fits the remaining budget, degenerating to exactly the accepting states at
+budget 0 — property-tested), the infeasible-request warning/flag, greedy's
+honest ``valid=False`` on truncation, and the scheduler's padded-table LRU.
+"""
+import dataclasses
+import random
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Constraint, Engine, Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import (
+    ConstraintCache,
+    block_budget,
+    budget_live,
+    budget_live_rows,
+    qc_bucket,
+    schema_for_fields,
+)
+from repro.core import stack_tables
+from repro.data import synthetic
+from repro.diffusion import DiffusionEngine
+from repro.models import init_model
+from repro.serving import ContinuousBatchingScheduler
+from repro.tokenizer import default_tokenizer
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+# 16-char prompts encode to exactly 16 tokens (no merges over a repeated
+# letter), matching the serving engine's prompt bucket (prompt_pad=16) — a
+# precondition for batch-vs-serve token identity: both modes then left-pad
+# every prompt identically, so each row's model inputs are the same.
+_PROMPTS = ["x" * 16, "q" * 16, "j" * 16, "k" * 16,
+            "z" * 16, "w" * 16, "v" * 16, "u" * 16]
+
+
+def _mixed_requests(budget_fn):
+    """Mixed 8-request stream over 4 constraint kinds; per-kind budgets from
+    ``budget_fn(min_tokens)`` (min_tokens=None for unconstrained rows)."""
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    tok = default_tokenizer()
+    cache = ConstraintCache()
+    specs = [
+        Constraint.json_schema(js0),
+        Constraint.regex(r"(ab|ba)+"),
+        Constraint.choice(["yes", "no", "maybe"]),
+        Constraint.none(),
+        Constraint.json_schema(js0),
+        Constraint.regex(r"(ab|ba)+"),
+        Constraint.choice(["yes", "no", "maybe"]),
+        Constraint.none(),
+    ]
+    reqs = []
+    for i, c in enumerate(specs):
+        mt = (cache.get_or_compile(c.pattern, tok)[0].min_tokens
+              if c.constrained else None)
+        reqs.append(Request(_PROMPTS[i], c, max_new_tokens=budget_fn(mt)))
+    return reqs
+
+
+def _trim(tokens, eos):
+    out = list(tokens)
+    while out and out[-1] == eos:
+        out.pop()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the paper's soundness claim, offline: forced closure under tight budgets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("budget_fn,label", [
+    (lambda mt: mt if mt is not None else 8, "budget==shortest-accept"),
+    (lambda mt: mt + 1 if mt is not None else 8, "budget==shortest-accept+1"),
+    (lambda mt: 32, "generous"),
+])
+def test_generate_tight_budget_all_fullmatch(tok, setup, budget_fn, label):
+    """Every feasible DINGO-constrained completion fullmatches its regex even
+    when the budget is exactly the automaton's shortest accepting path."""
+    cfg, params, scfg = setup
+    reqs = _mixed_requests(budget_fn)
+    eng = Engine(params, cfg, scfg, tok)
+    done = eng.generate(reqs, seed=0)
+    for r, c in zip(reqs, done):
+        if r.constraint.constrained:
+            assert c.matched, (label, r.constraint.pattern, c.text)
+            assert c.valid, (label, r.constraint.pattern)
+        else:
+            assert c.matched is None
+
+
+@pytest.mark.parametrize("budget_fn,label", [
+    (lambda mt: mt if mt is not None else 8, "budget==shortest-accept"),
+    (lambda mt: mt + 1 if mt is not None else 8, "budget==shortest-accept+1"),
+    (lambda mt: 32, "generous"),
+])
+def test_generate_vs_serve_identical(tok, setup, budget_fn, label):
+    """Token identity AND validity identity between the offline batch and the
+    serving grid on the mixed 8-request stream. EOS-trimmed comparison: serve
+    retires a closed slot early instead of decoding its padding blocks, so
+    its raw token list is a prefix of the batch row's (both pure EOS past
+    the closure — ``closure_pad`` pins the batch side to the same rule)."""
+    cfg, params, scfg = setup
+    eos = tok.eos_token_id
+    reqs = _mixed_requests(budget_fn)
+    eng = Engine(params, cfg, scfg, tok, n_slots=len(reqs),
+                 max_prompt_len=16, clock="block", seed=0)
+    gen = {r.request_id: c for r, c in
+           zip(reqs, eng.generate([dataclasses.replace(r) for r in reqs],
+                                  seed=0))}
+    srv = {c.request_id: c for c in eng.serve(reqs)}
+    assert set(gen) == set(srv)
+    for rid in gen:
+        a, b = gen[rid], srv[rid]
+        assert _trim(a.tokens, eos) == _trim(b.tokens, eos), (label, rid)
+        assert a.text == b.text, (label, rid)
+        assert (a.valid, a.matched) == (b.valid, b.matched), (label, rid)
+
+
+def test_live_swaps_never_retrace(tok, setup):
+    """The jitted decode step compiles ONCE per batch shape however many
+    per-block (B, Qb) live masks and per-row carries swap through it."""
+    cfg, params, scfg = setup
+    cache = ConstraintCache()
+    entries = [cache.get_or_compile(p, tok)[0]
+               for p in (r"(ab|ba)+", r"(yes|no|maybe)")]
+    tables = stack_tables([e.tokendfa for e in entries])
+    qb = tables.cnext.shape[1]
+    n_blocks = scfg.gen_len // scfg.block_size
+    assert n_blocks >= 2
+    masks = [
+        budget_live_rows(entries,
+                         [block_budget(n_blocks, blk, scfg.block_size)] * 2,
+                         qb)
+        for blk in range(n_blocks)
+    ]
+    eng = DiffusionEngine(params, cfg, scfg, tok.mask_token_id, tables)
+    prompts = np.full((2, 16), tok.eos_token_id, np.int32)
+    eng.generate(prompts, seed=0, live_masks=masks)
+    # 4 blocks x 4 micro-steps drove 16 step calls through ONE trace
+    assert eng.decode_trace_count == 1
+    # a second generate with different mask VALUES (same shapes) still
+    # reuses the compiled step — swaps are data, never a retrace
+    eng.generate(prompts, seed=1, live_masks=list(reversed(masks)))
+    assert eng.decode_trace_count == 1
+
+    # facade-level: every uniform-budget group ran its blocks through a
+    # single trace of its engine's step
+    eng2 = Engine(params, cfg, scfg, tok, constraint_cache=cache)
+    eng2.generate(_mixed_requests(lambda mt: 32), seed=0)
+    assert eng2.last_decode_traces == [1]
+
+
+def test_live_masks_wrong_length_raises(tok, setup):
+    cfg, params, scfg = setup
+    cache = ConstraintCache()
+    entry = cache.get_or_compile(r"(ab|ba)+", tok)[0]
+    tables = stack_tables([entry.tokendfa])
+    eng = DiffusionEngine(params, cfg, scfg, tok.mask_token_id, tables)
+    prompts = np.full((1, 8), tok.eos_token_id, np.int32)
+    with pytest.raises(ValueError, match="one mask per block"):
+        eng.generate(prompts, live_masks=[np.ones((1, 8), bool)])
+
+
+# ---------------------------------------------------------------------------
+# infeasible budgets: warn + flag; greedy reports truncation honestly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("decode", ["dingo", "greedy"])
+def test_infeasible_budget_warns_and_reports_invalid(tok, setup, decode):
+    """A constrained request whose budget is below the automaton's shortest
+    accepting path is flagged with a warning (the batch analogue of the
+    scheduler's rejection) and its completion must report valid=False —
+    under greedy too, which cannot force closure and previously passed a
+    live-but-unclosed truncation off as valid."""
+    cfg, params, scfg = setup
+    scfg = dataclasses.replace(scfg, decode=decode)
+    eng = Engine(params, cfg, scfg, tok)
+    req = Request("x" * 16, Constraint.regex(r"a{20}"), max_new_tokens=8)
+    with pytest.warns(UserWarning, match="budget too small"):
+        done = eng.generate([req], seed=0)
+    (c,) = done
+    assert not c.valid
+    assert c.matched is False
+    assert "budget too small" in c.metadata["infeasible"]
+
+
+def test_feasible_requests_do_not_warn(tok, setup):
+    cfg, params, scfg = setup
+    eng = Engine(params, cfg, scfg, tok)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        done = eng.generate(_mixed_requests(lambda mt: 32), seed=0)
+    assert all("infeasible" not in c.metadata for c in done)
+
+
+def test_serve_greedy_truncation_not_silently_valid(tok, setup):
+    """Serve-side defense in depth: a greedy slot that ends live but
+    unmatched reports valid=False (valid now implies matched != False)."""
+    cfg, params, scfg = setup
+    scfg = dataclasses.replace(scfg, decode="greedy")
+    eng = Engine(params, cfg, scfg, tok, n_slots=2, max_prompt_len=16)
+    done = list(eng.serve([Request("x" * 16, Constraint.regex(r"(ab|ba)+"),
+                                   max_new_tokens=8)]))
+    for c in done:
+        assert c.valid <= (c.matched is not False)   # valid -> matched
+
+
+# ---------------------------------------------------------------------------
+# property: the shared budget_live contract (used by BOTH surfaces)
+# ---------------------------------------------------------------------------
+_PATTERNS = [r"(ab|ba)+", r"a+b?", r"(a|b)(a|b)(a|b)", r"ab(ab)*",
+             r"(yes|no|maybe)", r"a{3}b{2}"]
+
+
+def _check_budget_live(pattern: str, budget: int) -> None:
+    tok = default_tokenizer()
+    cache = _check_budget_live._cache
+    entry, _ = cache.get_or_compile(pattern, tok)
+    td = entry.tokendfa
+    mask = budget_live(entry, budget)
+    # only states whose distance-to-accept fits the remaining budget
+    assert mask.shape == (td.num_states,)
+    assert not (mask & ~(entry.dist <= budget)).any()
+    assert (mask == (entry.dist <= budget)).all()
+    # forced sets are always a subset of the plain live set
+    assert not (mask & ~np.asarray(td.live, bool)).any()
+    # at budget 0 the set degenerates to exactly the accepting states
+    assert (budget_live(entry, 0) == np.asarray(td.accepting, bool)).all()
+    # None = no forcing: the plain live set
+    assert (budget_live(entry, None) == np.asarray(td.live, bool)).all()
+    # padded stacking: padding columns stay dead, rows match budget_live
+    qb = qc_bucket(td.num_states)
+    rows = budget_live_rows([entry, entry], [budget, None], qb)
+    assert rows.shape == (2, qb)
+    assert not rows[:, td.num_states:].any()
+    assert (rows[0, : td.num_states] == mask).all()
+    assert (rows[1, : td.num_states] == np.asarray(td.live, bool)).all()
+
+
+_check_budget_live._cache = ConstraintCache()
+
+
+def test_budget_live_property_deterministic():
+    rng = random.Random(5)
+    for _ in range(25):
+        _check_budget_live(rng.choice(_PATTERNS), rng.randrange(0, 40))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from(_PATTERNS), st.integers(min_value=0, max_value=64))
+    def test_budget_live_property_hypothesis(pattern, budget):
+        _check_budget_live(pattern, budget)
+
+
+def test_scheduler_live_rows_uses_shared_helper(tok):
+    """The serving scheduler's per-slot masks are exactly the shared
+    budget_live_rows over its slots' entries and block budgets."""
+    cache = ConstraintCache()
+    sched = ContinuousBatchingScheduler(2, cache, tok, block_size=8,
+                                        max_blocks=4)
+    sched.submit(Request("p", Constraint.regex(r"(ab|ba)+"),
+                         max_new_tokens=16))
+    sched.admit()
+    qb, _ = sched.bucket()
+    got = sched.live_rows(qb)
+    want = budget_live_rows(
+        [s.entry for s in sched.slots],
+        [sched._block_budget(s) for s in sched.slots], qb)
+    assert (got == want).all()
+    # occupied DINGO slot is budget-forced; free placeholder slot is not
+    s0 = sched.slots[0]
+    assert sched._block_budget(s0) == 8          # 2 blocks total, 1 remains
+    assert sched._block_budget(sched.slots[1]) is None
+
+
+# ---------------------------------------------------------------------------
+# scheduler padded-table memo is LRU, not FIFO
+# ---------------------------------------------------------------------------
+def test_padded_tables_lru_eviction(tok):
+    cache = ConstraintCache()
+    sched = ContinuousBatchingScheduler(1, cache, tok, block_size=8)
+    sched._padded.clear()
+    sched._padded_cap = 2
+    entries = [cache.get_or_compile(p, tok)[0]
+               for p in (r"a+", r"b+", r"(ab)+")]
+    qb = qc_bucket(max(e.tokendfa.num_states for e in entries))
+    cb = qc_bucket(max(e.tokendfa.num_classes for e in entries))
+
+    key = lambda e: (e.pattern, qb, cb)
+    sched._padded_tables(entries[0], qb, cb)
+    sched._padded_tables(entries[1], qb, cb)
+    # touch the OLDEST-inserted entry, then insert a third: the untouched
+    # middle entry must be the one evicted (FIFO would evict entries[0])
+    sched._padded_tables(entries[0], qb, cb)
+    sched._padded_tables(entries[2], qb, cb)
+    assert key(entries[0]) in sched._padded
+    assert key(entries[1]) not in sched._padded
+    assert key(entries[2]) in sched._padded
+    assert len(sched._padded) == 2
+    # hits return the memoized object (no re-pad)
+    assert sched._padded_tables(entries[0], qb, cb) is sched._padded[key(entries[0])]

@@ -79,6 +79,43 @@ def test_additive_baseline_keys_skip_but_dropped_new_keys_fail():
     assert any("missing from new run" in f for f in failures)
 
 
+def test_batch_forced_gates():
+    """PR 5 keys: the no-retrace/soundness booleans and the normalized
+    forced req/s gate; the noisy forced/unforced wall ratio only reports."""
+    base = _doc()
+    base["batch_forced"] = {
+        "retrace_free": True,
+        "forced_all_matched": True,
+        "forced_over_unforced_req_s_x": 1.0,
+        "forced": {"req_s": 1.0},
+    }
+    new = json.loads(json.dumps(base))
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert failures == []
+    new["batch_forced"]["retrace_free"] = False          # live swap retraced
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("retrace_free" in f for f in failures)
+    new["batch_forced"]["retrace_free"] = True
+    new["batch_forced"]["forced_all_matched"] = False    # soundness broke
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("forced_all_matched" in f for f in failures)
+    new["batch_forced"]["forced_all_matched"] = True
+    # wall-clock forced/unforced ratio is report-only (runner noise) ...
+    new["batch_forced"]["forced_over_unforced_req_s_x"] = 0.5
+    failures, rows = compare(base, new, max_regression=0.2)
+    assert not any("forced_over_unforced" in f for f in failures)
+    assert any(r[0].endswith("forced_over_unforced_req_s_x")
+               and "report-only" in r[-1] for r in rows)
+    # ... but a normalized forced-path collapse DOES gate
+    new["batch_forced"]["forced_over_unforced_req_s_x"] = 1.0
+    new["batch_forced"]["forced"]["req_s"] = 0.5
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("batch_forced.forced.req_s" in f for f in failures)
+    # an OLD baseline without the keys skips them additively
+    failures, _ = compare(_doc(), new, max_regression=0.2)
+    assert failures == []
+
+
 def test_main_exit_codes(tmp_path):
     b, n = tmp_path / "base.json", tmp_path / "new.json"
     b.write_text(json.dumps(_doc()))
