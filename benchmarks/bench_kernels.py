@@ -1,11 +1,61 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference for the
 DINGO hot loops and the remasking/attention kernels. On CPU the interpret-mode
-numbers validate the code path; TPU timings come from the same wrappers."""
+numbers validate the code path; TPU timings come from the same wrappers.
+
+Each jnp-reference kernel is also pushed through the roofline analyzer
+(``repro.analysis.roofline``): the jitted fn is AOT-compiled, its
+``cost_analysis()`` FLOPs/bytes feed ``analyze()``, and the measured wall
+time yields achieved FLOP/s and bytes/s against the v5e peaks — the
+achieved-vs-peak summary lands in ``experiments/BENCH_kernels.json``
+alongside the CSV rows. (The Pallas wrappers run ``interpret=True`` on CPU,
+whose wall time says nothing about device rooflines, so the analyzer reads
+the reference lowering — same math, same cost model.)
+"""
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 
 from .common import emit, timeit
+
+BENCH_JSON = "experiments/BENCH_kernels.json"
+
+
+def _roofline_entry(fn, args, wall_us: float):
+    """AOT-compile ``fn(*args)``, run the roofline analyzer over its cost
+    analysis + optimized HLO, and fold in the measured wall time as achieved
+    FLOP/s and bytes/s. Never fails the bench: kernels whose lowering or
+    cost analysis is unavailable on this backend report ``ok=False``."""
+    import jax
+
+    from repro.analysis.roofline import analyze
+
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax wraps the dict in a list
+            cost = cost[0] if cost else {}
+        roof = analyze(cost, compiled.as_text(), chips=1)
+        wall_s = wall_us * 1e-6
+        return dict(
+            ok=True,
+            wall_us=wall_us,
+            flops=roof.flops,
+            bytes_accessed=roof.bytes_accessed,
+            achieved_flops_s=roof.flops / wall_s if wall_s > 0 else 0.0,
+            achieved_bytes_s=roof.bytes_accessed / wall_s if wall_s > 0 else 0.0,
+            # seconds-at-peak terms and the binding resource on the v5e model
+            compute_s=roof.compute_s,
+            memory_s=roof.memory_s,
+            bottleneck=roof.bottleneck,
+            arithmetic_intensity=(roof.flops / roof.bytes_accessed
+                                  if roof.bytes_accessed else None),
+        )
+    except Exception as e:  # pragma: no cover - backend-dependent
+        return dict(ok=False, wall_us=wall_us, error=f"{type(e).__name__}: {e}")
 
 
 def run(quick: bool = True):
@@ -14,31 +64,54 @@ def run(quick: bool = True):
     from repro.kernels import ops, ref
 
     rng = np.random.default_rng(0)
+    roofline = {}
 
     v, c = (32768, 512) if not quick else (8192, 256)
     logits = jnp.asarray(rng.normal(size=(v,)).astype(np.float32))
     cid = jnp.asarray(rng.integers(0, c, size=v).astype(np.int32))
-    emit("class_max_jnp", timeit(lambda: ref.class_max_ref(logits, cid, c)), f"V={v};C={c}")
+    us = timeit(lambda: ref.class_max_ref(logits, cid, c))
+    emit("class_max_jnp", us, f"V={v};C={c}")
     emit("class_max_pallas_interp", timeit(lambda: ops.class_max(logits, cid, c)), f"V={v};C={c}")
+    roofline["class_max"] = dict(
+        _roofline_entry(lambda l, i: ref.class_max_ref(l, i, c), (logits, cid), us),
+        shape=f"V={v};C={c}")
 
     q = 256
     w = jnp.asarray(rng.normal(size=(q,)).astype(np.float32))
     e = jnp.asarray(rng.normal(size=(q, q)).astype(np.float32))
     tk = jnp.asarray(rng.integers(0, v, size=(q, q)).astype(np.int32))
-    emit("maxplus_jnp", timeit(lambda: ref.maxplus_dp_ref(w, e, tk)), f"Q={q}")
+    us = timeit(lambda: ref.maxplus_dp_ref(w, e, tk))
+    emit("maxplus_jnp", us, f"Q={q}")
     emit("maxplus_pallas_interp", timeit(lambda: ops.maxplus_dp(w, e, tk)), f"Q={q}")
+    roofline["maxplus_dp"] = dict(
+        _roofline_entry(ref.maxplus_dp_ref, (w, e, tk), us), shape=f"Q={q}")
 
     d = 32
     x = jnp.asarray(rng.normal(size=(d, v)).astype(np.float32))
-    emit("softmax_stats_jnp", timeit(lambda: ref.softmax_stats_ref(x)), f"d={d};V={v}")
+    us = timeit(lambda: ref.softmax_stats_ref(x))
+    emit("softmax_stats_jnp", us, f"d={d};V={v}")
     emit("softmax_stats_pallas_interp", timeit(lambda: ops.softmax_stats(x)), f"d={d};V={v}")
+    roofline["softmax_stats"] = dict(
+        _roofline_entry(ref.softmax_stats_ref, (x,), us), shape=f"d={d};V={v}")
 
     b, h, kvh, dh, s = 2, 8, 2, 64, 2048 if not quick else 512
     qq = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
     kk = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
     vv = jnp.asarray(rng.normal(size=(b, s, kvh, dh)).astype(np.float32))
-    emit("decode_attn_jnp", timeit(lambda: ref.decode_attention_ref(qq, kk, vv)), f"S={s}")
+    us = timeit(lambda: ref.decode_attention_ref(qq, kk, vv))
+    emit("decode_attn_jnp", us, f"S={s}")
     emit("decode_attn_pallas_interp", timeit(lambda: ops.decode_attention(qq, kk, vv)), f"S={s}")
+    roofline["decode_attention"] = dict(
+        _roofline_entry(ref.decode_attention_ref, (qq, kk, vv), us), shape=f"S={s}")
+
+    os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "bench": "kernels",
+            "created_unix": time.time(),
+            "config": dict(quick=quick),
+            "roofline": roofline,
+        }, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ from repro.configs.llada_repro import e2e_config
 from repro.constraints import schema_for_fields
 from repro.data import synthetic
 from repro.models import init_model
+from repro.obs import Observer
 from repro.serving import ServingEngine
 from repro.tokenizer import default_tokenizer
 
@@ -39,6 +40,10 @@ from .common import emit
 
 BENCH_JSON = "experiments/BENCH_serving.json"
 BENCH_PAGED_JSON = "experiments/BENCH_paged.json"
+# CI artifacts (gitignored; the bench-smoke job uploads them): the merged
+# Engine.stats() snapshot and a Perfetto-loadable lifecycle trace
+METRICS_JSON = "experiments/METRICS_serving.json"
+TRACE_JSON = "experiments/TRACE_serving.json"
 
 
 def _stream(n: int, gen_len: int):
@@ -68,28 +73,38 @@ def _stream(n: int, gen_len: int):
     return reqs
 
 
-def _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots):
+def _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots,
+                trace=False):
+    """One closed-loop serve of the mixed stream under a live Observer. The
+    req/s and p50/p95 accounting reads the observer's per-request records —
+    the same numbers ``Engine.stats()`` / ``--metrics-dump`` expose — so the
+    bench and the serving telemetry can never drift apart. Returns
+    (metrics_dict, engine, observer); only the dict goes into the JSON."""
+    obs = Observer(trace=trace)
     eng = ServingEngine(params, cfg, scfg, tok, n_slots=n_slots,
-                        max_prompt_len=32, constraint_cache=cache)
+                        max_prompt_len=32, constraint_cache=cache,
+                        observer=obs)
     t_compile0 = cache.stats.compile_time_s
     reqs = _stream(n_requests, scfg.gen_len)
     t0 = time.perf_counter()
     done = list(eng.serve(reqs))
     wall = time.perf_counter() - t0
-    lat = [c.latency_s for c in done]
-    toks = sum(len(c.tokens) for c in done)
-    ok = [c for c in done if c.matched]
-    return dict(
+    recs = obs.request_records
+    lat = [r["latency_s"] for r in recs]
+    toks = sum(r["tokens"] for r in recs)
+    metrics = dict(
         wall_s=wall,
-        req_s=len(done) / wall,
+        req_s=len(recs) / wall,
         tok_s=toks / wall,
         p50_s=float(np.percentile(lat, 50)),
         p95_s=float(np.percentile(lat, 95)),
         n=len(done),
-        n_matched=len(ok),
+        n_matched=sum(1 for c in done if c.matched),
         blocks=eng.blocks_run,
+        decode_steps=eng.decode_steps,
         compile_s=cache.stats.compile_time_s - t_compile0,
     )
+    return metrics, eng, obs
 
 
 def _arrival_engine(params, cfg, scfg, tok, cache, n_slots, clock):
@@ -341,8 +356,19 @@ def run(quick: bool = True) -> None:
                        decode="dingo")
 
     cache = ConstraintCache()
-    cold = _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots)
-    warm = _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots)
+    cold, _, _ = _serve_once(params, cfg, scfg, tok, cache, n_requests, n_slots)
+    warm, warm_eng, _ = _serve_once(params, cfg, scfg, tok, cache,
+                                    n_requests, n_slots)
+
+    # trace artifact + metrics snapshot for CI upload: a SEPARATE small
+    # traced run (trace mode buffers every span) so the perf-gated cold/warm
+    # arms above stay representative of plain metrics-mode serving
+    _, traced_eng, traced_obs = _serve_once(
+        params, cfg, scfg, tok, cache, min(n_requests, 8), n_slots, trace=True)
+    os.makedirs(os.path.dirname(TRACE_JSON), exist_ok=True)
+    traced_obs.trace.export(TRACE_JSON)
+    with open(METRICS_JSON, "w") as f:
+        json.dump(traced_eng.stats(), f, indent=1, sort_keys=True)
 
     # open-loop arrivals: lockstep grid vs per-slot block clocks on the same
     # mixed-length stream and arrival schedule (warm cache, one warmed engine
@@ -461,4 +487,15 @@ def run(quick: bool = True) -> None:
             # identical arrival schedule in fewer grid steps
             "slot_clock_steps_gain_x": (arr_lock["decode_steps"]
                                         / max(1, arr_slot["decode_steps"])),
+            # additive (PR 6): observer-sourced deterministic metrics, BAND-
+            # gated in ci_compare (|new-base| <= tol*base, two-sided — lower
+            # decode_steps is an improvement a floor gate would punish).
+            # decode_steps_total is the warm closed-loop serve's micro-step
+            # makespan; cache_hit_rate is the shared constraint cache across
+            # every serving arm of this run. Both depend only on the stream
+            # and scheduler, never on runner speed.
+            "obs": {
+                "decode_steps_total": warm_eng.decode_steps,
+                "cache_hit_rate": cache.stats.hit_rate,
+            },
         }, f, indent=1)

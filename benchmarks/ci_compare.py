@@ -59,6 +59,17 @@ THROUGHPUT_KEYS = (
     "arrivals_slot_clock.req_s",
     "batch_forced.forced.req_s",
 )
+BAND_KEYS = (
+    # deterministic observer-sourced metrics (additive: skipped when the
+    # baseline predates the obs section), gated TWO-SIDED:
+    # |new - base| <= tol * base. A floor gate is wrong for these —
+    # decode_steps_total going DOWN is an improvement (earlier retirement),
+    # but silent inflation (a scheduling bug burning extra micro-steps) is
+    # exactly the regression the gate exists to catch, and both directions
+    # of drift in cache_hit_rate mean the cache key or stream changed.
+    "obs.decode_steps_total",
+    "obs.cache_hit_rate",
+)
 DEFAULT_NORMALIZE = "batch_warm.req_s"
 
 
@@ -79,10 +90,12 @@ def compare(
     max_regression: float,
     ratio_keys=RATIO_KEYS,
     throughput_keys=THROUGHPUT_KEYS,
+    band_keys=BAND_KEYS,
     normalize: str | None = DEFAULT_NORMALIZE,
 ):
-    """Returns (failures, report_rows). A metric fails when
-    ``new < (1 - max_regression) * baseline`` after normalization."""
+    """Returns (failures, report_rows). A floor metric fails when
+    ``new < (1 - max_regression) * baseline`` after normalization; a band
+    metric fails when ``|new - baseline| > max_regression * |baseline|``."""
     failures, rows = [], []
 
     def check(key: str, base_val, new_val, kind: str):
@@ -102,8 +115,30 @@ def compare(
                 f"(baseline {base_val:.4g}, tolerance {max_regression:.0%})"
             )
 
+    def check_band(key: str, base_val, new_val):
+        if base_val is None:
+            rows.append((key, "band", None, new_val, "skipped (no baseline)"))
+            return
+        if new_val is None:
+            failures.append(f"{key}: present in baseline but missing from new run")
+            rows.append((key, "band", base_val, None, "MISSING"))
+            return
+        # tol scales with the baseline; a zero baseline means "stay zero"
+        # within the absolute tolerance of the fraction itself
+        tol = max_regression * (abs(base_val) if base_val else 1.0)
+        ok = abs(new_val - base_val) <= tol
+        rows.append((key, "band", base_val, new_val,
+                     "ok" if ok else f"DRIFTED beyond ±{tol:.4g}"))
+        if not ok:
+            failures.append(
+                f"{key}: {new_val:.4g} outside {base_val:.4g} ± {tol:.4g} "
+                f"(tolerance {max_regression:.0%}, two-sided)"
+            )
+
     for key in ratio_keys:
         check(key, get_path(baseline, key), get_path(new, key), "ratio")
+    for key in band_keys:
+        check_band(key, get_path(baseline, key), get_path(new, key))
     for key in REPORT_KEYS:
         b, n = get_path(baseline, key), get_path(new, key)
         bs = "-" if b is None else f"{b:.4g}"

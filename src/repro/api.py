@@ -126,12 +126,20 @@ class Engine:
         clock: str = "slot",
         force_closure: bool = True,
         seed: int = 0,
+        observer=None,
     ):
+        from repro.obs import NULL_OBSERVER
+
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
         self.tok = tokenizer
         self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        # one shared observability handle across both modes (metrics +
+        # optional lifecycle tracing); the no-op default costs nothing
+        self.obs = observer if observer is not None else NULL_OBSERVER
+        if self.obs.enabled:
+            self.cache.observer = self.obs
         # kill-switch for batch-mode budget-aware end-state forcing (serve
         # mode always forces through the scheduler); off restores the
         # classic DiffusionEngine live-set semantics
@@ -143,7 +151,7 @@ class Engine:
         self._serving_kwargs = dict(
             n_slots=n_slots, max_prompt_len=max_prompt_len,
             kv_layout=kv_layout, page_size=page_size, n_pages=n_pages,
-            clock=clock,
+            clock=clock, observer=observer,
         )
         self._serving = None
 
@@ -258,7 +266,8 @@ class Engine:
 
         scfg = dataclasses.replace(self.scfg, gen_len=n_blocks * d)
         eng = DiffusionEngine(self.params, self.cfg, scfg,
-                              self.tok.mask_token_id, tables)
+                              self.tok.mask_token_id, tables,
+                              observer=self.obs)
         res = eng.generate(prompts, seed=seed, live_masks=live_masks)
         self.last_decode_traces.append(eng.decode_trace_count)
         done = time.perf_counter()
@@ -295,8 +304,14 @@ class Engine:
                 latency_s=done - (req.submit_time_s or done),
                 queue_s=0.0,
                 cache_hit=compiled[i][1],
-                metadata=(dict(req.metadata, infeasible=infeasible[i])
-                          if infeasible[i] else dict(req.metadata)),
+                metadata=dict(
+                    req.metadata,
+                    # per-request phase timing (batch mode: no queue; prefill/
+                    # decode are the group's shared phase split)
+                    queue_s=0.0, prefill_s=res.prefill_s, decode_s=res.decode_s,
+                    blocks=n_blocks, decode_steps=res.steps,
+                    **({"infeasible": infeasible[i]} if infeasible[i] else {}),
+                ),
             ))
         return out
 
@@ -336,3 +351,15 @@ class Engine:
         """Hit/miss/eviction/compile-time stats of the shared constraint
         cache, across both generation modes."""
         return self.cache.stats
+
+    def stats(self) -> Dict[str, Any]:
+        """Merged observability snapshot (plain JSON-able dict): constraint
+        cache + the observer's metric registry, plus engine/scheduler/pool
+        sections once the serving engine exists. Never *builds* the serving
+        engine — asking for stats must not allocate a slot grid."""
+        if self._serving is not None:
+            return self._serving.stats()
+        return {
+            "cache": self.cache.stats.as_dict(),
+            "metrics": self.obs.snapshot(),
+        }

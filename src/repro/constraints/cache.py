@@ -30,6 +30,7 @@ from repro.core import (
     compile_pattern,
     tables_from_tokendfa,
 )
+from repro.obs import NULL_OBSERVER
 
 
 # dist_to_accept() sentinel for states that cannot reach acceptance
@@ -116,12 +117,16 @@ class CacheStats:
 class ConstraintCache:
     """LRU cache of compiled constraints, keyed by (pattern, vocab fp)."""
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, observer=NULL_OBSERVER):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self._entries: "OrderedDict[Tuple[str, str], CompiledConstraint]" = OrderedDict()
         self.stats = CacheStats()
+        # the engines attach their shared Observer here (mirrors hit/miss/
+        # eviction counters + a compile-time histogram into the registry;
+        # CacheStats stays the always-on source of truth)
+        self.observer = observer
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -140,8 +145,10 @@ class ConstraintCache:
         if entry is not None:
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            self.observer.count("constraint_cache_hits_total")
         else:
             self.stats.misses += 1
+            self.observer.count("constraint_cache_misses_total")
         return entry
 
     def get_or_compile(self, pattern: str, tokenizer) -> Tuple[CompiledConstraint, bool]:
@@ -151,6 +158,7 @@ class ConstraintCache:
         if entry is not None:
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            self.observer.count("constraint_cache_hits_total")
             return entry, True
         t0 = time.perf_counter()
         td = build_token_dfa(
@@ -166,8 +174,13 @@ class ConstraintCache:
         entry.compile_time_s = time.perf_counter() - t0
         self.stats.misses += 1
         self.stats.compile_time_s += entry.compile_time_s
+        obs = self.observer
+        if obs.enabled:
+            obs.count("constraint_cache_misses_total")
+            obs.observe("constraint_compile_s", entry.compile_time_s)
         self._entries[key] = entry
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
+            obs.count("constraint_cache_evictions_total")
         return entry, False

@@ -44,6 +44,7 @@ import numpy as np
 from repro.config import ModelConfig, ServeConfig
 from repro.core import DingoTables, decoders
 from repro.models import ModelInputs, forward, init_caches
+from repro.obs import NULL_OBSERVER
 
 from .schedule import unmask_counts
 from .serve import make_serve_step
@@ -54,6 +55,10 @@ class GenerationResult(NamedTuple):
     valid: np.ndarray        # (B,) constraint satisfied (True for unconstrained)
     time_s: float
     steps: int
+    # phase split of time_s (host wall clock): prompt prefill vs the
+    # block/step decode loop; prefill_s + decode_s == time_s by construction
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
 
 
 def _positions(cfg: ModelConfig, batch: int, start, length: int):
@@ -74,12 +79,14 @@ class DiffusionEngine:
         scfg: ServeConfig,
         mask_token_id: int,
         tables: Optional[DingoTables] = None,
+        observer=NULL_OBSERVER,
     ):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
         self.mask_id = mask_token_id
         self.tables = tables
+        self.obs = observer
         self._strategy = decoders.get_strategy(scfg.decode)
         if self._strategy.needs_tables and tables is None:
             raise ValueError(f"decode={scfg.decode} requires DINGO tables")
@@ -92,11 +99,15 @@ class DiffusionEngine:
 
         @functools.partial(jax.jit, static_argnames=("attend_cache",))
         def prefill(params, caches, tokens, start, attend_cache=False):
-            pos = _positions(cfg_, tokens.shape[0], start, tokens.shape[1])
-            _, caches, _, _ = forward(
-                params, cfg_, ModelInputs(tokens, pos), caches, commit=True,
-                attend_cache=attend_cache,
-            )
+            # named_scope: prefill vs block-commit passes separate cleanly in
+            # device profiles (same jitted fn, distinguished by attend_cache)
+            scope = "block_commit" if attend_cache else "prompt_prefill"
+            with jax.named_scope(scope):
+                pos = _positions(cfg_, tokens.shape[0], start, tokens.shape[1])
+                _, caches, _, _ = forward(
+                    params, cfg_, ModelInputs(tokens, pos), caches, commit=True,
+                    attend_cache=attend_cache,
+                )
             return caches
 
         raw_step = make_serve_step(cfg, scfg, mask_token_id)
@@ -168,6 +179,10 @@ class DiffusionEngine:
         caches = init_caches(self.cfg, b, max_len)
         caches = self._prefill(self.params, caches, jnp.asarray(prompt_tokens, jnp.int32),
                                jnp.asarray(0, jnp.int32))
+        t_pf = time.perf_counter()
+        obs = self.obs
+        if obs.enabled:
+            obs.observe("batch_prefill_s", t_pf - t0)
 
         rng = jax.random.PRNGKey(seed)
         carry = self._carry0(b)
@@ -195,9 +210,16 @@ class DiffusionEngine:
             all_tokens.append(np.asarray(block_tokens))
             all_valid &= np.asarray(valid)
             carry = self._carry_next_fn(carry, q_final, block_tokens)
+        t1 = time.perf_counter()
+        if obs.enabled:
+            obs.count("decode_steps_total", n_blocks * steps_per_block)
+            obs.count("blocks_total", n_blocks)
+            obs.observe("batch_decode_s", t1 - t_pf)
         return GenerationResult(
             tokens=np.concatenate(all_tokens, axis=1),
             valid=all_valid,
-            time_s=time.perf_counter() - t0,
+            time_s=t1 - t0,
             steps=n_blocks * steps_per_block,
+            prefill_s=t_pf - t0,
+            decode_s=t1 - t_pf,
         )

@@ -82,17 +82,24 @@ def make_serve_step(
         enc = None
         if cfg.frontend == "audio":
             enc = jnp.zeros((b, cfg.num_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
-        logits, caches, _, _ = forward(
-            params, cfg, ModelInputs(block_tokens, pos, encoder_embeds=enc),
-            caches, commit=False, window=None,
-        )
-        conf = confidence(logits, scfg.remask, rng, impl=impl)
-        new_committed = select_commits(conf, committed, n_commit_in)
-        if row_live_arg is not None:
-            new_committed = committed | (new_committed & row_live_arg[:, None])
-        logp = decoder_logp(logits, block_tokens, committed, new_committed, mask_id)
-        toks, valid, qf = strategy.batched(logp, tables_in, w0, t_ax=t_ax, impl=impl)
-        block_tokens = jnp.where(new_committed, toks, mask_id)
+        # named_scope per phase: backbone / remask / constrained decode show
+        # up as separate spans in device profiles (Perfetto / XProf)
+        with jax.named_scope("serve_forward"):
+            logits, caches, _, _ = forward(
+                params, cfg, ModelInputs(block_tokens, pos, encoder_embeds=enc),
+                caches, commit=False, window=None,
+            )
+        with jax.named_scope("serve_remask"):
+            conf = confidence(logits, scfg.remask, rng, impl=impl)
+            new_committed = select_commits(conf, committed, n_commit_in)
+            if row_live_arg is not None:
+                new_committed = committed | (new_committed & row_live_arg[:, None])
+        with jax.named_scope("serve_decode"):
+            logp = decoder_logp(logits, block_tokens, committed, new_committed,
+                                mask_id)
+            toks, valid, qf = strategy.batched(logp, tables_in, w0, t_ax=t_ax,
+                                               impl=impl)
+            block_tokens = jnp.where(new_committed, toks, mask_id)
         return block_tokens, new_committed, valid, qf, caches
 
     return serve_step

@@ -3,6 +3,10 @@
 On TPU the kernels compile natively; everywhere else (this CPU container) they
 run in ``interpret=True`` mode, which executes the kernel body in Python and is
 how correctness is validated against the ``ref.py`` oracles.
+
+Each wrapper runs under a ``jax.named_scope`` so the kernels surface as named
+spans in device profiles (Perfetto / XProf) and line up with the host-side
+phase spans the serving engine's observer records.
 """
 from __future__ import annotations
 
@@ -22,19 +26,24 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnums=(2,))
 def class_max(logits: jax.Array, class_id: jax.Array, num_classes: int):
-    return class_max_pallas(logits, class_id, num_classes, interpret=_interpret())
+    with jax.named_scope("kernel_class_max"):
+        return class_max_pallas(logits, class_id, num_classes, interpret=_interpret())
 
 
 @jax.jit
 def maxplus_dp(w: jax.Array, e: jax.Array, tok: jax.Array):
-    return maxplus_dp_pallas(w, e, tok, interpret=_interpret())
+    with jax.named_scope("kernel_maxplus_dp"):
+        return maxplus_dp_pallas(w, e, tok, interpret=_interpret())
 
 
 @jax.jit
 def softmax_stats(logits: jax.Array):
-    return softmax_stats_pallas(logits, interpret=_interpret())
+    with jax.named_scope("kernel_softmax_stats"):
+        return softmax_stats_pallas(logits, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block_s",))
 def decode_attention(q, k, v, lengths=None, *, block_s: int = 512):
-    return decode_attention_pallas(q, k, v, lengths, block_s=block_s, interpret=_interpret())
+    with jax.named_scope("kernel_decode_attention"):
+        return decode_attention_pallas(q, k, v, lengths, block_s=block_s,
+                                       interpret=_interpret())

@@ -18,6 +18,7 @@ compilation through the LRU cache:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -26,6 +27,7 @@ from repro.api import Constraint, ConstraintCache, Engine, Request
 from repro.config import ServeConfig
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import init_model
+from repro.obs import Observer
 from repro.tokenizer import default_tokenizer
 from repro.training import checkpoint
 
@@ -118,6 +120,13 @@ def main():
                     help="batch mode: disable budget-aware end-state forcing "
                          "(classic live-set semantics; completions may not "
                          "close within --gen-len)")
+    ap.add_argument("--metrics-dump", metavar="PATH", default=None,
+                    help="write the merged Engine.stats() snapshot (cache / "
+                         "pool / scheduler / metric registry) as JSON on exit")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record per-request lifecycle + engine phase spans "
+                         "and write Chrome trace-event JSON on exit (load in "
+                         "Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -136,16 +145,27 @@ def main():
         block_size=args.block,
         diffusion_steps_per_block=args.steps, decode=args.decode, remask=args.remask,
     )
+    observer = (Observer(trace=args.trace is not None)
+                if (args.metrics_dump or args.trace) else None)
     eng = Engine(params, cfg, scfg, tok, n_slots=args.slots,
                  max_prompt_len=64, constraint_cache=ConstraintCache(),
                  kv_layout="paged" if args.paged else "dense",
                  page_size=args.page_size, clock=args.clock,
-                 force_closure=not args.no_force_closure)
+                 force_closure=not args.no_force_closure,
+                 observer=observer)
 
     if args.server:
         run_server(args, eng, args.requests)
     else:
         run_batch(args, eng)
+
+    if args.metrics_dump:
+        with open(args.metrics_dump, "w") as f:
+            json.dump(eng.stats(), f, indent=2, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_dump}")
+    if args.trace:
+        observer.trace.export(args.trace)
+        print(f"chrome trace -> {args.trace} (open in Perfetto)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""repro.obs — unified observability for the serving stack.
+
+    metrics    counters / gauges / histograms (fixed log-spaced buckets),
+               ``snapshot()`` -> plain dict, ``render_prometheus()`` -> text
+               exposition format
+    trace      per-request lifecycle span recorder, Chrome trace-event JSON
+               export (loads in Perfetto), ``validate_chrome_trace`` checker
+    observer   the shared Observer handle threaded through Engine /
+               ServingEngine / Scheduler / PagePool / ConstraintCache;
+               ``NULL_OBSERVER`` is the zero-overhead default
+
+See docs/OBSERVABILITY.md for the metric catalog and span taxonomy.
+"""
+from .metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    log_buckets,
+)
+from .observer import NULL_OBSERVER, NullObserver, Observer
+from .trace import TraceRecorder, validate_chrome_trace
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_BUCKETS",
+    "log_buckets",
+    "TraceRecorder",
+    "validate_chrome_trace",
+    "Observer",
+    "NullObserver",
+    "NULL_OBSERVER",
+]

@@ -1,0 +1,210 @@
+"""Dependency-free metrics registry: counters, gauges, histograms.
+
+One registry per :class:`~repro.obs.Observer`; every component of the serving
+stack (engine, scheduler, page pool, constraint cache) writes into the same
+registry, so ``snapshot()`` is THE merged view of a serving process and
+``render_prometheus()`` is the same view in the Prometheus text exposition
+format a scrape endpoint would serve.
+
+Design points:
+
+  * **plain Python, no deps** — a counter bump is one attribute add, cheap
+    enough for per-event (not per-token) call sites; the hot micro-step loop
+    guards its timing blocks on ``observer.enabled`` so the disabled path
+    costs nothing (the ``NullObserver`` methods are no-ops).
+  * **histograms use fixed log-spaced buckets** (:func:`log_buckets`):
+    serving latencies span six orders of magnitude (µs kernel dispatch to
+    multi-second requests), so linear buckets would waste all resolution at
+    one end. Fixed buckets also make snapshots mergeable across processes.
+  * **labels** are kwargs at the call site (``counter("parked", reason=x)``),
+    normalized to a sorted tuple so label order never splits a series.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def log_buckets(lo: float = 1e-6, hi: float = 100.0,
+                per_decade: int = 3) -> Tuple[float, ...]:
+    """Fixed log-spaced histogram bucket upper bounds, ``lo`` .. ``hi``
+    inclusive with ``per_decade`` buckets per decade (default 1µs..100s —
+    the span between a kernel dispatch and a very slow request)."""
+    if lo <= 0 or hi <= lo:
+        raise ValueError("need 0 < lo < hi")
+    n = int(round(math.log10(hi / lo) * per_decade))
+    return tuple(lo * 10 ** (i / per_decade) for i in range(n + 1))
+
+
+DEFAULT_BUCKETS = log_buckets()
+
+
+class Counter:
+    """Monotonically increasing count."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Point-in-time value (pool utilization, queue depth, ...)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def set_max(self, v: float) -> None:
+        """High-water form: keep the max ever seen."""
+        if v > self.value:
+            self.value = v
+
+
+class Histogram:
+    """Fixed-bucket histogram: per-bucket counts + running sum/count.
+
+    ``percentile`` answers from the bucket upper bounds, so it is an upper
+    estimate with log-bucket resolution — fine for dashboards; exact
+    latency percentiles come from the per-request records the observer
+    keeps (``Observer.request_records``)."""
+
+    __slots__ = ("buckets", "counts", "count", "sum")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS):
+        bs = tuple(float(b) for b in buckets)
+        if not bs or list(bs) != sorted(bs):
+            raise ValueError("buckets must be non-empty and ascending")
+        self.buckets = bs
+        self.counts = [0] * (len(bs) + 1)   # last bin: > buckets[-1] (+Inf)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.count += 1
+        self.sum += v
+
+    def percentile(self, q: float) -> float:
+        """Upper-bound estimate of the ``q`` (0..1) percentile."""
+        if not self.count:
+            return 0.0
+        target = q * self.count
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return self.buckets[min(i, len(self.buckets) - 1)]
+        return self.buckets[-1]
+
+    def as_dict(self) -> dict:
+        out = {"count": self.count, "sum": self.sum, "buckets": {}}
+        acc = 0
+        for le, c in zip(self.buckets, self.counts):
+            acc += c
+            out["buckets"][f"{le:.3g}"] = acc      # cumulative, Prometheus-style
+        out["buckets"]["+Inf"] = self.count
+        return out
+
+
+def _label_key(labels: Dict[str, str]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _series_name(name: str, labels: LabelKey) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named metric series.
+
+    A (name, labels) pair maps to exactly one metric object; asking for the
+    same name with a different metric kind is a programming error and raises.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[Tuple[str, LabelKey], object] = {}
+        self._kinds: Dict[str, type] = {}
+
+    def _get(self, cls, name: str, labels: Dict[str, str], *args):
+        kind = self._kinds.setdefault(name, cls)
+        if kind is not cls:
+            raise TypeError(
+                f"metric {name!r} already registered as {kind.__name__}, "
+                f"requested {cls.__name__}"
+            )
+        key = (name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            m = self._metrics[key] = cls(*args)
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, buckets: Optional[Sequence[float]] = None,
+                  **labels) -> Histogram:
+        if buckets is None:
+            return self._get(Histogram, name, labels)
+        return self._get(Histogram, name, labels, buckets)
+
+    def __len__(self) -> int:
+        return len(self._metrics)
+
+    # ---- export ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Plain JSON-able dict: series name -> scalar (counter/gauge) or
+        histogram dict (count/sum/cumulative buckets)."""
+        out = {}
+        for (name, labels), m in sorted(self._metrics.items()):
+            key = _series_name(name, labels)
+            if isinstance(m, Histogram):
+                out[key] = m.as_dict()
+            else:
+                out[key] = m.value
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format (one ``# TYPE`` line per metric
+        family, histogram as ``_bucket``/``_sum``/``_count`` series)."""
+        by_name: Dict[str, List[Tuple[LabelKey, object]]] = {}
+        for (name, labels), m in sorted(self._metrics.items()):
+            by_name.setdefault(name, []).append((labels, m))
+        lines: List[str] = []
+        for name, series in by_name.items():
+            kind = self._kinds[name]
+            tname = {Counter: "counter", Gauge: "gauge",
+                     Histogram: "histogram"}[kind]
+            lines.append(f"# TYPE {name} {tname}")
+            for labels, m in series:
+                if isinstance(m, Histogram):
+                    acc = 0
+                    for le, c in zip(m.buckets, m.counts):
+                        acc += c
+                        lk = labels + (("le", f"{le:.6g}"),)
+                        lines.append(f"{_series_name(name + '_bucket', lk)} {acc}")
+                    lk = labels + (("le", "+Inf"),)
+                    lines.append(f"{_series_name(name + '_bucket', lk)} {m.count}")
+                    lines.append(f"{_series_name(name + '_sum', labels)} {m.sum:.9g}")
+                    lines.append(f"{_series_name(name + '_count', labels)} {m.count}")
+                else:
+                    v = m.value
+                    vs = f"{v:.9g}" if isinstance(v, float) else str(v)
+                    lines.append(f"{_series_name(name, labels)} {vs}")
+        return "\n".join(lines) + ("\n" if lines else "")

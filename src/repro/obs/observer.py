@@ -1,0 +1,163 @@
+"""The shared Observer every serving component writes through.
+
+One :class:`Observer` is threaded through ``Engine`` / ``ServingEngine`` /
+``DiffusionEngine`` / ``ContinuousBatchingScheduler`` / ``PagePool`` /
+``ConstraintCache``; it owns
+
+  * a :class:`~repro.obs.metrics.MetricsRegistry` (counters, gauges,
+    step-phase histograms) — always on when the observer is enabled;
+  * optionally a :class:`~repro.obs.trace.TraceRecorder`
+    (``Observer(trace=True)``) — per-request lifecycle spans + engine phase
+    spans, exported as Chrome trace JSON (Perfetto-loadable);
+  * ``request_records`` — one plain dict per retired request (queue/prefill/
+    decode seconds, blocks, steps) so exact latency percentiles don't have
+    to be re-derived from histogram buckets. The serving bench reads its
+    req/s and p50/p95 from here instead of keeping its own stamps.
+
+The default across the stack is :data:`NULL_OBSERVER`, whose every method is
+a no-op and whose ``enabled`` flag lets hot paths skip even the timestamp
+reads (``if obs.enabled: t0 = obs.now()``), so observability costs nothing
+unless asked for — the bench gate pins the observer-off serving path within
+the usual regression tolerance.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Sequence
+
+from .metrics import Histogram, MetricsRegistry
+from .trace import TraceRecorder, Track
+
+
+class Observer:
+    """Live observer: metrics always, tracing when ``trace=True``."""
+
+    enabled = True
+
+    def __init__(self, trace: bool = False):
+        self.metrics = MetricsRegistry()
+        self.trace: Optional[TraceRecorder] = TraceRecorder() if trace else None
+        self.request_records: List[dict] = []
+
+    # ---- clock (shared by metrics + trace so the views line up) ---------
+    def now(self) -> float:
+        return self.trace.now() if self.trace is not None else time.perf_counter()
+
+    # ---- metrics --------------------------------------------------------
+    def count(self, name: str, n: int = 1, **labels) -> None:
+        self.metrics.counter(name, **labels).inc(n)
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        self.metrics.gauge(name, **labels).set(value)
+
+    def gauge_max(self, name: str, value: float, **labels) -> None:
+        self.metrics.gauge(name, **labels).set_max(value)
+
+    def observe(self, name: str, value: float,
+                buckets: Optional[Sequence[float]] = None, **labels) -> None:
+        self.metrics.histogram(name, buckets=buckets, **labels).observe(value)
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot()
+
+    # ---- tracing --------------------------------------------------------
+    def track(self, process: str, thread: str) -> Optional[Track]:
+        return self.trace.track(process, thread) if self.trace is not None else None
+
+    def begin(self, track: Optional[Track], name: str,
+              ts: Optional[float] = None, **args) -> None:
+        if self.trace is not None and track is not None:
+            self.trace.begin(track, name, ts=ts, **args)
+
+    def end(self, track: Optional[Track], name: Optional[str] = None,
+            ts: Optional[float] = None) -> None:
+        if self.trace is not None and track is not None:
+            self.trace.end(track, name, ts=ts)
+
+    def instant(self, track: Optional[Track], name: str, **args) -> None:
+        if self.trace is not None and track is not None:
+            self.trace.instant(track, name, **args)
+
+    @contextmanager
+    def phase(self, name: str, track: Optional[Track] = None, **labels):
+        """Time a host-side phase: observe ``<name>_s`` into the step-phase
+        histogram and, when tracing, emit the matching span on ``track``."""
+        t0 = self.now()
+        if self.trace is not None and track is not None:
+            self.trace.begin(track, name)
+        try:
+            yield
+        finally:
+            t1 = self.now()
+            if self.trace is not None and track is not None:
+                self.trace.end(track, name, ts=t1)
+            self.observe(f"{name}_s", t1 - t0, **labels)
+
+    # ---- per-request records --------------------------------------------
+    def record_request(self, **fields) -> None:
+        self.request_records.append(fields)
+
+    def latency_histogram(self) -> Histogram:
+        return self.metrics.histogram("request_latency_s")
+
+
+class _NullCtx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class NullObserver:
+    """No-op observer: the zero-overhead default. ``enabled`` is False so
+    hot paths can skip building the values they would have reported."""
+
+    enabled = False
+    trace = None
+    request_records: List[dict] = []   # class-level; never appended to
+
+    def now(self) -> float:
+        return 0.0
+
+    def count(self, name: str, n: int = 1, **labels) -> None:
+        pass
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        pass
+
+    def gauge_max(self, name: str, value: float, **labels) -> None:
+        pass
+
+    def observe(self, name: str, value: float,
+                buckets: Optional[Sequence[float]] = None, **labels) -> None:
+        pass
+
+    def snapshot(self) -> Dict:
+        return {}
+
+    def track(self, process: str, thread: str) -> None:
+        return None
+
+    def begin(self, track, name: str, ts: Optional[float] = None, **args) -> None:
+        pass
+
+    def end(self, track, name: Optional[str] = None,
+            ts: Optional[float] = None) -> None:
+        pass
+
+    def instant(self, track, name: str, **args) -> None:
+        pass
+
+    def phase(self, name: str, track=None, **labels):
+        return _NULL_CTX
+
+    def record_request(self, **fields) -> None:
+        pass
+
+
+NULL_OBSERVER = NullObserver()

@@ -1,0 +1,175 @@
+"""Per-request lifecycle tracing with Chrome trace-event export.
+
+The recorder collects explicit begin/end span events on named *tracks* and
+exports the Chrome trace-event JSON format (``{"traceEvents": [...]}``) that
+loads directly in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+
+Track layout for a serving run (see docs/OBSERVABILITY.md):
+
+  * one track per **request** (process "requests", thread ``req<id>``) —
+    the request's lifecycle as nested spans:
+    ``request`` > ``queue`` / ``prefill`` / ``decode`` > ``block<k>``;
+  * one track per **slot** (process "slots", thread ``slot<i>``) — which
+    request occupied the slot when, so grid utilization gaps are visible;
+  * one **engine** track (process "engine") — host-side phase spans per
+    micro-step: scheduling vs jitted forward dispatch vs per-row commit.
+
+Timestamps are host ``time.perf_counter`` converted to microseconds since
+the recorder's epoch — the same clock the metrics histograms observe, so the
+two views line up. Device-side time lives in ``jax.profiler`` traces; the
+``jax.named_scope`` annotations on ``make_serve_step``/prefill/kernels carry
+these span names into the XLA profile so the host and device views can be
+joined by name.
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Tuple
+
+Track = Tuple[int, int]   # (pid, tid)
+
+
+class TraceRecorder:
+    """Append-only Chrome-trace span recorder with named tracks."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.t0 = clock()
+        self.events: List[dict] = []
+        self._pids: Dict[str, int] = {}
+        self._track_ids: Dict[Tuple[str, str], Track] = {}
+        self._open: Dict[Track, List[str]] = {}  # per-track span stack
+
+    # ---- clock ----------------------------------------------------------
+    def now(self) -> float:
+        return self._clock()
+
+    def _us(self, ts: Optional[float]) -> float:
+        return ((self._clock() if ts is None else ts) - self.t0) * 1e6
+
+    # ---- tracks ---------------------------------------------------------
+    def track(self, process: str, thread: str) -> Track:
+        """Get-or-create the (pid, tid) for a named process/thread pair,
+        emitting the Chrome metadata events that label them in the UI."""
+        key = (process, thread)
+        tr = self._track_ids.get(key)
+        if tr is not None:
+            return tr
+        pid = self._pids.get(process)
+        if pid is None:
+            pid = self._pids[process] = len(self._pids) + 1
+            self.events.append({"name": "process_name", "ph": "M", "pid": pid,
+                                "tid": 0, "args": {"name": process}})
+        tid = sum(1 for (p, _) in self._track_ids if p == process) + 1
+        tr = (pid, tid)
+        self._track_ids[key] = tr
+        self.events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                            "tid": tid, "args": {"name": thread}})
+        return tr
+
+    # ---- spans ----------------------------------------------------------
+    def begin(self, track: Track, name: str, ts: Optional[float] = None,
+              **args) -> None:
+        ev = {"name": name, "ph": "B", "ts": self._us(ts),
+              "pid": track[0], "tid": track[1]}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+        self._open.setdefault(track, []).append(name)
+
+    def end(self, track: Track, name: Optional[str] = None,
+            ts: Optional[float] = None) -> None:
+        stack = self._open.get(track, [])
+        if not stack:
+            raise ValueError(f"end({name!r}) on track {track} with no open span")
+        top = stack[-1]
+        if name is not None and name != top:
+            # check before popping: a rejected end must leave the stack intact
+            raise ValueError(f"end({name!r}) does not match open span {top!r}")
+        stack.pop()
+        self.events.append({"name": top, "ph": "E", "ts": self._us(ts),
+                            "pid": track[0], "tid": track[1]})
+
+    def instant(self, track: Track, name: str, ts: Optional[float] = None,
+                **args) -> None:
+        ev = {"name": name, "ph": "i", "ts": self._us(ts), "s": "t",
+              "pid": track[0], "tid": track[1]}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def open_spans(self, track: Track) -> List[str]:
+        return list(self._open.get(track, ()))
+
+    @contextmanager
+    def span(self, track: Track, name: str, **args):
+        self.begin(track, name, **args)
+        try:
+            yield
+        finally:
+            self.end(track, name)
+
+    # ---- export ---------------------------------------------------------
+    def to_dict(self, close_open: bool = True) -> dict:
+        """Chrome trace document. ``close_open`` ends any still-open spans at
+        the current time so an in-flight snapshot stays loadable."""
+        if close_open:
+            for track, stack in self._open.items():
+                while stack:
+                    self.end(track)
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def export(self, path: str, close_open: bool = True) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(close_open=close_open), f)
+
+
+def validate_chrome_trace(doc: dict) -> Dict[Track, int]:
+    """Validate the invariants the exporter promises: every event carries the
+    required keys, per-track timestamps are monotonically non-decreasing,
+    and B/E events pair up as a properly nested span stack (an ``E`` always
+    closes the innermost open ``B`` of its own track). Returns the event
+    count per track; raises ``ValueError`` on any violation. Used by the
+    trace-export test and safe to run on any exported file."""
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("not a Chrome trace document (no traceEvents)")
+    last_ts: Dict[Track, float] = {}
+    stacks: Dict[Track, List[str]] = {}
+    counts: Dict[Track, int] = {}
+    for ev in doc["traceEvents"]:
+        ph = ev.get("ph")
+        if ph not in ("B", "E", "i", "M", "X"):
+            raise ValueError(f"unknown event phase {ph!r}: {ev}")
+        if "pid" not in ev or "tid" not in ev or "name" not in ev:
+            raise ValueError(f"event missing pid/tid/name: {ev}")
+        track = (ev["pid"], ev["tid"])
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            raise ValueError(f"event missing numeric ts: {ev}")
+        if ts < last_ts.get(track, float("-inf")):
+            raise ValueError(
+                f"timestamps went backwards on track {track}: "
+                f"{ts} after {last_ts[track]} ({ev})"
+            )
+        last_ts[track] = ts
+        counts[track] = counts.get(track, 0) + 1
+        if ph == "B":
+            stacks.setdefault(track, []).append(ev["name"])
+        elif ph == "E":
+            stack = stacks.get(track, [])
+            if not stack:
+                raise ValueError(f"E without matching B on track {track}: {ev}")
+            top = stack.pop()
+            if top != ev["name"]:
+                raise ValueError(
+                    f"E {ev['name']!r} closes B {top!r} on track {track} "
+                    "(spans must nest)"
+                )
+    for track, stack in stacks.items():
+        if stack:
+            raise ValueError(f"unclosed spans on track {track}: {stack}")
+    return counts

@@ -69,6 +69,7 @@ from repro.models import (
 
 from repro.api import Completion, Request
 from repro.constraints import ConstraintCache
+from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
 from .scheduler import ContinuousBatchingScheduler, Slot
@@ -168,6 +169,7 @@ class ServingEngine:
         n_pages: Optional[int] = None,
         clock: str = "slot",
         eos_fastpath: bool = True,
+        observer=None,
     ):
         if cfg.frontend is not None:
             raise ValueError("serving engine drives text-only models")
@@ -181,6 +183,14 @@ class ServingEngine:
         self.tok = tokenizer
         self.mask_id = tokenizer.mask_token_id
         self.n_slots = n_slots
+        # shared observability handle: metrics + (optional) lifecycle tracing
+        # threaded through scheduler / pool / cache; NULL_OBSERVER (the
+        # default) no-ops every call so the unobserved hot path stays free
+        self.obs = observer if observer is not None else NULL_OBSERVER
+        self._trk_engine = self.obs.track("engine", "host")
+        self._trk_slot = [self.obs.track("slots", f"slot{i}")
+                          for i in range(n_slots)]
+        self._req_track = {}      # request_id -> trace track (trace mode only)
         self.prompt_pad = prompt_pad
         self.max_prompt_len = _round_up(max_prompt_len, prompt_pad)
         d = scfg.block_size
@@ -198,12 +208,17 @@ class ServingEngine:
                 n_pages if n_pages is not None
                 else n_slots * self.pages_per_slot + 1,
                 page_size,
+                observer=self.obs,
             )
             self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         else:
             self.pool = None
             self.page_table = None
         self.cache = constraint_cache if constraint_cache is not None else ConstraintCache()
+        if self.obs.enabled:
+            # mirror shared-cache hit/miss/compile events into this engine's
+            # registry (never clobber an enabled observer with the null one)
+            self.cache.observer = self.obs
         self.eos_fastpath = eos_fastpath
         self.sched = ContinuousBatchingScheduler(
             n_slots, self.cache, tokenizer,
@@ -211,6 +226,7 @@ class ServingEngine:
             page_pool=self.pool,
             prompt_len_fn=self._prompt_len if self.pool is not None else None,
             eos_fastpath=eos_fastpath,
+            observer=self.obs,
         )
         self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
         self._rng = jax.random.PRNGKey(seed)
@@ -342,7 +358,15 @@ class ServingEngine:
 
     # ---- request intake --------------------------------------------------
     def submit(self, request: Request) -> int:
-        return self.sched.submit(request)
+        rid = self.sched.submit(request)
+        obs = self.obs
+        if obs.trace is not None:
+            tr = obs.track("requests", f"req{rid}")
+            self._req_track[rid] = tr
+            obs.begin(tr, "request", ts=request.submit_time_s,
+                      kind=request.metadata.get("kind"))
+            obs.begin(tr, "queue", ts=request.submit_time_s)
+        return rid
 
     def _prompt_len(self, request: Request) -> int:
         """Padded prompt length (the prompt-bucket rule; also the page-span
@@ -352,9 +376,16 @@ class ServingEngine:
 
     # ---- admission: prompt prefill into the slot's cache row -------------
     def _admit(self) -> Tuple[List[Slot], List[Completion]]:
+        obs = self.obs
         admitted, rejected = self.sched.admit()
         for slot in admitted:
             req = slot.request
+            tr = self._req_track.get(req.request_id)
+            if tr is not None:
+                obs.end(tr, "queue", ts=slot.admit_time_s)
+                obs.begin(tr, "prefill", ts=slot.admit_time_s)
+                obs.begin(self._trk_slot[slot.index], f"req{req.request_id}",
+                          ts=slot.admit_time_s)
             ids = self.tok.encode(req.prompt)
             mp = min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
             ids = ids[-mp:]
@@ -376,17 +407,35 @@ class ServingEngine:
                     self.caches, small, jnp.asarray(slot.index, jnp.int32)
                 )
             slot.pos = mp
+            # phase stamps (always on — one clock read per admission): the
+            # prefill span closes here and the request's decode clock starts
+            slot.decode_t0 = time.perf_counter()
+            slot.prefill_s = slot.decode_t0 - slot.admit_time_s
+            if obs.enabled:
+                obs.observe("serve_prefill_s", slot.prefill_s)
+                if tr is not None:
+                    obs.end(tr, "prefill", ts=slot.decode_t0)
+                    obs.begin(tr, "decode", ts=slot.decode_t0)
+                    obs.begin(tr, "block0", ts=slot.decode_t0)
         now = time.perf_counter()
-        return admitted, [
-            Completion(
+        out = []
+        for req, reason in rejected:
+            tr = self._req_track.pop(req.request_id, None)
+            if tr is not None:
+                obs.instant(tr, "rejected", reason=reason)
+                obs.end(tr, "queue", ts=now)
+                obs.end(tr, "request", ts=now)
+            queue_s = now - (req.submit_time_s or now)
+            out.append(Completion(
                 request_id=req.request_id, text="", tokens=[], valid=False,
                 matched=False, blocks=0, steps=0,
-                latency_s=now - (req.submit_time_s or now), queue_s=0.0,
+                latency_s=queue_s, queue_s=queue_s,
                 cache_hit=False,
-                metadata=dict(req.metadata, rejected=reason),
-            )
-            for req, reason in rejected
-        ]
+                metadata=dict(req.metadata, rejected=reason,
+                              queue_s=queue_s, prefill_s=0.0, decode_s=0.0,
+                              blocks=0, decode_steps=0),
+            ))
+        return admitted, out
 
     def _ensure_slot_pages(self, slot: Slot) -> None:
         """Extend ONE slot's page table to cover the block it is about to run.
@@ -406,42 +455,66 @@ class ServingEngine:
         for s in self.sched.active_slots:
             self._ensure_slot_pages(s)
 
+    def _advance_block_spans(self, slots) -> None:
+        """Trace-mode bookkeeping at a row's own block boundary: close the
+        finished block span and open the next (``blocks_done`` was already
+        bumped by ``record_block``)."""
+        obs = self.obs
+        if obs.trace is None:
+            return
+        for s in slots:
+            tr = self._req_track.get(s.request.request_id)
+            if tr is not None:
+                obs.end(tr)                                 # pop block<k>
+                obs.begin(tr, f"block{s.blocks_done}")
+
     # ---- one block over all live slots (clock="block": lockstep) ---------
     def step_block(self) -> List[Completion]:
         """Admit, run one diffusion block over every slot, commit, retire."""
-        _, out = self._admit()
+        obs = self.obs
+        with obs.phase("serve_sched", self._trk_engine):
+            _, out = self._admit()
         if not self.sched.busy:
             return out
         sched = self.sched
         b, d = self.n_slots, self.scfg.block_size
-        page_tables = None
-        if self.pool is not None:
-            self._ensure_block_pages()
-            page_tables = jnp.asarray(self.page_table)
-        tables = sched.stacked_tables()
-        carry = jnp.asarray(sched.carry_batch())
-        starts = jnp.asarray(sched.starts())[:, None]   # (B, 1) per-row offsets
-        block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
-        committed = jnp.zeros((b, d), bool)
-        valid = jnp.ones((b,), bool)
-        qf = jnp.zeros((b,), jnp.int32)
-        for delta in self._commit_deltas:
-            self._rng, sub = jax.random.split(self._rng)
-            block_tokens, committed, valid, qf, self.caches = self._step(
-                self.params, self.caches, block_tokens, committed, carry,
-                starts, sub, tables_arg=tables,
-                n_commit_arg=jnp.asarray(delta, jnp.int32),
-                page_tables_arg=page_tables,
+        with obs.phase("serve_forward", self._trk_engine):
+            page_tables = None
+            if self.pool is not None:
+                self._ensure_block_pages()
+                page_tables = jnp.asarray(self.page_table)
+            tables = sched.stacked_tables()
+            carry = jnp.asarray(sched.carry_batch())
+            starts = jnp.asarray(sched.starts())[:, None]   # (B, 1) per-row offsets
+            block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
+            committed = jnp.zeros((b, d), bool)
+            valid = jnp.ones((b,), bool)
+            qf = jnp.zeros((b,), jnp.int32)
+            for delta in self._commit_deltas:
+                self._rng, sub = jax.random.split(self._rng)
+                block_tokens, committed, valid, qf, self.caches = self._step(
+                    self.params, self.caches, block_tokens, committed, carry,
+                    starts, sub, tables_arg=tables,
+                    n_commit_arg=jnp.asarray(delta, jnp.int32),
+                    page_tables_arg=page_tables,
+                )
+        with obs.phase("serve_commit", self._trk_engine):
+            self.caches = self._commit_block(
+                self.params, self.caches, block_tokens, jnp.asarray(sched.starts()),
+                page_tables,
             )
-        self.caches = self._commit_block(
-            self.params, self.caches, block_tokens, jnp.asarray(sched.starts()),
-            page_tables,
-        )
         self.blocks_run += 1
         self.decode_steps += len(self._commit_deltas)
+        if obs.enabled:
+            obs.count("decode_steps_total", len(self._commit_deltas))
+            obs.count("blocks_total")
         finished = sched.record_block(
             np.asarray(block_tokens), np.asarray(valid), np.asarray(qf),
             steps=len(self._commit_deltas),
+        )
+        fin = {s.index for s in finished}
+        self._advance_block_spans(
+            s for s in sched.active_slots if s.index not in fin
         )
         out.extend(self._complete(s) for s in finished)
         return out
@@ -457,49 +530,54 @@ class ServingEngine:
         the commit forward entirely (their last block's K/V can never be
         read), so a drain of short requests costs no commit passes."""
         sched = self.sched
-        admitted, out = self._admit()
-        for s in admitted:
-            self._step_idx[s.index] = 0
-            if self.pool is not None:
-                self._ensure_slot_pages(s)
-        if admitted:
-            reset = np.zeros((self.n_slots,), bool)
-            reset[[s.index for s in admitted]] = True
-            rm = jnp.asarray(reset)
-            self._blk = jnp.where(rm[:, None], self.mask_id, self._blk)
-            self._cmt = self._cmt & ~rm[:, None]
-            self._grid_ver += 1
+        obs = self.obs
+        with obs.phase("serve_sched", self._trk_engine):
+            admitted, out = self._admit()
+            for s in admitted:
+                self._step_idx[s.index] = 0
+                if self.pool is not None:
+                    self._ensure_slot_pages(s)
+            if admitted:
+                reset = np.zeros((self.n_slots,), bool)
+                reset[[s.index for s in admitted]] = True
+                rm = jnp.asarray(reset)
+                self._blk = jnp.where(rm[:, None], self.mask_id, self._blk)
+                self._cmt = self._cmt & ~rm[:, None]
+                self._grid_ver += 1
         if not sched.busy:
             return out
 
         b = self.n_slots
         t_steps = len(self._commit_deltas)
-        if self._grid_snap_ver != self._grid_ver:
-            page_tables = None
-            if self.pool is not None:
-                page_tables = jnp.asarray(self.page_table)
-            starts_np = sched.starts()
-            live = np.asarray([not s.free for s in sched.slots], bool)
-            self._grid_snap = (
-                sched.stacked_tables(), jnp.asarray(sched.carry_batch()),
-                starts_np, jnp.asarray(starts_np)[:, None],
-                live, jnp.asarray(live), page_tables,
+        with obs.phase("serve_forward", self._trk_engine):
+            if self._grid_snap_ver != self._grid_ver:
+                page_tables = None
+                if self.pool is not None:
+                    page_tables = jnp.asarray(self.page_table)
+                starts_np = sched.starts()
+                live = np.asarray([not s.free for s in sched.slots], bool)
+                self._grid_snap = (
+                    sched.stacked_tables(), jnp.asarray(sched.carry_batch()),
+                    starts_np, jnp.asarray(starts_np)[:, None],
+                    live, jnp.asarray(live), page_tables,
+                )
+                self._grid_snap_ver = self._grid_ver
+            (tables, carry, starts_np, starts_dev, live, live_dev,
+             page_tables) = self._grid_snap
+            # each row advances by ITS step's schedule delta; idle rows by 0
+            deltas = np.where(
+                live, self._deltas_np[np.clip(self._step_idx, 0, t_steps - 1)], 0
+            ).astype(np.int32)
+            self._rng, sub = jax.random.split(self._rng)
+            self._blk, self._cmt, valid, qf, self.caches = self._step(
+                self.params, self.caches, self._blk, self._cmt, carry,
+                starts_dev, sub, tables_arg=tables,
+                n_commit_arg=jnp.asarray(deltas),
+                page_tables_arg=page_tables, row_live_arg=live_dev,
             )
-            self._grid_snap_ver = self._grid_ver
-        (tables, carry, starts_np, starts_dev, live, live_dev,
-         page_tables) = self._grid_snap
-        # each row advances by ITS step's schedule delta; idle rows by 0
-        deltas = np.where(
-            live, self._deltas_np[np.clip(self._step_idx, 0, t_steps - 1)], 0
-        ).astype(np.int32)
-        self._rng, sub = jax.random.split(self._rng)
-        self._blk, self._cmt, valid, qf, self.caches = self._step(
-            self.params, self.caches, self._blk, self._cmt, carry,
-            starts_dev, sub, tables_arg=tables,
-            n_commit_arg=jnp.asarray(deltas),
-            page_tables_arg=page_tables, row_live_arg=live_dev,
-        )
         self.decode_steps += 1
+        if obs.enabled:
+            obs.count("decode_steps_total")
         self._step_idx[live] += 1
 
         # a row's boundary: its own schedule ran out (the schedule commits
@@ -514,27 +592,31 @@ class ServingEngine:
             blk_np, np.asarray(valid), np.asarray(qf), steps=t_steps, rows=bnd,
         )
         self.blocks_run += len(bnd)
+        if obs.enabled:
+            obs.count("blocks_total", len(bnd))
         fin = {s.index for s in finished}
         cont = [i for i in bnd if i not in fin]
+        self._advance_block_spans(sched.slots[i] for i in cont)
         if cont:
             # rows that continue need their block in the cache before their
             # next micro-step; rows that retire never read it again. A lone
             # boundary row (the staggered steady state) commits through the
             # cheap batch-1 row pass; a cluster takes one masked grid pass.
-            if 2 * len(cont) < b:
-                for i in cont:
-                    self.caches = self._commit_row(
-                        self.params, self.caches, self._blk[i:i + 1],
-                        jnp.asarray(starts_np[i], jnp.int32),
-                        jnp.asarray(i, jnp.int32), page_tables,
+            with obs.phase("serve_commit", self._trk_engine):
+                if 2 * len(cont) < b:
+                    for i in cont:
+                        self.caches = self._commit_row(
+                            self.params, self.caches, self._blk[i:i + 1],
+                            jnp.asarray(starts_np[i], jnp.int32),
+                            jnp.asarray(i, jnp.int32), page_tables,
+                        )
+                else:
+                    mask = np.zeros((b,), bool)
+                    mask[cont] = True
+                    self.caches = self._commit_block(
+                        self.params, self.caches, self._blk,
+                        jnp.asarray(starts_np), page_tables, jnp.asarray(mask),
                     )
-            else:
-                mask = np.zeros((b,), bool)
-                mask[cont] = True
-                self.caches = self._commit_block(
-                    self.params, self.caches, self._blk, jnp.asarray(starts_np),
-                    page_tables, jnp.asarray(mask),
-                )
             for i in cont:
                 self._step_idx[i] = 0
                 if self.pool is not None:
@@ -552,6 +634,7 @@ class ServingEngine:
 
     def _complete(self, slot: Slot) -> Completion:
         req = slot.request
+        obs = self.obs
         now = time.perf_counter()
         tokens = list(slot.tokens)
         # trim trailing EOS padding for the surface text
@@ -562,6 +645,8 @@ class ServingEngine:
             matched = bool(td.accepting[td.run(slot.tokens)])
         else:
             matched = None
+        queue_s = slot.admit_time_s - (req.submit_time_s or slot.admit_time_s)
+        decode_s = now - slot.decode_t0
         out = Completion(
             request_id=req.request_id,
             text=self.tok.decode(tokens),
@@ -575,14 +660,60 @@ class ServingEngine:
             blocks=slot.blocks_done,
             steps=slot.steps,
             latency_s=now - (req.submit_time_s or slot.admit_time_s),
-            queue_s=slot.admit_time_s - (req.submit_time_s or slot.admit_time_s),
+            queue_s=queue_s,
             cache_hit=slot.cache_hit,
-            metadata=dict(req.metadata),
+            metadata=dict(req.metadata, queue_s=queue_s,
+                          prefill_s=slot.prefill_s, decode_s=decode_s,
+                          blocks=slot.blocks_done, decode_steps=slot.steps),
         )
+        if obs.enabled:
+            obs.count("requests_completed_total")
+            obs.observe("request_latency_s", out.latency_s)
+            obs.observe("serve_decode_s", decode_s)
+            obs.record_request(
+                request_id=req.request_id, latency_s=out.latency_s,
+                queue_s=queue_s, prefill_s=slot.prefill_s, decode_s=decode_s,
+                blocks=slot.blocks_done, decode_steps=slot.steps,
+                valid=out.valid, tokens=len(slot.tokens),
+            )
+            tr = self._req_track.pop(req.request_id, None)
+            if tr is not None:
+                obs.end(tr, ts=now)                # pop the open block span
+                obs.end(tr, "decode", ts=now)
+                obs.end(tr, "request", ts=now)
+                obs.end(self._trk_slot[slot.index],
+                        f"req{req.request_id}", ts=now)
         self.sched.release(slot)   # returns the slot's pages under paged KV
         if self.pool is not None:
             self.page_table[slot.index] = 0   # back to the trash page
         self._grid_ver += 1        # the freed slot drops out of the live grid
+        return out
+
+    # ---- merged observability snapshot -----------------------------------
+    def stats(self) -> dict:
+        """One merged, JSON-able snapshot of everything the serving stack
+        counts: engine progress, constraint-cache stats, scheduler lifecycle
+        totals, page-pool occupancy (paged layout only), and the observer's
+        metric registry (empty under the null observer)."""
+        out = {
+            "engine": {
+                "clock": self.clock,
+                "kv_layout": self.kv_layout,
+                "n_slots": self.n_slots,
+                "blocks_run": self.blocks_run,
+                "decode_steps": self.decode_steps,
+            },
+            "cache": self.cache.stats.as_dict(),
+            "scheduler": self.sched.stats.as_dict(),
+            "metrics": self.obs.snapshot(),
+        }
+        if self.pool is not None:
+            out["pool"] = dict(
+                self.pool.stats.as_dict(),
+                capacity=self.pool.capacity,
+                in_use=self.pool.in_use,
+                high_water=self.pool.high_water,
+            )
         return out
 
     # ---- serve loop ------------------------------------------------------

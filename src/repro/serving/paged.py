@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Hashable, List
 
+from repro.obs import NULL_OBSERVER
+
 TRASH_PAGE = 0
 
 
@@ -46,7 +48,7 @@ class PoolStats:
 class PagePool:
     """Allocator over ``n_pages`` fixed pages; page 0 reserved as trash."""
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, observer=NULL_OBSERVER):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the trash page)")
         if page_size < 1:
@@ -58,6 +60,8 @@ class PagePool:
         self._owned: Dict[Hashable, List[int]] = {}
         self._reserved: Dict[Hashable, int] = {}
         self.stats = PoolStats()
+        self.observer = observer
+        observer.gauge("pool_capacity_pages", self.capacity)
 
     # ---- accounting ------------------------------------------------------
     @property
@@ -72,6 +76,12 @@ class PagePool:
     @property
     def in_use(self) -> int:
         return self.capacity - len(self._free)
+
+    @property
+    def high_water(self) -> int:
+        """Peak pages ever simultaneously in use (the pool-sizing number:
+        observable without a debugger, exported as a gauge when observed)."""
+        return self.stats.highwater
 
     @property
     def reserved_outstanding(self) -> int:
@@ -102,6 +112,7 @@ class PagePool:
             raise ValueError("cannot reserve a negative page count")
         if self.available() < n:
             self.stats.reserve_fails += 1
+            self.observer.count("pool_reserve_fails_total")
             return False
         self._reserved[owner] = self._reserved.get(owner, 0) + n
         return True
@@ -130,6 +141,11 @@ class PagePool:
         self._owned.setdefault(owner, []).extend(pages)
         self.stats.allocs += n
         self.stats.highwater = max(self.stats.highwater, self.in_use)
+        obs = self.observer
+        if obs.enabled:
+            obs.count("pool_allocs_total", n)
+            obs.gauge("pool_in_use_pages", self.in_use)
+            obs.gauge_max("pool_high_water_pages", self.stats.highwater)
         return pages
 
     def free(self, owner: Hashable) -> int:
@@ -139,4 +155,8 @@ class PagePool:
         self._free.extend(reversed(pages))
         self._reserved.pop(owner, None)
         self.stats.frees += len(pages)
+        obs = self.observer
+        if obs.enabled:
+            obs.count("pool_frees_total", len(pages))
+            obs.gauge("pool_in_use_pages", self.in_use)
         return len(pages)

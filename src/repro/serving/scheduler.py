@@ -46,8 +46,28 @@ from repro.constraints import (
 from repro.core import DingoTables, pad_tables
 from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.core.dingo import NEG_INF
+from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
+
+
+@dataclasses.dataclass
+class SchedStats:
+    """Always-on scheduler event counters (the pattern CacheStats/PoolStats
+    set): cheap plain ints bumped at event rate, merged into
+    ``Engine.stats()`` and mirrored into the shared Observer's registry."""
+
+    submitted: int = 0
+    admitted: int = 0
+    parked: int = 0            # pushed back to the queue head on page pressure
+    rejected: int = 0
+    retired: int = 0
+    early_eos: int = 0         # whole-block EOS padding from an accepting state
+    eos_fastpath: int = 0      # forced-EOS instant retirement (skipped blocks)
+    reject_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -66,6 +86,8 @@ class Slot:
     tokens: List[int] = dataclasses.field(default_factory=list)
     valid: bool = True
     admit_time_s: float = 0.0
+    prefill_s: float = 0.0        # prompt prefill wall (engine stamps at admit)
+    decode_t0: float = 0.0        # perf_counter at prefill end (decode start)
 
     @property
     def free(self) -> bool:
@@ -85,12 +107,15 @@ class ContinuousBatchingScheduler:
         page_pool: Optional[PagePool] = None,
         prompt_len_fn=None,
         eos_fastpath: bool = True,
+        observer=NULL_OBSERVER,
     ):
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if page_pool is not None and prompt_len_fn is None:
             raise ValueError("page_pool admission needs a prompt_len_fn")
         self.eos_fastpath = eos_fastpath
+        self.observer = observer
+        self.stats = SchedStats()
         self.n_slots = n_slots
         self.cache = cache
         self.tok = tokenizer
@@ -124,6 +149,8 @@ class ContinuousBatchingScheduler:
         if request.submit_time_s is None:
             request.submit_time_s = time.perf_counter()
         self.queue.append(request)
+        self.stats.submitted += 1
+        self.observer.count("sched_submitted_total")
         return request.request_id
 
     @property
@@ -156,6 +183,14 @@ class ContinuousBatchingScheduler:
         d = self.block_size
         pool = self.page_pool
         parked = False
+
+        def _reject(req, reason: str, slug: str) -> None:
+            rejected.append((req, reason))
+            self.stats.rejected += 1
+            self.stats.reject_reasons[slug] = \
+                self.stats.reject_reasons.get(slug, 0) + 1
+            self.observer.count("sched_rejected_total", reason=slug)
+
         for slot in (s for s in self.slots if s.free):
             if parked:
                 break
@@ -164,24 +199,28 @@ class ContinuousBatchingScheduler:
                 entry, hit = self._compile(req.constraint)
                 blocks = min(self.max_blocks, max(1, -(-req.max_new_tokens // d)))
                 if req.constraint.constrained and entry.min_tokens > blocks * d:
-                    rejected.append((req, "constraint needs >= "
-                                     f"{entry.min_tokens} tokens, budget too small"))
+                    _reject(req, "constraint needs >= "
+                            f"{entry.min_tokens} tokens, budget too small",
+                            "budget_too_small")
                     continue
                 if pool is not None:
                     need = -(-(self.prompt_len_fn(req) + blocks * d)
                              // pool.page_size)
                     if need > pool.capacity:
-                        rejected.append((req, f"needs {need} KV pages > pool "
-                                         f"capacity {pool.capacity}"))
+                        _reject(req, f"needs {need} KV pages > pool "
+                                f"capacity {pool.capacity}", "pool_capacity")
                         continue
                     if not pool.reserve(slot.index, need):
                         if pool.idle:   # nothing in flight will ever free
-                            rejected.append((req, f"needs {need} KV pages, "
-                                             f"{pool.available()} available in "
-                                             "an idle pool"))
+                            _reject(req, f"needs {need} KV pages, "
+                                    f"{pool.available()} available in "
+                                    "an idle pool", "idle_pool")
                             continue
                         self.queue.appendleft(req)   # park at the head
                         parked = True
+                        self.stats.parked += 1
+                        self.observer.count("sched_parked_total",
+                                            reason="page_pressure")
                         break
                 td = entry.tokendfa
                 slot.request = req
@@ -201,6 +240,8 @@ class ContinuousBatchingScheduler:
                 break
         if admitted:
             self._stacked_key = None  # table assignment changed
+            self.stats.admitted += len(admitted)
+            self.observer.count("sched_admitted_total", len(admitted))
         return admitted, rejected
 
     def _compile(self, constraint: Constraint) -> Tuple[CompiledConstraint, bool]:
@@ -358,6 +399,8 @@ class ContinuousBatchingScheduler:
             # an accepting state — the match is over, free the slot now
             if not done and accepting and all(t == eos for t in row):
                 done = True
+                self.stats.early_eos += 1
+                self.observer.count("sched_early_eos_total")
             # forced-EOS retirement: the slot's block-start state admits ONLY
             # EOS∞ — every remaining block is pure padding, so retire NOW
             # instead of decoding it. Purely host-side and clock-invariant:
@@ -372,8 +415,13 @@ class ContinuousBatchingScheduler:
                     and s.q_state < td.num_states
                     and self._eos_only_states(s.entry)[s.q_state]):
                 done = True
+                self.stats.eos_fastpath += 1
+                self.observer.count("sched_eos_fastpath_total")
             if done:
                 finished.append(s)
+        if finished:
+            self.stats.retired += len(finished)
+            self.observer.count("sched_retired_total", len(finished))
         return finished
 
     def _eos_only_states(self, entry: CompiledConstraint) -> np.ndarray:

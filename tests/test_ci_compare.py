@@ -116,6 +116,64 @@ def test_batch_forced_gates():
     assert failures == []
 
 
+def test_band_keys_gate_two_sided():
+    """PR 6 keys: deterministic observer metrics gate on a two-sided band —
+    a drop in decode_steps_total (earlier retirement: an improvement) passes,
+    while drift beyond the tolerance in EITHER direction fails."""
+    base = _doc()
+    base["obs"] = {"decode_steps_total": 100, "cache_hit_rate": 0.8}
+    new = json.loads(json.dumps(base))
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert failures == []
+    # 15% fewer steps: inside the band, and a floor gate would also pass —
+    # the point is the next case
+    new["obs"]["decode_steps_total"] = 85
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert failures == []
+    # 30% MORE steps: a floor gate would pass this scheduling regression;
+    # the band fails it
+    new["obs"]["decode_steps_total"] = 130
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("obs.decode_steps_total" in f for f in failures)
+    # hit-rate drift fails both ways
+    new["obs"]["decode_steps_total"] = 100
+    for rate in (0.5, 1.0):
+        new["obs"]["cache_hit_rate"] = rate
+        failures, _ = compare(base, new, max_regression=0.2)
+        assert any("obs.cache_hit_rate" in f for f in failures), rate
+    new["obs"]["cache_hit_rate"] = 0.75     # within ±20% of 0.8
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert failures == []
+
+
+def test_band_keys_additive_and_dropped():
+    """An old baseline without the obs section skips additively; a new run
+    that silently dropped it fails loudly."""
+    base, new = _doc(), _doc()
+    new["obs"] = {"decode_steps_total": 100, "cache_hit_rate": 0.8}
+    failures, rows = compare(base, new, max_regression=0.2)
+    assert failures == []
+    assert any(r[0] == "obs.decode_steps_total" and "skipped" in r[-1]
+               for r in rows)
+    base["obs"] = dict(new["obs"])
+    del new["obs"]
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert sum("missing from new run" in f for f in failures) == 2
+
+
+def test_band_zero_baseline_stays_zero():
+    """A zero baseline means 'stay (near) zero': tolerance falls back to the
+    absolute fraction, so 0 -> 0.1 passes at 20% but 0 -> 0.5 fails."""
+    base, new = _doc(), _doc()
+    base["obs"] = {"decode_steps_total": 100, "cache_hit_rate": 0.0}
+    new["obs"] = {"decode_steps_total": 100, "cache_hit_rate": 0.1}
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert failures == []
+    new["obs"]["cache_hit_rate"] = 0.5
+    failures, _ = compare(base, new, max_regression=0.2)
+    assert any("obs.cache_hit_rate" in f for f in failures)
+
+
 def test_main_exit_codes(tmp_path):
     b, n = tmp_path / "base.json", tmp_path / "new.json"
     b.write_text(json.dumps(_doc()))

@@ -1,0 +1,390 @@
+"""repro.obs — metrics registry, lifecycle tracing, and the observer wiring.
+
+Three layers:
+
+  * unit: counters/gauges/histograms (fixed log buckets, label
+    normalization, Prometheus rendering) and the Chrome-trace recorder's
+    span-stack invariants, including what ``validate_chrome_trace`` rejects;
+  * integration: per-request timing metadata in BOTH generation modes
+    (present, non-negative, sum-consistent with wall time) and the merged
+    ``Engine.stats()`` snapshot;
+  * differential: serving with a live observer (trace mode included) is
+    token-IDENTICAL to the unobserved engine on a mixed 8-request stream —
+    observability must never touch the decode.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.api import Constraint, Engine, Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import ConstraintCache, schema_for_fields
+from repro.data import synthetic
+from repro.models import init_model
+from repro.obs import (
+    DEFAULT_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+    NullObserver,
+    Observer,
+    TraceRecorder,
+    log_buckets,
+    validate_chrome_trace,
+)
+from repro.serving import ServingEngine
+from repro.tokenizer import default_tokenizer
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_log_buckets_span_and_defaults():
+    bs = log_buckets(1e-6, 100.0, per_decade=3)
+    assert bs == DEFAULT_BUCKETS
+    assert bs[0] == pytest.approx(1e-6) and bs[-1] == pytest.approx(100.0)
+    assert len(bs) == 25                       # 8 decades * 3 + 1
+    assert list(bs) == sorted(bs)
+    with pytest.raises(ValueError):
+        log_buckets(0, 1)
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc()
+    reg.counter("reqs").inc(4)
+    reg.gauge("depth").set(7)
+    reg.gauge("peak").set_max(3)
+    reg.gauge("peak").set_max(2)               # lower: must not move
+    for v in (0.5e-6, 1e-3, 1e-3, 2.0):
+        reg.histogram("lat_s").observe(v)
+    snap = reg.snapshot()
+    assert snap["reqs"] == 5
+    assert snap["depth"] == 7 and snap["peak"] == 3
+    h = snap["lat_s"]
+    assert h["count"] == 4 and h["sum"] == pytest.approx(0.5e-6 + 2e-3 + 2.0)
+    assert h["buckets"]["+Inf"] == 4
+    # cumulative: everything <= 1e-3 covers the sub-µs value + both 1ms obs
+    assert h["buckets"]["0.001"] == 3
+
+
+def test_histogram_overflow_and_percentile():
+    h = Histogram(buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):                 # last lands in the +Inf bin
+        h.observe(v)
+    assert h.counts == [1, 1, 1]
+    assert h.as_dict()["buckets"] == {"1": 1, "10": 2, "+Inf": 3}
+    assert h.percentile(0.33) == 1.0
+    assert h.percentile(0.67) == 10.0
+    assert h.percentile(1.0) == 10.0           # upper bound caps at last edge
+    assert Histogram().percentile(0.5) == 0.0  # empty
+    with pytest.raises(ValueError):
+        Histogram(buckets=(2.0, 1.0))
+
+
+def test_labels_normalize_and_kind_conflicts_raise():
+    reg = MetricsRegistry()
+    reg.counter("parked", reason="pages", clock="slot").inc()
+    reg.counter("parked", clock="slot", reason="pages").inc()   # same series
+    assert reg.snapshot() == {'parked{clock="slot",reason="pages"}': 2}
+    with pytest.raises(TypeError):
+        reg.gauge("parked")                    # name already a Counter
+
+
+def test_render_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.counter("steps").inc(3)
+    reg.gauge("pool_in_use", layout="paged").set(5)
+    h = reg.histogram("lat_s", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = reg.render_prometheus()
+    lines = text.splitlines()
+    assert "# TYPE steps counter" in lines
+    assert "# TYPE pool_in_use gauge" in lines
+    assert "# TYPE lat_s histogram" in lines
+    assert "steps 3" in lines
+    assert 'pool_in_use{layout="paged"} 5' in lines
+    # histogram series: cumulative buckets with le labels + sum/count
+    assert 'lat_s_bucket{le="0.1"} 1' in lines
+    assert 'lat_s_bucket{le="1"} 2' in lines
+    assert 'lat_s_bucket{le="+Inf"} 2' in lines
+    assert "lat_s_count 2" in lines
+    assert any(ln.startswith("lat_s_sum 0.55") for ln in lines)
+    assert text.endswith("\n")
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+def _fake_clock():
+    t = [100.0]
+
+    def clock():
+        t[0] += 0.001
+        return t[0]
+
+    return clock
+
+
+def test_trace_spans_nest_and_export():
+    rec = TraceRecorder(clock=_fake_clock())
+    tr = rec.track("requests", "req0")
+    assert rec.track("requests", "req0") is tr     # get-or-create
+    rec.begin(tr, "request", kind="regex")
+    rec.begin(tr, "queue")
+    rec.end(tr, "queue")
+    rec.begin(tr, "decode")
+    rec.end(tr)                                    # auto-pop: decode
+    rec.end(tr, "request")
+    doc = rec.to_dict()
+    counts = validate_chrome_trace(doc)
+    assert counts[tr] == 6
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] in "BE"]
+    assert names == ["request", "queue", "queue", "decode", "decode", "request"]
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["args"]["name"] for e in meta} == {"requests", "req0"}
+    assert doc["displayTimeUnit"] == "ms"
+    assert json.loads(json.dumps(doc)) == doc      # JSON round-trips
+
+
+def test_trace_misuse_raises():
+    rec = TraceRecorder(clock=_fake_clock())
+    tr = rec.track("p", "t")
+    with pytest.raises(ValueError):
+        rec.end(tr, "nothing_open")
+    rec.begin(tr, "outer")
+    with pytest.raises(ValueError):
+        rec.end(tr, "inner")                       # name mismatches stack top
+    assert rec.open_spans(tr) == ["outer"]
+
+
+def test_trace_close_open_makes_snapshot_loadable():
+    rec = TraceRecorder(clock=_fake_clock())
+    tr = rec.track("p", "t")
+    rec.begin(tr, "a")
+    rec.begin(tr, "b")
+    validate_chrome_trace(rec.to_dict(close_open=True))
+    assert rec.open_spans(tr) == []
+
+
+def test_validate_rejects_broken_traces():
+    ok = {"pid": 1, "tid": 1}
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace({})
+    with pytest.raises(ValueError, match="backwards"):
+        validate_chrome_trace({"traceEvents": [
+            dict(ok, name="a", ph="B", ts=10.0),
+            dict(ok, name="a", ph="E", ts=5.0),
+        ]})
+    with pytest.raises(ValueError, match="without matching B"):
+        validate_chrome_trace({"traceEvents": [
+            dict(ok, name="a", ph="E", ts=1.0),
+        ]})
+    with pytest.raises(ValueError, match="must nest"):
+        validate_chrome_trace({"traceEvents": [
+            dict(ok, name="a", ph="B", ts=1.0),
+            dict(ok, name="b", ph="B", ts=2.0),
+            dict(ok, name="a", ph="E", ts=3.0),    # closes b's frame
+        ]})
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_chrome_trace({"traceEvents": [
+            dict(ok, name="a", ph="B", ts=1.0),
+        ]})
+
+
+# ---------------------------------------------------------------------------
+# observer
+# ---------------------------------------------------------------------------
+def test_observer_phase_and_records():
+    obs = Observer(trace=True)
+    tr = obs.track("engine", "host")
+    with obs.phase("serve_forward", tr):
+        pass
+    snap = obs.snapshot()
+    assert snap["serve_forward_s"]["count"] == 1
+    obs.record_request(request_id=1, latency_s=0.5)
+    assert obs.request_records == [{"request_id": 1, "latency_s": 0.5}]
+    validate_chrome_trace(obs.trace.to_dict())
+
+
+def test_null_observer_is_inert():
+    obs = NullObserver()
+    assert not obs.enabled and obs.trace is None
+    obs.count("x")
+    obs.observe("y", 1.0)
+    obs.gauge("z", 2.0)
+    with obs.phase("anything", obs.track("p", "t")):
+        pass
+    obs.record_request(a=1)
+    assert obs.snapshot() == {} and obs.request_records == []
+
+
+# ---------------------------------------------------------------------------
+# engine integration (tiny model, shared across the tests below)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+def _mixed_requests():
+    """Mixed 8-request stream: 4 constraint kinds, heterogeneous budgets."""
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 16),
+    ]
+    return [Request(f"prompt {i}: ", c, max_new_tokens=m)
+            for i, (c, m) in enumerate(specs)]
+
+
+@pytest.fixture(scope="module")
+def served(setup, tok):
+    """One observed (trace mode) and one unobserved serve of the identical
+    mixed stream, same seed — shared by the differential, metadata, trace,
+    and stats tests."""
+    cfg, params, scfg = setup
+
+    # fresh streams per run (request ids are globally increasing, so they
+    # differ between the two serves); match completions by stream position
+    obs = Observer(trace=True)
+    off_eng = ServingEngine(params, cfg, scfg, tok, n_slots=3,
+                            max_prompt_len=32, kv_layout="paged",
+                            constraint_cache=ConstraintCache(), seed=7)
+    off_reqs = _mixed_requests()
+    off = {r.request_id: i for i, r in enumerate(off_reqs)}
+    off_done = {off[c.request_id]: c for c in off_eng.serve(off_reqs)}
+
+    on_eng = ServingEngine(params, cfg, scfg, tok, n_slots=3,
+                           max_prompt_len=32, kv_layout="paged",
+                           constraint_cache=ConstraintCache(), seed=7,
+                           observer=obs)
+    on_reqs = _mixed_requests()
+    on = {r.request_id: i for i, r in enumerate(on_reqs)}
+    on_done = {on[c.request_id]: c for c in on_eng.serve(on_reqs)}
+    return off_eng, off_done, on_eng, on_done, obs
+
+
+def test_observer_on_is_token_identical(served):
+    """The whole point of the overhead budget: a live observer (metrics AND
+    trace) must not perturb the decode by a single token."""
+    off_eng, off_done, on_eng, on_done, _ = served
+    assert sorted(off_done) == sorted(on_done) == list(range(8))
+    for i in range(8):
+        assert on_done[i].tokens == off_done[i].tokens, f"request {i}"
+        assert on_done[i].valid == off_done[i].valid
+        assert on_done[i].matched == off_done[i].matched
+    assert on_eng.decode_steps == off_eng.decode_steps
+    assert on_eng.blocks_run == off_eng.blocks_run
+
+
+def test_serve_metadata_timing(served):
+    """Satellite: queue_s/prefill_s/decode_s/blocks/decode_steps in serve
+    mode — present, non-negative, and the phases sum to the wall latency."""
+    for done in (served[1], served[3]):        # observer-off AND observer-on
+        for i, c in done.items():
+            md = c.metadata
+            for k in ("queue_s", "prefill_s", "decode_s", "blocks",
+                      "decode_steps"):
+                assert k in md, (i, k)
+                assert md[k] >= 0, (i, k)
+            assert md["blocks"] == c.blocks and md["decode_steps"] == c.steps
+            assert md["blocks"] >= 1 and md["decode_steps"] >= 4
+            total = md["queue_s"] + md["prefill_s"] + md["decode_s"]
+            assert total == pytest.approx(c.latency_s, abs=1e-6), i
+
+
+def test_generate_metadata_timing(setup, tok):
+    """Same satellite, batch mode: queue is 0, prefill/decode split the
+    engine wall time, and the sum never exceeds the request latency."""
+    cfg, params, scfg = setup
+    eng = Engine(params, cfg, scfg, tok)
+    done = eng.generate(_mixed_requests()[:4], seed=3)
+    for c in done:
+        md = c.metadata
+        assert md["queue_s"] == 0.0
+        assert md["prefill_s"] > 0 and md["decode_s"] > 0
+        assert md["blocks"] >= 1 and md["decode_steps"] >= 4
+        # latency includes table prep + engine build around the generate call
+        assert md["prefill_s"] + md["decode_s"] <= c.latency_s + 1e-6
+
+
+def test_trace_export_chrome_schema(served, tmp_path):
+    """The exported trace is valid Chrome trace JSON: monotonic per-track
+    timestamps, matched B/E pairs, proper nesting (validate_chrome_trace
+    checks all three), with the documented track layout."""
+    _, _, on_eng, _, obs = served
+    path = tmp_path / "trace.json"
+    obs.trace.export(str(path))
+    with open(path) as f:
+        doc = json.load(f)
+    counts = validate_chrome_trace(doc)
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    procs = {e["args"]["name"] for e in meta if e["name"] == "process_name"}
+    threads = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"requests", "slots", "engine"} <= procs
+    assert {"slot0", "slot1", "slot2", "host"} <= threads
+    assert sum(t.startswith("req") for t in threads) == 8   # one per request
+    # every request track carries the full lifecycle:
+    # B/E for request + queue + prefill + decode + >=1 block span
+    req_pid = next(e["pid"] for e in meta
+                   if e["name"] == "process_name"
+                   and e["args"]["name"] == "requests")
+    for (pid, _), n in counts.items():
+        if pid == req_pid:
+            assert n >= 10
+
+
+def test_engine_stats_merged_snapshot(served):
+    _, _, on_eng, _, obs = served
+    s = on_eng.stats()
+    assert {"engine", "cache", "scheduler", "metrics", "pool"} <= set(s)
+    assert s["engine"]["decode_steps"] == on_eng.decode_steps > 0
+    assert s["scheduler"]["admitted"] == s["scheduler"]["retired"] == 8
+    assert s["cache"]["lookups" if "lookups" in s["cache"] else "hits"] >= 0
+    assert s["pool"]["capacity"] > 0 and s["pool"]["in_use"] == 0
+    assert s["pool"]["high_water"] > 0
+    m = s["metrics"]
+    assert m["decode_steps_total"] == on_eng.decode_steps
+    assert m["requests_completed_total"] == 8
+    assert m["request_latency_s"]["count"] == 8
+    # step-phase histograms made it into the merged view
+    assert m["serve_sched_s"]["count"] > 0
+    assert m["serve_forward_s"]["count"] > 0
+    assert m["serve_prefill_s"]["count"] == 8
+    # JSON-able end to end (the --metrics-dump contract)
+    json.dumps(s)
+    # prometheus rendering of the same registry stays self-consistent
+    text = obs.metrics.render_prometheus()
+    assert "# TYPE decode_steps_total counter" in text
+
+
+def test_api_engine_stats_without_serving(setup, tok):
+    """Engine.stats() must not build the slot grid just to answer."""
+    cfg, params, scfg = setup
+    obs = Observer()
+    eng = Engine(params, cfg, scfg, tok, observer=obs)
+    eng.generate(_mixed_requests()[:2], seed=0)
+    s = eng.stats()
+    assert set(s) == {"cache", "metrics"}
+    assert eng._serving is None                 # still lazy
+    assert s["metrics"]["decode_steps_total"] > 0
+    assert s["cache"]["misses"] > 0

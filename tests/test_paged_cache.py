@@ -37,6 +37,62 @@ def test_pool_basics():
     assert pool.stats.allocs == 2 and pool.stats.frees == 2
 
 
+def test_pool_occupancy_properties_round_trip():
+    """in_use / high_water / capacity across reserve -> alloc -> free round
+    trips: in_use tracks live pages exactly, high_water is monotone and only
+    ratchets at allocation, capacity never moves."""
+    pool = PagePool(10, 4)
+    assert (pool.capacity, pool.in_use, pool.high_water) == (9, 0, 0)
+
+    assert pool.reserve("a", 4)
+    assert pool.in_use == 0 and pool.high_water == 0   # reserving isn't using
+    pool.alloc("a", 3)
+    assert pool.in_use == 3 and pool.high_water == 3
+    assert pool.reserve("b", 2)
+    pool.alloc("b", 2)
+    assert pool.in_use == 5 and pool.high_water == 5
+
+    assert pool.free("a") == 3
+    assert pool.in_use == 2                    # b's pages still live
+    assert pool.high_water == 5                # ... but the peak holds
+    assert pool.free("b") == 2
+    assert pool.in_use == 0 and pool.high_water == 5
+    assert pool.idle
+
+    # second round trip below the old peak: high_water must not move
+    assert pool.reserve("c", 4)
+    pool.alloc("c", 4)
+    assert pool.in_use == 4 and pool.high_water == 5
+    # ... and above it, it ratchets
+    assert pool.reserve("d", 2)
+    pool.alloc("d", 2)
+    assert pool.in_use == 6 and pool.high_water == 6
+    pool.free("c")
+    pool.free("d")
+    assert pool.in_use == 0 and pool.high_water == 6
+    assert pool.capacity == 9                  # capacity is structural
+
+
+def test_pool_mirrors_gauges_into_observer():
+    """With a live Observer attached the pool mirrors occupancy into the
+    metric registry; the stats struct stays the source of truth."""
+    from repro.obs import Observer
+
+    obs = Observer()
+    pool = PagePool(8, 4, observer=obs)
+    pool.reserve("a", 3)
+    pool.alloc("a", 3)
+    pool.free("a")
+    assert not pool.reserve("b", 99)           # reserve fail counts too
+    snap = obs.snapshot()
+    assert snap["pool_capacity_pages"] == 7
+    assert snap["pool_allocs_total"] == 3
+    assert snap["pool_frees_total"] == 3
+    assert snap["pool_in_use_pages"] == 0
+    assert snap["pool_high_water_pages"] == 3 == pool.high_water
+    assert snap["pool_reserve_fails_total"] == 1
+
+
 def test_pool_reserve_fail_and_exhaustion():
     pool = PagePool(5, 4)                      # capacity 4
     assert not pool.reserve("a", 5)
