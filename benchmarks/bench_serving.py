@@ -136,7 +136,9 @@ def _arrival_engine(params, cfg, scfg, tok, cache, n_slots, clock):
 
 def _drive_arrivals(eng, step, step_s, n_requests, gen_len, gap_steps):
     """Open-loop mixed-length workload: request ``i`` arrives after
-    ``i * gap_steps`` diffusion micro-steps. The arrival clock is the
+    ``i * gap_steps`` diffusion micro-steps, driven through the shared trace
+    replay driver (``benchmarks.trace.replay`` — the same loop the scale
+    bench runs thousand-request traces through). The arrival clock is the
     engine's own ``decode_steps`` counter, so both block clocks face the
     IDENTICAL schedule — but the lockstep grid can only act on an arrival at
     its next block barrier (up to T-1 steps late for every admission), while
@@ -144,55 +146,12 @@ def _drive_arrivals(eng, step, step_s, n_requests, gen_len, gap_steps):
     idle grid waiting for the next arrival ticks in real time (one step of
     wall per step of clock), as a synchronous serving loop does. Also reports
     mean busy slots per decode step (grid utilization)."""
+    from .trace import replay
+
     reqs = _stream(n_requests, gen_len)
-    eng.decode_steps = 0
-    done, i = [], 0
-    busy_steps = 0
-    t0 = time.perf_counter()
-    t_prev, s_prev = t0, 0
-    while i < len(reqs) or eng.sched.pending or eng.sched.busy:
-        now = time.perf_counter()
-        while i < len(reqs) and eng.decode_steps >= i * gap_steps:
-            # a request that came due DURING the last step call arrived
-            # mid-block: stamp its true (interpolated) arrival time, not the
-            # barrier at which a lockstep grid first LOOKS at the queue —
-            # otherwise lockstep's latency hides exactly the wait it causes
-            due = i * gap_steps
-            frac = ((due - s_prev) / (eng.decode_steps - s_prev)
-                    if eng.decode_steps > s_prev else 1.0)
-            reqs[i].submit_time_s = t_prev + max(0.0, min(1.0, frac)) * (now - t_prev)
-            eng.submit(reqs[i])
-            i += 1
-        if not (eng.sched.pending or eng.sched.busy):
-            time.sleep(step_s)             # idle tick: wall passes for real
-            eng.decode_steps += 1
-            t_prev, s_prev = time.perf_counter(), eng.decode_steps
-            continue
-        before = eng.decode_steps
-        busy = eng.sched.busy
-        t_prev, s_prev = time.perf_counter(), before
-        out = step()
-        done.extend(out)
-        # mean of pre/post-step busy: slots admitted or retired inside the
-        # step were busy for part of it, and averaging the endpoints gives
-        # each such slot exactly half credit
-        busy_steps += 0.5 * (busy + eng.sched.busy) * (eng.decode_steps - before)
-    wall = time.perf_counter() - t0
-    lat = [c.latency_s for c in done]
-    toks = sum(len(c.tokens) for c in done)
-    return dict(
-        clock=eng.clock,
-        wall_s=wall,
-        req_s=len(done) / wall,
-        tok_s=toks / wall,
-        p50_s=float(np.percentile(lat, 50)),
-        p95_s=float(np.percentile(lat, 95)),
-        n=len(done),
-        n_matched=sum(1 for c in done if c.matched),
-        decode_steps=eng.decode_steps,
-        mean_busy_slots=busy_steps / max(1, eng.decode_steps),
-        gap_steps=gap_steps,
-    )
+    metrics = replay(eng, [(i * gap_steps, r) for i, r in enumerate(reqs)],
+                     step_fn=step, idle_step_s=step_s)
+    return dict(metrics, gap_steps=gap_steps)
 
 
 def _median_of(runs, keys=("req_s", "tok_s", "p50_s", "p95_s", "wall_s",

@@ -1,8 +1,9 @@
-"""CI benchmark-regression gate for the serving bench.
+"""CI benchmark-regression gate for the serving and trace benches.
 
-Compares a freshly produced ``BENCH_serving.json`` against the committed
-baseline and fails (exit 1) when a gated metric regresses by more than the
-tolerance. Two kinds of gates:
+Compares a freshly produced ``BENCH_serving.json`` (default profile) or
+``BENCH_trace.json`` (``--profile trace``) against the committed baseline and
+fails (exit 1) when a gated metric regresses by more than the tolerance. Two
+kinds of gates:
 
 * **ratio keys** (machine-independent): metrics that compare two arms of the
   SAME run and are deterministic — ``slot_clock_steps_gain_x``, the
@@ -23,6 +24,14 @@ skipped (additive evolution: new benches must not fail old baselines); keys
 missing from the NEW file fail loudly (a bench silently dropped a metric).
 
     python -m benchmarks.ci_compare baseline.json new.json --max-regression 0.20
+    python -m benchmarks.ci_compare trace_base.json BENCH_trace.json --profile trace
+
+The trace profile gates only machine-independent keys: the seeded trace
+replays the same admit/degrade/reject sequence on any host (decode-step
+domain, see ``repro.serving.slo``), so matched fractions gate as floors,
+makespan / reject / degrade counts gate on the two-sided band, and the
+drained-clean booleans (no slot or page leak at drain) gate tightly. Wall
+goodput/latency is report-only; no runner normalization applies.
 
 Exit codes: 0 ok, 1 regression (or missing new key), 2 usage/IO error.
 """
@@ -72,6 +81,57 @@ BAND_KEYS = (
 )
 DEFAULT_NORMALIZE = "batch_warm.req_s"
 
+# ---- trace profile (BENCH_trace.json) --------------------------------------
+TRACE_RATIO_KEYS = (
+    # bool gates (True=1.0): the 1000-request replay drained with zero slot
+    # and zero page leaks, in both arms
+    "fifo_drained_clean",
+    "slo_drained_clean",
+    # floor gates: the fraction of constrained completions whose tokens
+    # host-side fullmatch — the soundness number, ~1.0 by construction
+    "gates.fifo_matched_fraction",
+    "gates.slo_matched_fraction",
+)
+TRACE_BAND_KEYS = (
+    # two-sided |new-base| <= tol*base: makespan going DOWN is an improvement
+    # a floor would punish, but silent inflation (scheduling regression) and
+    # a policy change that swings the reject/degrade counts both fail
+    "gates.fifo_makespan_steps",
+    "gates.slo_makespan_steps",
+    "gates.fifo_parked",
+    "gates.fifo_rejected",
+    "gates.slo_attainment",
+    "gates.slo_rejected",
+    "gates.slo_degraded",
+)
+TRACE_REPORT_KEYS = (
+    # wall-clock measures: meaningful on one machine, noise across runners
+    "fifo.req_s",
+    "fifo.goodput_req_s",
+    "slo.goodput_req_s",
+    "fifo.p95_s",
+    "slo.p95_s",
+    "fifo.ttfc_p50_s",
+    "slo.ttfc_p50_s",
+)
+
+PROFILES = {
+    "serving": dict(
+        ratio_keys=RATIO_KEYS,
+        band_keys=BAND_KEYS,
+        report_keys=REPORT_KEYS,
+        throughput_keys=THROUGHPUT_KEYS,
+        normalize=DEFAULT_NORMALIZE,
+    ),
+    "trace": dict(
+        ratio_keys=TRACE_RATIO_KEYS,
+        band_keys=TRACE_BAND_KEYS,
+        report_keys=TRACE_REPORT_KEYS,
+        throughput_keys=(),
+        normalize=None,
+    ),
+}
+
 
 def get_path(doc: dict, dotted: str):
     """Resolve a dotted path; None when any hop is missing."""
@@ -91,6 +151,7 @@ def compare(
     ratio_keys=RATIO_KEYS,
     throughput_keys=THROUGHPUT_KEYS,
     band_keys=BAND_KEYS,
+    report_keys=REPORT_KEYS,
     normalize: str | None = DEFAULT_NORMALIZE,
 ):
     """Returns (failures, report_rows). A floor metric fails when
@@ -127,8 +188,7 @@ def compare(
         # within the absolute tolerance of the fraction itself
         tol = max_regression * (abs(base_val) if base_val else 1.0)
         ok = abs(new_val - base_val) <= tol
-        rows.append((key, "band", base_val, new_val,
-                     "ok" if ok else f"DRIFTED beyond ±{tol:.4g}"))
+        rows.append((key, "band", base_val, new_val, "ok" if ok else f"DRIFTED beyond ±{tol:.4g}"))
         if not ok:
             failures.append(
                 f"{key}: {new_val:.4g} outside {base_val:.4g} ± {tol:.4g} "
@@ -139,7 +199,7 @@ def compare(
         check(key, get_path(baseline, key), get_path(new, key), "ratio")
     for key in band_keys:
         check_band(key, get_path(baseline, key), get_path(new, key))
-    for key in REPORT_KEYS:
+    for key in report_keys:
         b, n = get_path(baseline, key), get_path(new, key)
         bs = "-" if b is None else f"{b:.4g}"
         rows.append((key, "wall ratio", b, n, f"report-only (baseline {bs})"))
@@ -176,6 +236,13 @@ def main(argv=None) -> int:
         default=None,
         help="comma-separated throughput keys overriding the default set",
     )
+    ap.add_argument(
+        "--profile",
+        choices=sorted(PROFILES),
+        default="serving",
+        help="key set to gate: serving (BENCH_serving.json, default) or "
+        "trace (BENCH_trace.json, machine-independent keys only)",
+    )
     args = ap.parse_args(argv)
 
     try:
@@ -187,13 +254,16 @@ def main(argv=None) -> int:
         print(f"ci_compare: cannot load inputs: {e}", file=sys.stderr)
         return 2
 
-    throughput = tuple(args.keys.split(",")) if args.keys else THROUGHPUT_KEYS
+    profile = dict(PROFILES[args.profile])
+    if args.keys:
+        profile["throughput_keys"] = tuple(args.keys.split(","))
+    if args.no_normalize:
+        profile["normalize"] = None
     failures, rows = compare(
         baseline,
         new,
         max_regression=args.max_regression,
-        throughput_keys=throughput,
-        normalize=None if args.no_normalize else DEFAULT_NORMALIZE,
+        **profile,
     )
     width = max(len(r[0]) for r in rows)
     for key, kind, b, n, verdict in rows:

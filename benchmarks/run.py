@@ -27,6 +27,7 @@ def main() -> None:
         bench_roofline,
         bench_serving,
         bench_steps,
+        trace,
     )
 
     benches = {
@@ -39,6 +40,7 @@ def main() -> None:
         "steps": bench_steps,             # paper Tables 6/7
         "roofline": bench_roofline,       # §Roofline (from dry-run artifacts)
         "serving": bench_serving,         # continuous-batching throughput/latency
+        "trace": trace,                   # 1000-req trace replay + SLO admission
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,0 +1,464 @@
+"""Trace-driven scale harness: synthetic production traces + replay driver.
+
+Three pieces, each usable on its own:
+
+  * **Generator** (:func:`gen_trace`) — a seeded synthetic production trace:
+    bursty Poisson arrivals (two-state calm/burst Markov modulation) under a
+    diurnal sinusoid, mixed constraint kinds (json_schema / regex / choice /
+    none), mixed prompt lengths and token budgets, configurable to thousands
+    of requests. Arrival times are **decode-step indices**, not wall clock,
+    so a trace replays machine-independently; the same seed yields a
+    byte-identical trace (pinned by ``tests/test_trace.py``).
+
+  * **Replay driver** (:func:`replay`) — runs ``(arrival_step, Request)``
+    pairs open-loop against a ``ServingEngine``: the arrival clock is the
+    engine's own ``decode_steps`` counter (idle grids tick in real time), and
+    the report goes beyond req/s — goodput under a decode-step SLO,
+    time-to-first-commit, decode-step makespan, page-pool pressure, and the
+    scheduler's reject/degrade counts. ``bench_serving``'s open-loop arrivals
+    arms drive through this same function.
+
+  * **Bench** (:func:`run`) — replays a >= 1000-request trace at 16 slots
+    over an oversubscribed page pool, FIFO (``slo=None``) vs SLO-aware
+    admission, and writes ``experiments/BENCH_trace.json``. The committed
+    JSON is the CI baseline: bench-smoke re-runs the trace and
+    ``benchmarks/ci_compare.py --profile trace`` band-gates the
+    machine-independent keys (matched fraction, makespan steps, reject /
+    degrade counts, drained-clean booleans).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import random
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api import Constraint, Request
+from repro.constraints import schema_for_fields
+from repro.data import synthetic
+
+# small pools on purpose: production constraint traffic is heavily repeated
+# (the LRU compiled-constraint cache is the amortization story), so a trace
+# draws patterns from a handful of templates, not fresh ones per request
+REGEX_POOL: Tuple[str, ...] = (
+    synthetic.MATH_REGEX,
+    r"(ab|ba)+",
+    r"(yes|no)( (yes|no))*",
+)
+CHOICE_POOL: Tuple[Tuple[str, ...], ...] = (
+    ("yes", "no", "maybe"),
+    ("red", "green", "blue"),
+    ("0", "1"),
+)
+KINDS = ("json_schema", "regex", "choice", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Knobs of the synthetic arrival process + request mix. All randomness
+    flows from ``seed`` through one ``random.Random`` — same config, same
+    trace, byte for byte."""
+
+    n_requests: int = 1000
+    seed: int = 0
+    # arrival process: modulated Poisson in the decode-step domain
+    rate: float = 1.2            # mean arrivals per decode step (calm)
+    burstiness: float = 4.0      # rate multiplier while in the burst state
+    p_burst: float = 0.05        # per-arrival chance of entering a burst
+    p_calm: float = 0.2          # per-arrival chance of leaving it
+    diurnal_period: float = 300.0  # steps per diurnal cycle (0 disables)
+    diurnal_amp: float = 0.5       # fractional rate swing (0..1)
+    # request mix: (kind, weight) pairs over KINDS
+    mix: Tuple[Tuple[str, int], ...] = (
+        ("json_schema", 3), ("regex", 3), ("choice", 2), ("none", 2),
+    )
+    budgets: Tuple[int, ...] = (8, 16, 32)   # max_new_tokens pool
+    prompt_words: Tuple[int, int] = (1, 6)   # uniform word-count range
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One trace record; ``payload`` is JSON-able per kind: a JSON_SCHEMAS
+    index (json_schema), a pattern string (regex), an option tuple (choice),
+    or None."""
+
+    arrival_step: int
+    kind: str
+    payload: Any
+    prompt: str
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    config: TraceConfig
+    requests: Tuple[TraceRequest, ...]
+
+    def to_jsonable(self) -> dict:
+        return {
+            "config": dataclasses.asdict(self.config),
+            "requests": [dataclasses.asdict(r) for r in self.requests],
+        }
+
+
+def gen_trace(cfg: TraceConfig) -> Trace:
+    """Deterministic synthetic trace from ``cfg.seed``.
+
+    Arrivals: exponential gaps at the current instantaneous rate — the calm
+    base rate scaled by a diurnal sinusoid and, inside a burst episode, by
+    ``burstiness``. Burst episodes switch on/off by a per-arrival Markov
+    chain, giving the heavy-tailed clumping real traffic shows instead of a
+    memoryless trickle. Steps are continuous internally and floor to integer
+    ``arrival_step`` stamps.
+    """
+    rng = random.Random(cfg.seed)
+    kinds = [k for k, _ in cfg.mix]
+    weights = [w for _, w in cfg.mix]
+    for k in kinds:
+        if k not in KINDS:
+            raise ValueError(f"unknown trace kind {k!r} (know {KINDS})")
+    out: List[TraceRequest] = []
+    t = 0.0
+    burst = False
+    lo, hi = cfg.prompt_words
+    while len(out) < cfg.n_requests:
+        rate = cfg.rate
+        if cfg.diurnal_period > 0:
+            rate *= 1.0 + cfg.diurnal_amp * math.sin(
+                2.0 * math.pi * t / cfg.diurnal_period)
+        if burst:
+            rate *= cfg.burstiness
+        t += rng.expovariate(max(rate, 1e-9))
+        burst = (rng.random() >= cfg.p_calm) if burst \
+            else (rng.random() < cfg.p_burst)
+        kind = rng.choices(kinds, weights)[0]
+        if kind == "json_schema":
+            payload: Any = rng.randrange(len(synthetic.JSON_SCHEMAS))
+        elif kind == "regex":
+            payload = rng.choice(REGEX_POOL)
+        elif kind == "choice":
+            payload = rng.choice(CHOICE_POOL)
+        else:
+            payload = None
+        words = rng.randint(lo, hi)
+        prompt = " ".join(rng.choice(synthetic.WORDS)
+                          for _ in range(words)) + " "
+        out.append(TraceRequest(
+            arrival_step=int(t),
+            kind=kind,
+            payload=payload,
+            prompt=prompt,
+            max_new_tokens=rng.choice(cfg.budgets),
+        ))
+    return Trace(config=cfg, requests=tuple(out))
+
+
+def _constraint_of(tr: TraceRequest) -> Constraint:
+    if tr.kind == "json_schema":
+        fields = synthetic.JSON_SCHEMAS[tr.payload][0]
+        return Constraint.json_schema(schema_for_fields(fields))
+    if tr.kind == "regex":
+        return Constraint.regex(tr.payload)
+    if tr.kind == "choice":
+        return Constraint.choice(list(tr.payload))
+    return Constraint.none()
+
+
+def build_requests(trace: Trace) -> List[Tuple[int, Request]]:
+    """Materialize a trace as ``(arrival_step, Request)`` pairs for
+    :func:`replay`. Fresh Request objects every call (request ids are
+    process-global; arrival stamps are filled by the driver)."""
+    return [
+        (tr.arrival_step,
+         Request(tr.prompt, _constraint_of(tr),
+                 max_new_tokens=tr.max_new_tokens,
+                 metadata={"kind": tr.kind}))
+        for tr in trace.requests
+    ]
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+
+def replay(
+    eng,
+    arrivals: Sequence[Tuple[int, Request]],
+    *,
+    step_fn=None,
+    idle_step_s: float = 1e-3,
+    slo_target_steps: Optional[int] = None,
+) -> dict:
+    """Open-loop replay of ``arrivals`` against a serving engine.
+
+    Request ``i`` is submitted once the engine's ``decode_steps`` counter
+    reaches its ``arrival_step`` — both clocks face the IDENTICAL schedule,
+    and an idle grid ticks in real time (one ``idle_step_s`` sleep per step
+    of clock) as a synchronous serving loop would. A request that came due
+    DURING a step call gets its true (interpolated) wall arrival stamp, so
+    measured latency includes the wait a coarse clock causes.
+
+    The report mixes wall-clock measures (req/s, p50/p95 latency,
+    time-to-first-commit, goodput req/s) with machine-independent step-domain
+    measures: ``makespan_steps`` (decode steps to drain the whole trace),
+    per-request step latency percentiles, and — against ``slo_target_steps``
+    — ``slo_attainment``, the fraction of all trace requests that completed
+    validly within the target. Rejected completions count in ``n`` but never
+    in goodput; scheduler/pool pressure counters are read as deltas so a
+    warmed engine reports only this replay's events.
+    """
+    sched = eng.sched
+    step = step_fn or (eng.step_token if eng.clock == "slot"
+                       else eng.step_block)
+    items = sorted(arrivals, key=lambda p: p[0])
+    eng.decode_steps = 0
+    stats0 = dataclasses.replace(sched.stats,
+                                 reject_reasons=dict(sched.stats.reject_reasons))
+    if eng.pool is not None:
+        pool0 = dataclasses.replace(eng.pool.stats)
+        eng.pool.stats.highwater = eng.pool.in_use   # replay's own peak
+    done: List = []
+    arrival_step = {}
+    finish_step = {}
+    i = 0
+    busy_steps = 0.0
+    t0 = time.perf_counter()
+    t_prev, s_prev = t0, 0
+    while i < len(items) or sched.pending or sched.busy:
+        now = time.perf_counter()
+        while i < len(items) and eng.decode_steps >= items[i][0]:
+            due, req = items[i]
+            frac = ((due - s_prev) / (eng.decode_steps - s_prev)
+                    if eng.decode_steps > s_prev else 1.0)
+            req.submit_time_s = t_prev + max(0.0, min(1.0, frac)) * (now - t_prev)
+            arrival_step[req.request_id] = due
+            eng.submit(req)
+            i += 1
+        if not (sched.pending or sched.busy):
+            time.sleep(idle_step_s)            # idle tick: wall passes for real
+            eng.decode_steps += 1
+            t_prev, s_prev = time.perf_counter(), eng.decode_steps
+            continue
+        before = eng.decode_steps
+        busy = sched.busy
+        t_prev, s_prev = time.perf_counter(), before
+        out = step()
+        for c in out:
+            finish_step[c.request_id] = eng.decode_steps
+        done.extend(out)
+        # endpoint average: a slot admitted or retired inside the step was
+        # busy for part of it and gets half credit
+        busy_steps += 0.5 * (busy + sched.busy) * (eng.decode_steps - before)
+    wall = time.perf_counter() - t0
+
+    served = [c for c in done if "rejected" not in c.metadata]
+    rejected = [c for c in done if "rejected" in c.metadata]
+    degraded = [c for c in served if "degraded" in c.metadata]
+    constrained = [c for c in served if c.matched is not None]
+    lat = [c.latency_s for c in served]
+    ttfc = [c.metadata["ttfc_s"] for c in served if "ttfc_s" in c.metadata]
+    steps_lat = [finish_step[c.request_id] - arrival_step[c.request_id]
+                 for c in served if c.request_id in arrival_step]
+    good = [c for c in served if c.valid]
+    if slo_target_steps is not None:
+        good = [c for c in good
+                if (finish_step[c.request_id] - arrival_step[c.request_id])
+                <= slo_target_steps]
+    toks = sum(len(c.tokens) for c in served)
+    metrics = dict(
+        clock=eng.clock,
+        wall_s=wall,
+        req_s=len(done) / max(wall, 1e-9),
+        tok_s=toks / max(wall, 1e-9),
+        p50_s=_pct(lat, 50),
+        p95_s=_pct(lat, 95),
+        ttfc_p50_s=_pct(ttfc, 50),
+        ttfc_p95_s=_pct(ttfc, 95),
+        n=len(done),
+        n_served=len(served),
+        n_rejected=len(rejected),
+        n_degraded=len(degraded),
+        n_valid=sum(1 for c in served if c.valid),
+        n_matched=sum(1 for c in served if c.matched),
+        matched_fraction=(sum(1 for c in constrained if c.matched)
+                          / max(1, len(constrained))),
+        decode_steps=eng.decode_steps,
+        makespan_steps=eng.decode_steps,
+        step_lat_p50=_pct(steps_lat, 50),
+        step_lat_p95=_pct(steps_lat, 95),
+        mean_busy_slots=busy_steps / max(1, eng.decode_steps),
+        # goodput: completions that are BOTH valid and (when a target is
+        # given) inside the decode-step SLO, per wall second — the number a
+        # capacity planner actually buys
+        goodput_req_s=len(good) / max(wall, 1e-9),
+        slo_target_steps=slo_target_steps,
+        slo_attainment=len(good) / max(1, len(done)),
+        drained_clean=(sched.pending == 0 and sched.busy == 0
+                       and (eng.pool is None or eng.pool.in_use == 0)),
+        sched=dict(
+            parked=sched.stats.parked - stats0.parked,
+            rejected=sched.stats.rejected - stats0.rejected,
+            degraded=sched.stats.degraded - stats0.degraded,
+            early_eos=sched.stats.early_eos - stats0.early_eos,
+            eos_fastpath=sched.stats.eos_fastpath - stats0.eos_fastpath,
+            # per-slug reject deltas: "budget_too_small" (infeasible, both
+            # arms) vs "slo" (policy sheds, SLO arm only)
+            reject_reasons={
+                k: v - stats0.reject_reasons.get(k, 0)
+                for k, v in sched.stats.reject_reasons.items()
+                if v - stats0.reject_reasons.get(k, 0)
+            },
+        ),
+    )
+    if eng.pool is not None:
+        metrics["pool"] = dict(
+            capacity=eng.pool.capacity,
+            high_water=eng.pool.high_water,
+            utilization=eng.pool.high_water / max(1, eng.pool.capacity),
+            reserve_fails=eng.pool.stats.reserve_fails - pool0.reserve_fails,
+            in_use_at_drain=eng.pool.in_use,
+        )
+    return metrics
+
+
+def warm_engine(eng, warmup: Sequence[Request]) -> Tuple[Any, float]:
+    """Drain a few requests through ``eng`` to compile its step/commit
+    variants, then zero its step counter. Returns ``(step_fn, step_s)`` where
+    ``step_s`` is the calibrated idle-tick duration (median wall per decode
+    step over the compile-free tail of the drain)."""
+    step = eng.step_token if eng.clock == "slot" else eng.step_block
+    half = max(1, len(warmup) // 2)
+    for r in warmup[:half]:
+        eng.submit(r)
+    step()
+    for r in warmup[half:]:
+        eng.submit(r)
+    ticks = []
+    while eng.sched.pending or eng.sched.busy:
+        t0, s0 = time.perf_counter(), eng.decode_steps
+        step()
+        if eng.decode_steps > s0:
+            ticks.append((time.perf_counter() - t0) / (eng.decode_steps - s0))
+    eng.decode_steps = 0
+    step_s = float(np.median(ticks[len(ticks) // 2:])) if ticks else 1e-3
+    return step, step_s
+
+
+# ---- the trace bench -------------------------------------------------------
+
+BENCH_JSON = "experiments/BENCH_trace.json"
+
+
+def _bench_engine(params, cfg, scfg, tok, cache, *, n_slots, n_pages, slo):
+    from repro.serving import ServingEngine
+
+    return ServingEngine(
+        params, cfg, scfg, tok, n_slots=n_slots, max_prompt_len=32,
+        constraint_cache=cache, kv_layout="paged", page_size=8,
+        n_pages=n_pages, slo=slo,
+    )
+
+
+def run(quick: bool = True) -> None:
+    import jax
+
+    from repro.api import ConstraintCache
+    from repro.config import ServeConfig
+    from repro.configs.llada_repro import e2e_config
+    from repro.models import init_model
+    from repro.serving.slo import SLO
+    from repro.tokenizer import default_tokenizer
+
+    from .common import emit
+
+    tok = default_tokenizer()
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    # short blocks + 2 denoise steps: the CPU-feasible config that still
+    # exercises every scale mechanism (mid-block admission, parking,
+    # degrade/reject, per-request budgets 1/2/4 blocks)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=2,
+                       decode="dingo")
+    n_slots = 16
+    # oversubscribed pool: ~75% of dense parity, so bursts hit real page
+    # pressure (parking) instead of an infinite-HBM fiction
+    pages_parity = n_slots * 8 + 1          # max_len 64 / page 8 per slot
+    n_pages = int(pages_parity * 0.75)
+    # overloaded on purpose: measured service capacity is ~5 req/step
+    # (16 slots / ~3.2 steps mean service with early-EOS retirement), so a
+    # calm rate of 4.0 runs the grid near saturation and the diurnal peak
+    # (6/step) plus 4x bursts push it OVER — the queue builds during peaks,
+    # which is the regime SLO admission exists for. FIFO lets the backlog
+    # blow everyone's latency; the SLO arm degrades/sheds instead.
+    tcfg = TraceConfig(n_requests=1000 if quick else 4000, seed=0,
+                       rate=4.0, burstiness=4.0)
+    trace = gen_trace(tcfg)
+    # degrade-enabled SLO in the decode-step domain: a full-budget request
+    # costs 8 steps of service (4 blocks x 2 steps), so a 20-step target
+    # tolerates ~12 steps of queueing before shrinking budgets and starts
+    # shedding once even a request's feasibility floor cannot meet it
+    slo = SLO(target_steps=20)
+    slo_json = dict(target_steps=slo.target_steps, degrade=slo.degrade,
+                    min_blocks=slo.min_blocks)
+
+    cache = ConstraintCache()
+    arms = {}
+    for name, arm_slo in (("fifo", None), ("slo", slo)):
+        eng = _bench_engine(params, cfg, scfg, tok, cache,
+                            n_slots=n_slots, n_pages=n_pages, slo=arm_slo)
+        step, step_s = warm_engine(
+            eng, [r for _, r in build_requests(trace)[:8]])
+        arrivals = build_requests(trace)
+        arms[name] = replay(eng, arrivals, step_fn=step, idle_step_s=step_s,
+                            slo_target_steps=slo.target_steps)
+    fifo, slo_arm = arms["fifo"], arms["slo"]
+
+    emit("trace_fifo_goodput", 1e6 / max(fifo["goodput_req_s"], 1e-9),
+         f"{fifo['goodput_req_s']:.2f} good req/s of {fifo['req_s']:.2f}, "
+         f"p95 {fifo['p95_s']:.2f}s, makespan {fifo['makespan_steps']} steps, "
+         f"pool util {fifo['pool']['utilization']:.2f}")
+    emit("trace_slo_goodput", 1e6 / max(slo_arm["goodput_req_s"], 1e-9),
+         f"{slo_arm['goodput_req_s']:.2f} good req/s, attainment "
+         f"{slo_arm['slo_attainment']:.2f} vs {fifo['slo_attainment']:.2f} "
+         f"fifo; {slo_arm['n_rejected']} rejected "
+         f"{slo_arm['n_degraded']} degraded")
+
+    os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "bench": "trace",
+            "created_unix": time.time(),
+            "config": dict(
+                trace=dataclasses.asdict(tcfg), slo=slo_json,
+                n_slots=n_slots, n_pages=n_pages, page_size=8,
+                gen_len=scfg.gen_len, block=scfg.block_size,
+                steps_per_block=scfg.diffusion_steps_per_block,
+                decode=scfg.decode, quick=quick,
+            ),
+            "fifo": fifo,
+            "slo": slo_arm,
+            # machine-independent gate keys (benchmarks/ci_compare.py
+            # --profile trace): everything here depends only on the seeded
+            # trace + scheduler policy, never on runner speed
+            "gates": {
+                "fifo_matched_fraction": fifo["matched_fraction"],
+                "fifo_makespan_steps": fifo["makespan_steps"],
+                "fifo_parked": fifo["sched"]["parked"],
+                "fifo_rejected": fifo["n_rejected"],
+                "slo_matched_fraction": slo_arm["matched_fraction"],
+                "slo_makespan_steps": slo_arm["makespan_steps"],
+                "slo_attainment": slo_arm["slo_attainment"],
+                # policy sheds only — budget-infeasible rejects sit in
+                # fifo_rejected and happen identically in both arms
+                "slo_rejected":
+                    slo_arm["sched"]["reject_reasons"].get("slo", 0),
+                "slo_degraded": slo_arm["n_degraded"],
+            },
+            "fifo_drained_clean": fifo["drained_clean"],
+            "slo_drained_clean": slo_arm["drained_clean"],
+        }, f, indent=1)

@@ -64,9 +64,20 @@ __all__ = [
     "Request",
     "Completion",
     "Engine",
+    "SLO",
 ]
 
 _req_counter = itertools.count()
+
+
+def __getattr__(name):
+    # lazy: repro.serving imports this module at class-definition time, so a
+    # top-level `from repro.serving.slo import SLO` here would be circular
+    if name == "SLO":
+        from repro.serving.slo import SLO
+
+        return SLO
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -82,6 +93,9 @@ class Request:
     metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # filled by the engine at submit time (host wall-clock, perf_counter domain)
     submit_time_s: Optional[float] = None
+    # filled by the scheduler at submit time: its decode-step clock reading,
+    # the machine-independent arrival stamp SLO admission projects from
+    submit_step: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -125,6 +139,7 @@ class Engine:
         n_pages: Optional[int] = None,
         clock: str = "slot",
         force_closure: bool = True,
+        slo=None,
         seed: int = 0,
         observer=None,
     ):
@@ -148,10 +163,12 @@ class Engine:
         # every entry is 1 when per-block live swaps are pure data
         self.last_decode_traces: List[int] = []
         self._seed = seed
+        # SLO-aware admission for serve mode (repro.serving.slo.SLO, or None
+        # for the exact FIFO admission of before — the kill-switch)
         self._serving_kwargs = dict(
             n_slots=n_slots, max_prompt_len=max_prompt_len,
             kv_layout=kv_layout, page_size=page_size, n_pages=n_pages,
-            clock=clock, observer=observer,
+            clock=clock, slo=slo, observer=observer,
         )
         self._serving = None
 

@@ -3,6 +3,8 @@
 Layers:
 
     paged      fixed-size KV page allocator (reserve/alloc, trash page 0)
+    slo        SLO-aware admission policy (decode-step projection from the
+               distance-to-accept tables; degrade-before-reject)
     scheduler  slot-based continuous batching, (Q, C)-bucketed table stacking
     engine     serve loop driving make_serve_step; yields completions
                (kv_layout='dense' per-slot grid or 'paged' shared page pool)
@@ -23,6 +25,7 @@ from repro import constraints as _constraints
 from .engine import ServingEngine
 from .paged import PagePool, PagesExhausted, PoolStats
 from .scheduler import ContinuousBatchingScheduler, Slot, qc_bucket
+from .slo import SLO
 
 # Old import paths (pre repro.api/repro.constraints): same objects, resolved
 # through __getattr__ so `from repro.serving import Constraint` keeps working
@@ -42,7 +45,7 @@ _DEPRECATED = {
 
 __all__ = [
     "ServingEngine", "PagePool", "PagesExhausted", "PoolStats",
-    "ContinuousBatchingScheduler", "Slot", "qc_bucket",
+    "ContinuousBatchingScheduler", "SLO", "Slot", "qc_bucket",
     *_DEPRECATED,
 ]
 

@@ -73,6 +73,7 @@ from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
 from .scheduler import ContinuousBatchingScheduler, Slot
+from .slo import SLO
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -169,6 +170,7 @@ class ServingEngine:
         n_pages: Optional[int] = None,
         clock: str = "slot",
         eos_fastpath: bool = True,
+        slo: Optional[SLO] = None,
         observer=None,
     ):
         if cfg.frontend is not None:
@@ -220,15 +222,16 @@ class ServingEngine:
             # registry (never clobber an enabled observer with the null one)
             self.cache.observer = self.obs
         self.eos_fastpath = eos_fastpath
+        self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
         self.sched = ContinuousBatchingScheduler(
             n_slots, self.cache, tokenizer,
             block_size=d, decode=scfg.decode, max_blocks=self.max_blocks,
             page_pool=self.pool,
             prompt_len_fn=self._prompt_len if self.pool is not None else None,
             eos_fastpath=eos_fastpath,
+            slo=slo, steps_per_block=len(self._commit_deltas),
             observer=self.obs,
         )
-        self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
         self._rng = jax.random.PRNGKey(seed)
         if kv_layout == "paged":
             self.caches = init_paged_caches(
@@ -455,6 +458,16 @@ class ServingEngine:
         for s in self.sched.active_slots:
             self._ensure_slot_pages(s)
 
+    def _stamp_first_commit(self) -> None:
+        """Time-to-first-commit: stamp every live slot that just ran its first
+        decode micro-step (the earliest point tokens of its block exist). One
+        clock read + a short host loop per step; idempotent via the 0.0
+        sentinel, which ``_park`` resets."""
+        now = time.perf_counter()
+        for s in self.sched.active_slots:
+            if s.first_commit_t == 0.0:
+                s.first_commit_t = now
+
     def _advance_block_spans(self, slots) -> None:
         """Trace-mode bookkeeping at a row's own block boundary: close the
         finished block span and open the next (``blocks_done`` was already
@@ -490,7 +503,7 @@ class ServingEngine:
             committed = jnp.zeros((b, d), bool)
             valid = jnp.ones((b,), bool)
             qf = jnp.zeros((b,), jnp.int32)
-            for delta in self._commit_deltas:
+            for it, delta in enumerate(self._commit_deltas):
                 self._rng, sub = jax.random.split(self._rng)
                 block_tokens, committed, valid, qf, self.caches = self._step(
                     self.params, self.caches, block_tokens, committed, carry,
@@ -498,6 +511,8 @@ class ServingEngine:
                     n_commit_arg=jnp.asarray(delta, jnp.int32),
                     page_tables_arg=page_tables,
                 )
+                if it == 0:
+                    self._stamp_first_commit()
         with obs.phase("serve_commit", self._trk_engine):
             self.caches = self._commit_block(
                 self.params, self.caches, block_tokens, jnp.asarray(sched.starts()),
@@ -505,6 +520,7 @@ class ServingEngine:
             )
         self.blocks_run += 1
         self.decode_steps += len(self._commit_deltas)
+        sched.step_clock += len(self._commit_deltas)
         if obs.enabled:
             obs.count("decode_steps_total", len(self._commit_deltas))
             obs.count("blocks_total")
@@ -576,9 +592,11 @@ class ServingEngine:
                 page_tables_arg=page_tables, row_live_arg=live_dev,
             )
         self.decode_steps += 1
+        sched.step_clock += 1
         if obs.enabled:
             obs.count("decode_steps_total")
         self._step_idx[live] += 1
+        self._stamp_first_commit()
 
         # a row's boundary: its own schedule ran out (the schedule commits
         # exactly d positions over t_steps, so the committed mask is full
@@ -647,6 +665,17 @@ class ServingEngine:
             matched = None
         queue_s = slot.admit_time_s - (req.submit_time_s or slot.admit_time_s)
         decode_s = now - slot.decode_t0
+        # time-to-first-commit: submission -> end of the slot's first decode
+        # micro-step (queue wait + prefill + one step), the serving-latency
+        # half of goodput the trace bench reports alongside p95
+        ttfc_s = (slot.first_commit_t or now) - (req.submit_time_s
+                                                 or slot.admit_time_s)
+        meta = dict(req.metadata, queue_s=queue_s,
+                    prefill_s=slot.prefill_s, decode_s=decode_s,
+                    blocks=slot.blocks_done, decode_steps=slot.steps,
+                    ttfc_s=ttfc_s)
+        if slot.degraded is not None:
+            meta["degraded"] = slot.degraded
         out = Completion(
             request_id=req.request_id,
             text=self.tok.decode(tokens),
@@ -662,19 +691,18 @@ class ServingEngine:
             latency_s=now - (req.submit_time_s or slot.admit_time_s),
             queue_s=queue_s,
             cache_hit=slot.cache_hit,
-            metadata=dict(req.metadata, queue_s=queue_s,
-                          prefill_s=slot.prefill_s, decode_s=decode_s,
-                          blocks=slot.blocks_done, decode_steps=slot.steps),
+            metadata=meta,
         )
         if obs.enabled:
             obs.count("requests_completed_total")
             obs.observe("request_latency_s", out.latency_s)
             obs.observe("serve_decode_s", decode_s)
+            obs.observe("serve_ttfc_s", ttfc_s)
             obs.record_request(
                 request_id=req.request_id, latency_s=out.latency_s,
                 queue_s=queue_s, prefill_s=slot.prefill_s, decode_s=decode_s,
                 blocks=slot.blocks_done, decode_steps=slot.steps,
-                valid=out.valid, tokens=len(slot.tokens),
+                valid=out.valid, tokens=len(slot.tokens), ttfc_s=ttfc_s,
             )
             tr = self._req_track.pop(req.request_id, None)
             if tr is not None:

@@ -49,6 +49,7 @@ from repro.core.dingo import NEG_INF
 from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
+from .slo import DEGRADE, REJECT, SLO, min_feasible_blocks
 
 
 @dataclasses.dataclass
@@ -61,6 +62,7 @@ class SchedStats:
     admitted: int = 0
     parked: int = 0            # pushed back to the queue head on page pressure
     rejected: int = 0
+    degraded: int = 0          # admitted with an SLO-shrunk block budget
     retired: int = 0
     early_eos: int = 0         # whole-block EOS padding from an accepting state
     eos_fastpath: int = 0      # forced-EOS instant retirement (skipped blocks)
@@ -85,9 +87,11 @@ class Slot:
     steps: int = 0
     tokens: List[int] = dataclasses.field(default_factory=list)
     valid: bool = True
+    degraded: Optional[str] = None  # SLO degrade reason (None: full budget)
     admit_time_s: float = 0.0
     prefill_s: float = 0.0        # prompt prefill wall (engine stamps at admit)
     decode_t0: float = 0.0        # perf_counter at prefill end (decode start)
+    first_commit_t: float = 0.0   # perf_counter after the slot's first step
 
     @property
     def free(self) -> bool:
@@ -107,6 +111,8 @@ class ContinuousBatchingScheduler:
         page_pool: Optional[PagePool] = None,
         prompt_len_fn=None,
         eos_fastpath: bool = True,
+        slo: Optional[SLO] = None,
+        steps_per_block: int = 1,
         observer=NULL_OBSERVER,
     ):
         if n_slots < 1:
@@ -114,6 +120,14 @@ class ContinuousBatchingScheduler:
         if page_pool is not None and prompt_len_fn is None:
             raise ValueError("page_pool admission needs a prompt_len_fn")
         self.eos_fastpath = eos_fastpath
+        # SLO-aware admission (repro.serving.slo). slo=None is the
+        # kill-switch: FIFO admission exactly as before. step_clock counts
+        # decode steps actually run — the engine advances it (+1 per
+        # micro-step under per-slot clocks, +steps_per_block per lockstep
+        # block) so projections live in a machine-independent step domain.
+        self.slo = slo
+        self.steps_per_block = max(1, steps_per_block)
+        self.step_clock = 0
         self.observer = observer
         self.stats = SchedStats()
         self.n_slots = n_slots
@@ -148,6 +162,8 @@ class ContinuousBatchingScheduler:
     def submit(self, request: Request) -> int:
         if request.submit_time_s is None:
             request.submit_time_s = time.perf_counter()
+        if request.submit_step is None:
+            request.submit_step = self.step_clock
         self.queue.append(request)
         self.stats.submitted += 1
         self.observer.count("sched_submitted_total")
@@ -203,6 +219,24 @@ class ContinuousBatchingScheduler:
                             f"{entry.min_tokens} tokens, budget too small",
                             "budget_too_small")
                     continue
+                degraded = None
+                if self.slo is not None:
+                    # project decode-step debt from the distance-to-accept
+                    # table before reserving pages: a degraded budget shrinks
+                    # the page reservation below too
+                    waited = self.step_clock - (req.submit_step or 0)
+                    floor = (min_feasible_blocks(entry.min_tokens, d)
+                             if req.constraint.constrained else 1)
+                    dec = self.slo.decide(
+                        waited_steps=waited, blocks=blocks,
+                        floor_blocks=min(floor, blocks),
+                        steps_per_block=self.steps_per_block)
+                    if dec.action == REJECT:
+                        _reject(req, dec.reason, "slo")
+                        continue
+                    if dec.action == DEGRADE:
+                        blocks = dec.blocks
+                        degraded = dec.reason
                 if pool is not None:
                     need = -(-(self.prompt_len_fn(req) + blocks * d)
                              // pool.page_size)
@@ -235,7 +269,12 @@ class ContinuousBatchingScheduler:
                 slot.steps = 0
                 slot.tokens = []
                 slot.valid = True
+                slot.degraded = degraded
                 slot.admit_time_s = time.perf_counter()
+                slot.first_commit_t = 0.0
+                if degraded is not None:
+                    self.stats.degraded += 1
+                    self.observer.count("sched_degraded_total")
                 admitted.append(slot)
                 break
         if admitted:
@@ -264,6 +303,8 @@ class ContinuousBatchingScheduler:
         slot.blocks_total = 0
         slot.tokens = []
         slot.valid = True
+        slot.degraded = None
+        slot.first_commit_t = 0.0
 
     # ---- batched tables / DP carry --------------------------------------
     def bucket(self) -> Tuple[int, int]:

@@ -1,0 +1,156 @@
+"""SLO-aware admission policy for the continuous-batching scheduler.
+
+The scheduler already computes, per compiled constraint, the DINGO
+distance-to-accept table (``CompiledConstraint.dist`` — the paper's DP run
+backwards from the accepting states). ``dist[start]`` is the shortest match
+in tokens, which bounds from below the number of decode *blocks* a request
+can possibly retire in. Admission can therefore **project** a candidate's
+decode-step debt before spending a single model step on it:
+
+    projected_steps = waited_steps + blocks * steps_per_block
+
+where ``waited_steps`` is how many decode steps the request has already sat
+in the queue (the scheduler's ``step_clock`` minus the request's
+``submit_step`` stamp) and ``blocks * steps_per_block`` is the service debt
+of the block budget it is asking for.
+
+Policy, in order (degrade-before-reject):
+
+  1. **admit** unchanged when the projection fits ``target_steps``;
+  2. **degrade** — shrink the block budget to the largest count that still
+     fits the SLO, but never below the constraint's feasibility floor
+     ``ceil(dist[start] / block_size)`` (a degraded request must still be
+     able to close its match: budget-aware end-state forcing guarantees a
+     shortest-path completion within the floor);
+  3. **reject** with a deterministic reason string when even the floor
+     blows the target.
+
+Everything here is in the decode-step domain — integers, no wall clock —
+so decisions are machine-independent and replayable: the same trace against
+the same SLO produces the same admit/degrade/reject sequence on any host,
+which is what lets ``benchmarks/ci_compare.py`` band-gate the reject and
+degrade counts of the committed trace baseline.
+
+``slo=None`` everywhere (engine, scheduler, ``repro.api.Engine``) is the
+kill-switch: admission is exactly the FIFO policy of PR 4/5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+ADMIT = "admit"
+DEGRADE = "degrade"
+REJECT = "reject"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Decode-step service-level objective for admission.
+
+    ``target_steps``: a request's projected completion (queue wait so far +
+    block budget * steps per block, in decode steps) must not exceed this.
+    ``degrade``: allow shrinking the block budget to fit (else straight to
+    reject). ``min_blocks``: never degrade below this many blocks even when
+    the constraint's own floor is smaller.
+    """
+
+    target_steps: int
+    degrade: bool = True
+    min_blocks: int = 1
+
+    def decide(
+        self,
+        *,
+        waited_steps: int,
+        blocks: int,
+        floor_blocks: int,
+        steps_per_block: int,
+    ) -> "Decision":
+        return decide(
+            self,
+            waited_steps=waited_steps,
+            blocks=blocks,
+            floor_blocks=floor_blocks,
+            steps_per_block=steps_per_block,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    action: str                  # ADMIT | DEGRADE | REJECT
+    blocks: int                  # block budget to run with (ADMIT/DEGRADE)
+    reason: Optional[str] = None  # deterministic human-readable cause
+
+
+def min_feasible_blocks(min_tokens: int, block_size: int) -> int:
+    """Smallest block budget that can still close a match whose shortest
+    accept path is ``min_tokens`` tokens (>= 1 even for the empty match —
+    a slot always decodes at least one block)."""
+    return max(1, -(-min_tokens // block_size))
+
+
+def projected_steps(waited_steps: int, blocks: int, steps_per_block: int) -> int:
+    """Decode-step debt of admitting now with ``blocks`` blocks of budget."""
+    return waited_steps + blocks * steps_per_block
+
+
+def decide(
+    slo: SLO,
+    *,
+    waited_steps: int,
+    blocks: int,
+    floor_blocks: int,
+    steps_per_block: int,
+) -> Decision:
+    """Pure admission math (unit-tested directly): project, then
+    admit / degrade / reject in that order.
+
+    ``floor_blocks`` is the constraint's feasibility floor
+    (:func:`min_feasible_blocks` of its distance-to-accept); callers must
+    pass ``floor_blocks <= blocks`` (infeasible budgets are rejected before
+    the SLO is consulted).
+    """
+    target = slo.target_steps
+    proj = projected_steps(waited_steps, blocks, steps_per_block)
+    if proj <= target:
+        return Decision(ADMIT, blocks)
+    if not slo.degrade:
+        return Decision(
+            REJECT, 0,
+            f"slo reject: projected {proj} steps "
+            f"({blocks} blocks x {steps_per_block} steps/block after waiting "
+            f"{waited_steps}) > target {target}",
+        )
+    floor = max(floor_blocks, slo.min_blocks)
+    if floor < blocks:
+        # largest budget whose projection still fits, clamped to the floor
+        fit = (target - waited_steps) // steps_per_block
+        if fit >= floor:
+            keep = min(blocks, fit)
+            return Decision(
+                DEGRADE, keep,
+                f"slo degrade: budget {blocks} -> {keep} blocks "
+                f"(projected {proj} > target {target} steps, "
+                f"waited {waited_steps})",
+            )
+        # even the floor blows the target: fall through to reject
+    floor_proj = projected_steps(waited_steps, floor, steps_per_block)
+    return Decision(
+        REJECT, 0,
+        f"slo reject: needs >= {floor_proj} steps "
+        f"({floor} blocks x {steps_per_block} steps/block after waiting "
+        f"{waited_steps}) > target {target}",
+    )
+
+
+__all__ = [
+    "ADMIT",
+    "DEGRADE",
+    "REJECT",
+    "SLO",
+    "Decision",
+    "decide",
+    "min_feasible_blocks",
+    "projected_steps",
+]

@@ -19,6 +19,7 @@ API_ALL = [
     "Request",
     "Completion",
     "Engine",
+    "SLO",
 ]
 
 CONSTRAINTS_ALL = [

@@ -185,6 +185,132 @@ def test_main_exit_codes(tmp_path):
     assert main([str(tmp_path / "nope.json"), str(n)]) == 2
 
 
+# ---------------------------------------------------------------------------
+# trace profile (BENCH_trace.json, ISSUE 7)
+# ---------------------------------------------------------------------------
+def _trace_doc(makespan=800, rejected=40, degraded=25, attainment=0.9):
+    return {
+        "fifo": {
+            "req_s": 50.0,
+            "goodput_req_s": 45.0,
+            "p95_s": 0.4,
+            "ttfc_p50_s": 0.05,
+        },
+        "slo": {"goodput_req_s": 48.0, "p95_s": 0.3, "ttfc_p50_s": 0.04},
+        "gates": {
+            "fifo_matched_fraction": 1.0,
+            "fifo_makespan_steps": makespan,
+            "fifo_parked": 80,
+            "fifo_rejected": 200,
+            "slo_matched_fraction": 1.0,
+            "slo_makespan_steps": makespan - 60,
+            "slo_attainment": attainment,
+            "slo_rejected": rejected,
+            "slo_degraded": degraded,
+        },
+        "fifo_drained_clean": True,
+        "slo_drained_clean": True,
+    }
+
+
+def _trace_compare(base, new, tol=0.2):
+    from benchmarks.ci_compare import PROFILES
+
+    return compare(base, new, max_regression=tol, **PROFILES["trace"])
+
+
+def test_trace_profile_identical_docs_pass():
+    failures, rows = _trace_compare(_trace_doc(), _trace_doc())
+    assert failures == []
+    gated = [r for r in rows if "report-only" not in r[-1]]
+    assert all(r[-1] == "ok" for r in gated if r[2] is not None)
+
+
+def test_trace_profile_leak_and_soundness_gate_tightly():
+    """drained_clean (no slot/page leak) and matched_fraction are
+    deterministic booleans/fractions: any drop fails."""
+    new = _trace_doc()
+    new["slo_drained_clean"] = False            # page or slot leak at drain
+    failures, _ = _trace_compare(_trace_doc(), new)
+    assert any("slo_drained_clean" in f for f in failures)
+    new = _trace_doc()
+    new["gates"]["fifo_matched_fraction"] = 0.7  # completions stopped matching
+    failures, _ = _trace_compare(_trace_doc(), new)
+    assert any("fifo_matched_fraction" in f for f in failures)
+
+
+def test_trace_profile_band_gates_two_sided():
+    """Makespan going DOWN passes (an improvement a floor would punish);
+    silent inflation fails; reject/degrade counts fail on drift EITHER way
+    (a policy change must move the committed baseline explicitly)."""
+    base = _trace_doc()
+    failures, _ = _trace_compare(base, _trace_doc(makespan=700))
+    assert failures == []                        # -12.5%: faster drain, fine
+    failures, _ = _trace_compare(base, _trace_doc(makespan=1100))
+    assert any("fifo_makespan_steps" in f for f in failures)
+    for rejected in (10, 80):                    # -75% / +100% vs 40
+        failures, _ = _trace_compare(base, _trace_doc(rejected=rejected))
+        assert any("slo_rejected" in f for f in failures), rejected
+    # zero baseline means "stay near zero"
+    base0 = _trace_doc(degraded=0)
+    failures, _ = _trace_compare(base0, _trace_doc(degraded=0))
+    assert failures == []
+    failures, _ = _trace_compare(base0, _trace_doc(degraded=30))
+    assert any("slo_degraded" in f for f in failures)
+
+
+def test_trace_profile_wall_clock_reports_but_never_gates():
+    """Goodput/latency/TTFC are wall-clock: a different runner speed must not
+    fail the gate, only show in the report."""
+    new = _trace_doc()
+    new["fifo"]["goodput_req_s"] = 5.0           # 9x slower runner
+    new["slo"]["p95_s"] = 3.0
+    failures, rows = _trace_compare(_trace_doc(), new)
+    assert failures == []
+    assert any(r[0] == "fifo.goodput_req_s" and "report-only" in r[-1] for r in rows)
+
+
+def test_trace_profile_additive_and_dropped():
+    base, new = _trace_doc(), _trace_doc()
+    del base["gates"]["slo_degraded"]  # older baseline: skip
+    failures, rows = _trace_compare(base, new)
+    assert failures == []
+    assert any(r[0] == "gates.slo_degraded" and "skipped" in r[-1] for r in rows)
+    del new["gates"]["slo_rejected"]  # bench dropped a key: fail
+    failures, _ = _trace_compare(base, new)
+    assert any("slo_rejected" in f and "missing from new run" in f for f in failures)
+
+
+def test_main_profile_trace_exit_codes(tmp_path):
+    b, n = tmp_path / "base.json", tmp_path / "new.json"
+    b.write_text(json.dumps(_trace_doc()))
+    n.write_text(json.dumps(_trace_doc()))
+    assert main([str(b), str(n), "--profile", "trace"]) == 0
+    n.write_text(json.dumps(_trace_doc(makespan=1200)))
+    assert main([str(b), str(n), "--profile", "trace", "--max-regression", "0.2"]) == 1
+    # the serving profile knows nothing of trace keys: same docs gate green
+    assert main([str(b), str(n)]) == 0
+
+
+def test_trace_gate_passes_on_committed_baseline():
+    """The committed experiments/BENCH_trace.json must gate green against
+    itself — the exact check CI bench-smoke runs with --profile trace."""
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "BENCH_trace.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed trace baseline")
+    with open(path) as f:
+        doc = json.load(f)
+    failures, _ = _trace_compare(doc, doc)
+    assert failures == []
+    # the keys the ISSUE's acceptance rests on are really in the artifact
+    assert doc["fifo_drained_clean"] is True
+    assert doc["slo_drained_clean"] is True
+    assert doc["config"]["trace"]["n_requests"] >= 1000
+    assert doc["gates"]["fifo_matched_fraction"] == 1.0
+    assert doc["gates"]["slo_rejected"] + doc["gates"]["slo_degraded"] > 0
+
+
 def test_gate_passes_on_committed_baseline():
     """The committed experiments/BENCH_serving.json must gate green against
     itself — the exact check the CI bench-smoke job runs."""

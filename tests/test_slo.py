@@ -1,0 +1,221 @@
+"""SLO-aware admission (repro.serving.slo): pure decode-step projection math,
+degrade-before-reject ordering, deterministic reject/degrade reason strings in
+``Completion.metadata``, and the ``slo=None`` kill-switch pinned token-identical
+to a never-binding SLO across both clocks and both KV layouts."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import Constraint
+from repro.models import init_model
+from repro.api import Request
+from repro.serving import SLO, ServingEngine
+from repro.serving.slo import (
+    ADMIT,
+    DEGRADE,
+    REJECT,
+    decide,
+    min_feasible_blocks,
+    projected_steps,
+)
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+# ---------------------------------------------------------------------------
+# pure admission math (no model, no jax)
+# ---------------------------------------------------------------------------
+def test_min_feasible_blocks():
+    assert min_feasible_blocks(0, 8) == 1      # empty match still decodes a block
+    assert min_feasible_blocks(1, 8) == 1
+    assert min_feasible_blocks(8, 8) == 1
+    assert min_feasible_blocks(9, 8) == 2
+    assert min_feasible_blocks(50, 8) == 7
+
+
+def test_projected_steps_is_wait_plus_service():
+    assert projected_steps(0, 4, 2) == 8
+    assert projected_steps(10, 4, 2) == 18
+    assert projected_steps(3, 1, 5) == 8
+
+
+def test_decide_admits_within_target():
+    slo = SLO(target_steps=8)
+    d = decide(slo, waited_steps=0, blocks=4, floor_blocks=1, steps_per_block=2)
+    assert (d.action, d.blocks, d.reason) == (ADMIT, 4, None)
+    # exactly at the target is still an admit (<=, not <)
+    d = decide(slo, waited_steps=4, blocks=2, floor_blocks=1, steps_per_block=2)
+    assert d.action == ADMIT and d.blocks == 2
+
+
+def test_decide_degrades_before_rejecting():
+    """Over target but the floor fits: shrink the budget, don't reject."""
+    slo = SLO(target_steps=8)
+    d = decide(slo, waited_steps=0, blocks=8, floor_blocks=2, steps_per_block=2)
+    assert d.action == DEGRADE
+    assert d.blocks == 4                      # largest fit: 8 steps / 2 per block
+    assert d.reason == (
+        "slo degrade: budget 8 -> 4 blocks "
+        "(projected 16 > target 8 steps, waited 0)"
+    )
+    # queue wait eats into the budget that still fits
+    d = decide(slo, waited_steps=3, blocks=8, floor_blocks=2, steps_per_block=2)
+    assert d.action == DEGRADE and d.blocks == 2   # (8-3)//2 = 2 == floor
+    # degraded budget never exceeds the asked-for budget
+    d = decide(slo, waited_steps=0, blocks=3, floor_blocks=1, steps_per_block=1)
+    assert d.action == ADMIT and d.blocks == 3
+
+
+def test_decide_rejects_when_floor_blows_target():
+    slo = SLO(target_steps=8)
+    d = decide(slo, waited_steps=0, blocks=8, floor_blocks=6, steps_per_block=2)
+    assert d.action == REJECT and d.blocks == 0
+    assert d.reason == (
+        "slo reject: needs >= 12 steps "
+        "(6 blocks x 2 steps/block after waiting 0) > target 8"
+    )
+    # long wait alone pushes even a 1-block floor over the target
+    d = decide(slo, waited_steps=9, blocks=4, floor_blocks=1, steps_per_block=2)
+    assert d.action == REJECT
+    assert "after waiting 9" in d.reason
+
+
+def test_decide_degrade_false_rejects_with_full_projection():
+    """degrade=False skips shrinking: the reason quotes the FULL budget's
+    projection, not the floor's (which might fit)."""
+    slo = SLO(target_steps=10, degrade=False)
+    d = decide(slo, waited_steps=0, blocks=4, floor_blocks=1, steps_per_block=4)
+    assert d.action == REJECT
+    assert d.reason == (
+        "slo reject: projected 16 steps "
+        "(4 blocks x 4 steps/block after waiting 0) > target 10"
+    )
+
+
+def test_decide_min_blocks_raises_floor():
+    slo = SLO(target_steps=6, min_blocks=3)
+    # fit = 6//2 = 3 >= raised floor -> degrade to 3, not the constraint's 1
+    d = decide(slo, waited_steps=0, blocks=8, floor_blocks=1, steps_per_block=2)
+    assert d.action == DEGRADE and d.blocks == 3
+    # raised floor no longer fits once waited
+    d = decide(slo, waited_steps=1, blocks=8, floor_blocks=1, steps_per_block=2)
+    assert d.action == REJECT and "3 blocks" in d.reason
+
+
+def test_slo_decide_method_delegates():
+    got = SLO(target_steps=4).decide(
+        waited_steps=0, blocks=4, floor_blocks=1, steps_per_block=2)
+    want = decide(SLO(target_steps=4),
+                  waited_steps=0, blocks=4, floor_blocks=1, steps_per_block=2)
+    assert got == want
+
+
+def test_api_exports_slo():
+    import repro.api
+
+    assert "SLO" in repro.api.__all__
+    assert repro.api.SLO is SLO
+
+
+# ---------------------------------------------------------------------------
+# engine-level: reasons land in Completion.metadata, counts in stats/obs
+# ---------------------------------------------------------------------------
+def _mk_engine(tok, slo, **kw):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=1)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=16, block_size=8, diffusion_steps_per_block=2,
+                       decode="dingo")
+    return ServingEngine(params, cfg, scfg, tok, n_slots=2, max_prompt_len=16,
+                         slo=slo, **kw)
+
+
+def _stream():
+    return [
+        Request("a ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16),
+        Request("b ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8),
+        Request("c ", Constraint.none(), max_new_tokens=8),
+        Request("d ", Constraint.regex(r"(yes|no)+"), max_new_tokens=16),
+    ]
+
+
+def test_engine_slo_zero_target_rejects_all_with_reasons(tok):
+    eng = _mk_engine(tok, SLO(target_steps=0))
+    done = list(eng.serve(_stream()))
+    assert len(done) == 4
+    for c in done:
+        assert not c.valid and c.blocks == 0
+        assert c.metadata["rejected"].startswith("slo reject:")
+    assert eng.sched.stats.reject_reasons == {"slo": 4}
+    assert eng.sched.stats.degraded == 0
+
+
+def test_engine_slo_degrades_and_completions_stay_valid(tok):
+    """A tight-but-nonzero target degrades multi-block budgets; degraded
+    completions still close their match (budget-aware end-state forcing) and
+    carry the deterministic degrade reason in metadata."""
+    import re
+
+    from repro.obs import Observer
+
+    reqs = _stream()
+    by_id = {r.request_id: r for r in reqs}
+    # T=2 steps/block: a 2-block budget projects 4 steps > 2 -> degrade to 1
+    eng = _mk_engine(tok, SLO(target_steps=2), observer=Observer())
+    done = {c.request_id: c for c in eng.serve(reqs)}
+    assert len(done) == 4
+    degraded = [c for c in done.values() if "degraded" in c.metadata]
+    served = [c for c in done.values() if "rejected" not in c.metadata]
+    assert degraded, "tight SLO should have degraded some budget"
+    assert eng.sched.stats.degraded == len(degraded)
+    for c in degraded:
+        assert c.metadata["degraded"].startswith("slo degrade: budget ")
+        assert c.blocks == 1
+    for c in served:
+        assert c.valid
+        if c.matched is not None:
+            assert c.matched
+            assert re.fullmatch(by_id[c.request_id].constraint.pattern, c.text)
+    for c in done.values():
+        if "rejected" in c.metadata:
+            assert c.metadata["rejected"].startswith("slo reject:")
+    # observer counted every degrade
+    assert eng.obs.snapshot().get("sched_degraded_total", 0) == len(degraded)
+
+
+def test_engine_ttfc_recorded(tok):
+    eng = _mk_engine(tok, None)
+    done = list(eng.serve(_stream()[:2]))
+    for c in done:
+        assert 0.0 <= c.metadata["ttfc_s"] <= c.latency_s + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# kill-switch differential: slo=None is token-identical to a never-binding SLO
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("clock", ["slot", "block"])
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_slo_none_token_identical_to_never_binding(tok, clock, kv_layout):
+    kw = dict(clock=clock, kv_layout=kv_layout)
+    if kv_layout == "paged":
+        kw.update(page_size=8, n_pages=2 * 4 + 1)
+    arms = {}
+    for name, slo in (("base", None), ("wide", SLO(target_steps=10**9))):
+        reqs = _stream()                 # fresh ids per arm: key on submit order
+        order = {r.request_id: i for i, r in enumerate(reqs)}
+        arms[name] = {order[c.request_id]: c
+                      for c in _mk_engine(tok, slo, **kw).serve(reqs)}
+    base, wide = arms["base"], arms["wide"]
+    assert base.keys() == wide.keys()
+    for i in base:
+        assert base[i].tokens == wide[i].tokens, (clock, kv_layout, i)
+        assert base[i].blocks == wide[i].blocks
+        assert base[i].valid == wide[i].valid
+        assert "degraded" not in wide[i].metadata
+        assert "rejected" not in wide[i].metadata

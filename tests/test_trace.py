@@ -1,0 +1,150 @@
+"""Seeded-determinism properties of the synthetic trace generator
+(benchmarks/trace.py): the same config yields a byte-identical trace, every
+record stays inside its config's pools, and materialized Requests carry the
+right constraint per kind.
+
+The invariant checker runs both deterministically (seeded sweep, always) and
+under hypothesis when installed (the CI property job), mirroring
+``test_property_schema.py``."""
+import json
+import re
+
+import pytest
+
+from benchmarks.trace import (
+    CHOICE_POOL,
+    KINDS,
+    REGEX_POOL,
+    Trace,
+    TraceConfig,
+    build_requests,
+    gen_trace,
+)
+from repro.data import synthetic
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _check_trace_invariants(cfg: TraceConfig, trace: Trace) -> None:
+    """Every structural property a replayable trace must satisfy."""
+    assert trace.config == cfg
+    assert len(trace.requests) == cfg.n_requests
+    steps = [tr.arrival_step for tr in trace.requests]
+    assert steps == sorted(steps), "arrival steps must be non-decreasing"
+    assert all(s >= 0 for s in steps)
+    allowed_kinds = {k for k, _ in cfg.mix}
+    lo, hi = cfg.prompt_words
+    for tr in trace.requests:
+        assert tr.kind in allowed_kinds
+        assert tr.max_new_tokens in cfg.budgets
+        words = tr.prompt.split()
+        assert lo <= len(words) <= hi and tr.prompt.endswith(" ")
+        assert all(w in synthetic.WORDS for w in words)
+        if tr.kind == "json_schema":
+            assert tr.payload in range(len(synthetic.JSON_SCHEMAS))
+        elif tr.kind == "regex":
+            assert tr.payload in REGEX_POOL
+        elif tr.kind == "choice":
+            assert tuple(tr.payload) in CHOICE_POOL
+        else:
+            assert tr.payload is None
+    # the whole trace serializes (what a trace file / bench JSON embeds)
+    json.dumps(trace.to_jsonable())
+
+
+def test_same_seed_byte_identical():
+    cfg = TraceConfig(n_requests=500, seed=7)
+    a, b = gen_trace(cfg), gen_trace(cfg)
+    assert a == b
+    assert json.dumps(a.to_jsonable()) == json.dumps(b.to_jsonable())
+
+
+def test_different_seed_differs():
+    base = TraceConfig(n_requests=200, seed=0)
+    a = gen_trace(base)
+    b = gen_trace(TraceConfig(n_requests=200, seed=1))
+    assert a != b
+    # and a config knob change also changes the trace
+    c = gen_trace(TraceConfig(n_requests=200, seed=0, rate=2.4))
+    assert [t.arrival_step for t in c.requests] != \
+        [t.arrival_step for t in a.requests]
+
+
+def test_trace_invariants_deterministic_sweep():
+    configs = [
+        TraceConfig(n_requests=300, seed=0),
+        TraceConfig(n_requests=300, seed=3, rate=4.0, burstiness=8.0),
+        TraceConfig(n_requests=100, seed=5, diurnal_period=0.0),
+        TraceConfig(n_requests=100, seed=9, mix=(("regex", 1),),
+                    budgets=(8,), prompt_words=(2, 2)),
+        TraceConfig(n_requests=50, seed=11,
+                    mix=(("none", 1), ("choice", 5))),
+    ]
+    for cfg in configs:
+        _check_trace_invariants(cfg, gen_trace(cfg))
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        gen_trace(TraceConfig(n_requests=1, mix=(("sql", 1),)))
+
+
+def test_build_requests_maps_kinds():
+    cfg = TraceConfig(n_requests=80, seed=2)
+    trace = gen_trace(cfg)
+    pairs = build_requests(trace)
+    assert len(pairs) == cfg.n_requests
+    seen = set()
+    for (step, req), tr in zip(pairs, trace.requests):
+        assert step == tr.arrival_step
+        assert req.prompt == tr.prompt
+        assert req.max_new_tokens == tr.max_new_tokens
+        assert req.metadata["kind"] == tr.kind
+        src = req.constraint.source
+        seen.add(tr.kind)
+        if tr.kind == "json_schema":
+            assert src == "json_schema" and req.constraint.constrained
+        elif tr.kind == "regex":
+            assert src == "regex" and req.constraint.pattern == tr.payload
+        elif tr.kind == "choice":
+            assert req.constraint.constrained
+            for opt in tr.payload:
+                assert re.fullmatch(req.constraint.pattern, opt)
+        else:
+            assert not req.constraint.constrained
+    assert seen == set(KINDS), "default mix should exercise every kind"
+    # fresh Request objects (and ids) on every materialization
+    again = build_requests(trace)
+    assert {r.request_id for _, r in pairs}.isdisjoint(
+        {r.request_id for _, r in again})
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        seed=st.integers(0, 2**32 - 1),
+        n=st.integers(1, 120),
+        rate=st.floats(0.05, 8.0, allow_nan=False),
+        burstiness=st.floats(1.0, 16.0, allow_nan=False),
+        p_burst=st.floats(0.0, 1.0, allow_nan=False),
+        p_calm=st.floats(0.0, 1.0, allow_nan=False),
+        period=st.sampled_from([0.0, 50.0, 300.0]),
+        amp=st.floats(0.0, 0.9, allow_nan=False),
+        mix=st.lists(
+            st.tuples(st.sampled_from(KINDS), st.integers(1, 5)),
+            min_size=1, max_size=4, unique_by=lambda kw: kw[0]),
+    )
+    def test_trace_invariants_hypothesis(seed, n, rate, burstiness, p_burst,
+                                         p_calm, period, amp, mix):
+        cfg = TraceConfig(
+            n_requests=n, seed=seed, rate=rate, burstiness=burstiness,
+            p_burst=p_burst, p_calm=p_calm, diurnal_period=period,
+            diurnal_amp=amp, mix=tuple(mix),
+        )
+        _check_trace_invariants(cfg, gen_trace(cfg))
+        assert gen_trace(cfg) == gen_trace(cfg)
