@@ -456,5 +456,11 @@ def run(quick: bool = True) -> None:
             "obs": {
                 "decode_steps_total": warm_eng.decode_steps,
                 "cache_hit_rate": cache.stats.hit_rate,
+                # additive (PR 8): total jit traces across the warm engine's
+                # registered entry points (repro.analysis.retrace.Sentry) —
+                # deterministic for a fixed stream/schedule, so any retrace
+                # creep (a data swap silently becoming a recompile) moves
+                # this count and trips the band gate
+                "jit_retraces_total": sum(warm_eng.sentry.counts.values()),
             },
         }, f, indent=1)

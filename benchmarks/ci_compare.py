@@ -78,6 +78,10 @@ BAND_KEYS = (
     # of drift in cache_hit_rate mean the cache key or stream changed.
     "obs.decode_steps_total",
     "obs.cache_hit_rate",
+    # total jit traces across the warm serving engine's entry points
+    # (retrace sentry): deterministic for a fixed stream, so ANY drift means
+    # either a data swap became a recompile (up) or coverage changed (down)
+    "obs.jit_retraces_total",
 )
 DEFAULT_NORMALIZE = "batch_warm.req_s"
 

@@ -1,7 +1,9 @@
 from .hlo import HloAnalysis, Totals, analyze_hlo_text
+from .retrace import RetraceBudgetExceeded, Sentry
 from .roofline import Roofline, analyze, model_flops_for, parse_collective_bytes
 
 __all__ = [
     "HloAnalysis", "Totals", "analyze_hlo_text",
+    "RetraceBudgetExceeded", "Sentry",
     "Roofline", "analyze", "model_flops_for", "parse_collective_bytes",
 ]

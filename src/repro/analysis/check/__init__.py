@@ -1,0 +1,17 @@
+"""JIT-hygiene static analysis for the constrained-decode hot path.
+
+AST-based lint framework: rule registry (RJ001-RJ005), fingerprinted
+findings, a committed baseline for grandfathered findings, and a CLI
+(``python -m repro.analysis.check src/ benchmarks/``). The runtime half —
+the retrace sentry — lives in :mod:`repro.analysis.retrace`; the rule
+catalog and fix patterns are documented in docs/STATIC_ANALYSIS.md.
+"""
+from .cli import main, scan
+from .modindex import ModuleIndex, Project, index_paths
+from .rules import RULES, Config, Finding, find_jit_roots, run_rules
+
+__all__ = [
+    "main", "scan",
+    "ModuleIndex", "Project", "index_paths",
+    "RULES", "Config", "Finding", "find_jit_roots", "run_rules",
+]

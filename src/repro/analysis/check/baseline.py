@@ -1,0 +1,62 @@
+"""Committed baseline of grandfathered findings.
+
+The checker fails only on NEW findings: anything recorded in the baseline
+file (fingerprint-keyed — rule + path + function + message, no line numbers,
+so edits above a grandfathered finding don't churn it) is suppressed but
+reported. Baseline entries that no longer match anything are EXPIRED and
+reported so they get deleted — a baseline only ever shrinks.
+
+Workflow::
+
+    python -m repro.analysis.check src/ --update-baseline   # grandfather
+    # edit the file: replace every "TODO: justify" with a real reason
+    python -m repro.analysis.check src/                     # gates on new
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .rules import Finding
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def load(path: Optional[Path]) -> Dict[str, dict]:
+    """fingerprint -> entry; empty when the file doesn't exist."""
+    if path is None or not Path(path).exists():
+        return {}
+    data = json.loads(Path(path).read_text())
+    return {e["fingerprint"]: e for e in data.get("findings", [])}
+
+
+def save(path: Path, findings: List[Finding],
+         old: Optional[Dict[str, dict]] = None) -> None:
+    """Write the current findings as the new baseline, preserving the
+    justification of any fingerprint that was already baselined."""
+    old = old or {}
+    entries = []
+    for f in findings:
+        prev = old.get(f.fingerprint, {})
+        entries.append({
+            "fingerprint": f.fingerprint,
+            "rule": f.rule,
+            "location": f"{f.path}:{f.func}",
+            "message": f.message,
+            "justification": prev.get("justification", "TODO: justify"),
+        })
+    payload = {"version": 1, "findings": entries}
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def split(findings: List[Finding], baseline: Dict[str, dict]
+          ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """(new, grandfathered, expired-baseline-entries)."""
+    new, old = [], []
+    seen = set()
+    for f in findings:
+        seen.add(f.fingerprint)
+        (old if f.fingerprint in baseline else new).append(f)
+    expired = [e for fp, e in baseline.items() if fp not in seen]
+    return new, old, expired

@@ -1,0 +1,83 @@
+"""CLI for the JIT-hygiene checker.
+
+    python -m repro.analysis.check src/ benchmarks/
+    python -m repro.analysis.check src/ --json
+    python -m repro.analysis.check src/ --update-baseline
+
+Exit codes: 0 — no findings outside the baseline; 1 — new findings;
+2 — usage error. Expired baseline entries are reported (delete them) but
+don't fail the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import baseline as bl
+from .modindex import index_paths
+from .rules import RULES, Config, Finding, run_rules
+
+
+def scan(paths: List[str], config: Optional[Config] = None,
+         root: Optional[Path] = None) -> List[Finding]:
+    """Programmatic entry point: index ``paths`` and run every rule."""
+    project = index_paths([Path(p) for p in paths], root=root)
+    return run_rules(project, config)
+
+
+def _text_report(new, old, expired, out) -> None:
+    for f in new:
+        print(f"{f.path}:{f.line}: {f.rule} {f.message} "
+              f"[{f.fingerprint}]", file=out)
+    for f in old:
+        print(f"{f.path}:{f.line}: {f.rule} (baselined) {f.message} "
+              f"[{f.fingerprint}]", file=out)
+    for e in expired:
+        print(f"baseline: EXPIRED {e['rule']} {e['location']} "
+              f"[{e['fingerprint']}] — finding no longer present, delete "
+              "the entry", file=out)
+    n_rules = len(RULES)
+    print(f"{len(new)} new, {len(old)} baselined, {len(expired)} expired "
+          f"({n_rules} rules)", file=out)
+
+
+def main(argv: Optional[List[str]] = None, out=None) -> int:
+    out = out or sys.stdout
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="JIT-hygiene static analysis (rules RJ001-RJ005)")
+    ap.add_argument("paths", nargs="+", help="files or directories to scan")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--baseline", default=bl.DEFAULT_BASELINE,
+                    help=f"baseline file (default: {bl.DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding is new")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings to the baseline and exit 0")
+    args = ap.parse_args(argv)
+
+    findings = scan(args.paths)
+    base = {} if args.no_baseline else bl.load(Path(args.baseline))
+    new, old, expired = bl.split(findings, base)
+
+    if args.update_baseline:
+        bl.save(Path(args.baseline), findings, old=base)
+        print(f"baseline written: {args.baseline} "
+              f"({len(findings)} findings)", file=out)
+        return 0
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.as_dict() for f in findings],
+            "new": [f.fingerprint for f in new],
+            "baselined": [f.fingerprint for f in old],
+            "expired": [e["fingerprint"] for e in expired],
+            "rules": sorted(RULES),
+        }, indent=2), file=out)
+    else:
+        _text_report(new, old, expired, out)
+    return 1 if new else 0

@@ -1,0 +1,225 @@
+"""AST module index for the JIT-hygiene checker.
+
+One :class:`ModuleIndex` per scanned file: the parsed tree, a parent map,
+import aliases (``jnp`` -> ``jax.numpy``), every function with its qualified
+name, and the per-line ``# rj: allow RJ0xx -- reason`` pragma allowlist.
+A :class:`Project` ties the modules together so rules can resolve calls
+across files (``from repro.diffusion.serve import make_serve_step``) and
+walk the call graph from the jit roots.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional, Set
+
+PRAGMA_RE = re.compile(
+    r"#\s*rj:\s*allow\s+(RJ\d{3}(?:\s*,\s*RJ\d{3})*)(?:\s*--\s*(.*))?"
+)
+
+
+@dataclass
+class FuncInfo:
+    """A function (or method) definition somewhere in the project."""
+
+    qualname: str                 # e.g. "ServingEngine.step_block"
+    node: ast.AST                 # FunctionDef / AsyncFunctionDef / Lambda
+    module: "ModuleIndex"
+    class_name: Optional[str] = None
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+
+class ModuleIndex:
+    """Parsed view of one Python file."""
+
+    def __init__(self, path: Path, rel: str, source: str, dotted: str):
+        self.path = path
+        self.rel = rel            # scan-relative posix path used in findings
+        self.dotted = dotted      # best-effort dotted module name
+        self.source = source
+        self.tree = ast.parse(source)
+        # local name -> dotted module ("jnp" -> "jax.numpy")
+        self.aliases: Dict[str, str] = {}
+        # local name -> dotted target ("pad_tables" -> "repro.core.pad_tables")
+        self.from_imports: Dict[str, str] = {}
+        self.functions: Dict[str, FuncInfo] = {}
+        self.allow: Dict[int, Set[str]] = {}     # lineno -> allowed rule codes
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        self._index()
+
+    # ---- construction ----------------------------------------------------
+    def _index(self) -> None:
+        for lineno, line in enumerate(self.source.splitlines(), 1):
+            m = PRAGMA_RE.search(line)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",")}
+                self.allow.setdefault(lineno, set()).update(codes)
+        for node in ast.walk(self.tree):
+            for ch in ast.iter_child_nodes(node):
+                self.parent[ch] = node
+        self._collect(self.tree, [])
+
+    def _collect(self, node: ast.AST, stack: List[str]) -> None:
+        for ch in ast.iter_child_nodes(node):
+            if isinstance(ch, ast.Import):
+                for a in ch.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:
+                        head = a.name.split(".")[0]
+                        self.aliases[head] = head
+            elif isinstance(ch, ast.ImportFrom):
+                base = self._import_base(ch)
+                if base is not None:
+                    for a in ch.names:
+                        if a.name == "*":
+                            continue
+                        local = a.asname or a.name
+                        self.from_imports[local] = f"{base}.{a.name}"
+            elif isinstance(ch, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = ".".join(stack + [ch.name])
+                cls = stack[-1] if stack else None
+                # class methods record the class; nested functions do not
+                info = FuncInfo(qual, ch, self,
+                                cls if self._is_class(stack) else None)
+                self.functions[qual] = info
+                self._collect(ch, stack + [ch.name])
+            elif isinstance(ch, ast.ClassDef):
+                self._class_names = getattr(self, "_class_names", set())
+                self._class_names.add(".".join(stack + [ch.name]))
+                self._collect(ch, stack + [ch.name])
+            else:
+                self._collect(ch, stack)
+
+    def _is_class(self, stack: List[str]) -> bool:
+        return bool(stack) and ".".join(stack) in getattr(self, "_class_names", set())
+
+    def _import_base(self, node: ast.ImportFrom) -> Optional[str]:
+        if node.level == 0:
+            return node.module
+        # relative import: resolve against this module's package
+        parts = self.dotted.split(".")
+        if len(parts) < node.level:
+            return node.module
+        base = parts[: len(parts) - node.level]
+        if node.module:
+            base = base + node.module.split(".")
+        return ".".join(base) if base else node.module
+
+    # ---- queries ---------------------------------------------------------
+    def dotted_name(self, expr: ast.AST) -> Optional[str]:
+        """Best-effort dotted path of a Name/Attribute chain, with import
+        aliases expanded (``jnp.stack`` -> ``jax.numpy.stack``). Unresolvable
+        heads (``self``) pass through verbatim so callers can suffix-match."""
+        if isinstance(expr, ast.Name):
+            if expr.id in self.aliases:
+                return self.aliases[expr.id]
+            if expr.id in self.from_imports:
+                return self.from_imports[expr.id]
+            return expr.id
+        if isinstance(expr, ast.Attribute):
+            base = self.dotted_name(expr.value)
+            return None if base is None else f"{base}.{expr.attr}"
+        return None
+
+    def allowed(self, lineno: int, code: str) -> bool:
+        return code in self.allow.get(lineno, ())
+
+
+class Project:
+    """All scanned modules plus cross-module function resolution."""
+
+    def __init__(self, modules: List[ModuleIndex]):
+        self.modules = modules
+        self.by_rel: Dict[str, ModuleIndex] = {m.rel: m for m in modules}
+
+    def module_for_dotted(self, dotted: str) -> Optional[ModuleIndex]:
+        for m in self.modules:
+            if m.dotted == dotted or m.dotted.endswith("." + dotted):
+                return m
+        # scanned under a prefix (e.g. "src."): suffix-match the other way
+        for m in self.modules:
+            if dotted.endswith("." + m.dotted) or dotted == m.dotted:
+                return m
+        return None
+
+    def resolve_function(
+        self,
+        mod: ModuleIndex,
+        expr: ast.AST,
+        caller: Optional[FuncInfo] = None,
+        local_funcs: Optional[Dict[str, FuncInfo]] = None,
+    ) -> Optional[FuncInfo]:
+        """Resolve a call target to a project FuncInfo (or None): nested
+        defs in the calling function, module-level functions, ``self.X``
+        methods of the caller's class, and project ``from``-imports."""
+        if isinstance(expr, ast.Name):
+            name = expr.id
+            if local_funcs and name in local_funcs:
+                return local_funcs[name]
+            if name in mod.functions:
+                return mod.functions[name]
+            target = mod.from_imports.get(name)
+            if target:
+                modpath, _, fname = target.rpartition(".")
+                target_mod = self.module_for_dotted(modpath)
+                if target_mod and fname in target_mod.functions:
+                    return target_mod.functions[fname]
+            return None
+        if isinstance(expr, ast.Attribute):
+            # self.method -> method of the caller's class
+            if (isinstance(expr.value, ast.Name) and expr.value.id == "self"
+                    and caller is not None and caller.class_name):
+                return mod.functions.get(f"{caller.class_name}.{expr.attr}")
+            # module_alias.func -> project module function
+            base = mod.dotted_name(expr.value)
+            if base:
+                target_mod = self.module_for_dotted(base)
+                if target_mod and expr.attr in target_mod.functions:
+                    return target_mod.functions[expr.attr]
+        return None
+
+
+def dotted_module_name(rel: str) -> str:
+    """Best-effort dotted module name from a scan-relative path:
+    ``src/repro/serving/engine.py`` -> ``repro.serving.engine``."""
+    p = rel.replace("\\", "/")
+    if p.endswith(".py"):
+        p = p[:-3]
+    parts = [x for x in p.split("/") if x not in ("", ".")]
+    if parts and parts[0] in ("src", "lib"):
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def index_paths(paths: List[Path], root: Optional[Path] = None) -> Project:
+    """Build a Project over every ``.py`` file under ``paths`` (files or
+    directory trees). ``root`` anchors the relative paths used in findings
+    and fingerprints (defaults to the CWD)."""
+    root = root or Path.cwd()
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    modules = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            source = f.read_text()
+            modules.append(ModuleIndex(f, rel, source, dotted_module_name(rel)))
+        except (SyntaxError, UnicodeDecodeError):
+            continue   # not analyzable; other tools own syntax errors
+    return Project(modules)

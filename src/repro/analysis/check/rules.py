@@ -1,0 +1,639 @@
+"""JIT-hygiene rules RJ001–RJ005.
+
+Each rule is a function ``(project, config) -> list[Finding]`` registered in
+:data:`RULES`. The catalog (docs/STATIC_ANALYSIS.md has the long form):
+
+RJ001  host control flow (``if``/``while``/``assert``) on values derived from
+       traced arguments inside functions reachable from a jit/pallas entry
+       point — the classic "works until the tracer hits the branch" bug, or
+       worse, a silent per-value retrace via concrete-size fallback.
+RJ002  implicit device syncs (``.item()``, ``float()``/``int()`` on arrays,
+       ``np.asarray``, ``jax.device_get``, ``block_until_ready``) inside the
+       serve/decode hot loops, outside the pragma-allowlisted commit/retire
+       sites where tokens legitimately leave the device.
+RJ003  ``jax``/``jnp`` usage in host-only modules (scheduler, SLO, page
+       pool, constraint cache): host bookkeeping must never launch device
+       work or upload arrays as a side effect of admission math.
+RJ004  mutable jit-boundary state: list/set/dict ``static_argnums``/
+       ``static_argnames`` specs, and jit-wrapped functions that mutate
+       closure or object state from trace time (runs once per trace, not
+       once per call).
+RJ005  re-wrapping a function in ``jax.jit``/``functools.partial`` per call
+       (inside a loop, or wrap-and-call in one expression): a fresh wrapper
+       is a fresh jit cache, so every step recompiles. AOT chains
+       (``jax.jit(f).lower(...)``) are exempt.
+
+Findings are suppressed by an inline pragma on the same line::
+
+    np.asarray(x)  # rj: allow RJ002 -- commit site: tokens leave the device
+
+or by the committed baseline file (see :mod:`.baseline`).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .modindex import FuncInfo, ModuleIndex, Project
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    func: str
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable id for baselining: rule + path + function + message — no
+        line number, so unrelated edits above a grandfathered finding don't
+        churn the baseline."""
+        key = f"{self.rule}|{self.path}|{self.func}|{self.message}"
+        return hashlib.sha1(key.encode()).hexdigest()[:12]
+
+    def as_dict(self) -> dict:
+        return dict(rule=self.rule, path=self.path, line=self.line,
+                    func=self.func, message=self.message,
+                    fingerprint=self.fingerprint)
+
+
+@dataclasses.dataclass
+class Config:
+    """Repo-shape knobs; tests override these to point rules at fixtures."""
+
+    # modules whose jit roots seed the RJ001 call-graph walk (suffix match);
+    # the default () means EVERY scanned module — strictly more coverage
+    # than pinning the known root modules (diffusion/serve.py,
+    # diffusion/engine.py, serving/engine.py, kernels/ops.py, core/dingo.py,
+    # core/greedy.py); restrict only to scope a scan down
+    jit_root_modules: Tuple[str, ...] = ()
+    # host-only modules: any jax import/use is an RJ003 finding
+    host_only_modules: Tuple[str, ...] = (
+        "repro/serving/scheduler.py",
+        "repro/serving/slo.py",
+        "repro/serving/paged.py",
+        "repro/constraints/cache.py",
+    )
+    # serve/decode hot loops scanned by RJ002 (function qualname suffixes)
+    hot_loop_functions: Tuple[str, ...] = (
+        "ServingEngine.step_block",
+        "ServingEngine.step_token",
+        "ServingEngine.serve",
+        "DiffusionEngine.generate",
+    )
+    max_call_depth: int = 3       # RJ001 interprocedural walk depth
+
+
+RuleFn = Callable[[Project, Config], List[Finding]]
+RULES: Dict[str, Tuple[str, RuleFn]] = {}
+
+
+def rule(code: str, title: str):
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[code] = (title, fn)
+        return fn
+    return deco
+
+
+def _match_module(rel: str, suffixes: Sequence[str]) -> bool:
+    return any(rel.endswith(s) for s in suffixes)
+
+
+def _finding(code: str, mod: ModuleIndex, node: ast.AST, func: str,
+             message: str, out: List[Finding]) -> None:
+    line = getattr(node, "lineno", 0)
+    if mod.allowed(line, code):
+        return
+    out.append(Finding(code, mod.rel, line, func, message))
+
+
+# ---------------------------------------------------------------------------
+# jit-root discovery (shared by RJ001 / RJ004)
+# ---------------------------------------------------------------------------
+_JIT_DOTTED = ("jax.jit",)
+
+
+def _is_jit_callee(mod: ModuleIndex, fn_expr: ast.AST) -> bool:
+    dotted = mod.dotted_name(fn_expr)
+    if dotted is None:
+        return False
+    if dotted in _JIT_DOTTED or dotted == "jit":
+        return True
+    # sentry.jit("name", fn) / self.sentry.jit(...) — the repo's counted jit
+    return dotted.endswith("sentry.jit")
+
+
+def _is_pallas_callee(mod: ModuleIndex, fn_expr: ast.AST) -> bool:
+    dotted = mod.dotted_name(fn_expr)
+    return dotted is not None and dotted.endswith("pallas_call")
+
+
+def _static_params(fn: ast.AST, call: Optional[ast.Call]) -> Set[str]:
+    """Parameter names declared static on the jit call/decorator."""
+    out: Set[str] = set()
+    if call is None:
+        return out
+    args = getattr(fn, "args", None)
+    pos = ([a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+           if args is not None else [])
+    for kw in call.keywords:
+        v = kw.value
+        if kw.arg == "static_argnames":
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                out.update(e.value for e in v.elts
+                           if isinstance(e, ast.Constant))
+        elif kw.arg == "static_argnums":
+            nums = []
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums = [v.value]
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                nums = [e.value for e in v.elts
+                        if isinstance(e, ast.Constant)]
+            for n in nums:
+                if isinstance(n, int) and 0 <= n < len(pos):
+                    out.add(pos[n])
+    return out
+
+
+def _returned_functions(project: Project, factory: FuncInfo) -> List[FuncInfo]:
+    """Nested FunctionDefs a factory returns (``make_serve_step`` pattern)."""
+    nested = {n.name: n for n in ast.walk(factory.node)
+              if isinstance(n, ast.FunctionDef) and n is not factory.node}
+    out = []
+    for node in ast.walk(factory.node):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            target = nested.get(node.value.id)
+            if target is not None:
+                out.append(FuncInfo(
+                    f"{factory.qualname}.{target.name}", target,
+                    factory.module))
+    return out
+
+
+def find_jit_roots(project: Project, config: Config
+                   ) -> List[Tuple[FuncInfo, Set[str]]]:
+    """Every (function, static-param-names) traced by jax.jit/pallas_call."""
+    roots: List[Tuple[FuncInfo, Set[str]]] = []
+    seen: Set[int] = set()
+
+    def add(info: Optional[FuncInfo], static: Set[str]) -> None:
+        if info is not None and id(info.node) not in seen:
+            seen.add(id(info.node))
+            roots.append((info, static))
+
+    for mod in project.modules:
+        if config.jit_root_modules and not _match_module(
+                mod.rel, config.jit_root_modules):
+            continue
+        # decorated functions: @jax.jit / @functools.partial(jax.jit, ...)
+        for info in mod.functions.values():
+            for dec in getattr(info.node, "decorator_list", []):
+                if _is_jit_callee(mod, dec):
+                    add(info, set())
+                elif isinstance(dec, ast.Call):
+                    dotted = mod.dotted_name(dec.func)
+                    if dotted == "functools.partial" and dec.args and \
+                            _is_jit_callee(mod, dec.args[0]):
+                        add(info, _static_params(info.node, dec))
+                    elif _is_jit_callee(mod, dec.func):
+                        add(info, _static_params(info.node, dec))
+        # call-form: jax.jit(f, ...), sentry.jit("name", f), pallas_call(k, …)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            wrapped: Optional[ast.AST] = None
+            if _is_jit_callee(mod, node.func):
+                dotted = mod.dotted_name(node.func) or ""
+                wrapped = node.args[0] if node.args else None
+                if dotted.endswith("sentry.jit") and len(node.args) >= 2:
+                    wrapped = node.args[1]    # (name, fn)
+            elif _is_pallas_callee(mod, node.func) and node.args:
+                wrapped = node.args[0]
+            if wrapped is None:
+                continue
+            caller = _enclosing_function(mod, node)
+            if isinstance(wrapped, ast.Name):
+                info = project.resolve_function(mod, wrapped, caller=caller,
+                                                local_funcs=_local_defs(caller))
+                add(info, _static_params(info.node if info else None, node))
+            elif isinstance(wrapped, ast.Call):
+                # factory pattern: jax.jit(make_serve_step(...)) — the
+                # returned inner function is the real entry point
+                factory = project.resolve_function(
+                    mod, wrapped.func, caller=caller,
+                    local_funcs=_local_defs(caller))
+                if factory is not None:
+                    for inner in _returned_functions(project, factory):
+                        add(inner, set())
+    return roots
+
+
+def _enclosing_function(mod: ModuleIndex, node: ast.AST) -> Optional[FuncInfo]:
+    cur = mod.parent.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for info in mod.functions.values():
+                if info.node is cur:
+                    return info
+        cur = mod.parent.get(cur)
+    return None
+
+
+def _local_defs(caller: Optional[FuncInfo]) -> Dict[str, FuncInfo]:
+    if caller is None:
+        return {}
+    out = {}
+    for n in ast.walk(caller.node):
+        if isinstance(n, ast.FunctionDef) and n is not caller.node:
+            out[n.name] = FuncInfo(f"{caller.qualname}.{n.name}", n,
+                                   caller.module)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RJ001: host control flow on traced values
+# ---------------------------------------------------------------------------
+# metadata reads are static under tracing — branching on them is fine
+_EXEMPT_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval",
+                 "weak_type"}
+_EXEMPT_CALLS = {"isinstance", "len", "hasattr", "callable", "type", "id",
+                 "issubclass"}
+
+
+def _tainted_in(mod: ModuleIndex, expr: ast.AST, tainted: Set[str]
+                ) -> Optional[str]:
+    """First tainted name referenced by ``expr`` after pruning host-safe
+    subtrees (identity checks, isinstance/len, .shape/.ndim/.dtype reads)."""
+    stack = [expr]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Attribute) and n.attr in _EXEMPT_ATTRS:
+            continue
+        if isinstance(n, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+            continue
+        if isinstance(n, ast.Call):
+            dotted = mod.dotted_name(n.func)
+            name = dotted.rsplit(".", 1)[-1] if dotted else None
+            if name in _EXEMPT_CALLS:
+                continue
+        if isinstance(n, ast.Name) and n.id in tainted:
+            return n.id
+        stack.extend(ast.iter_child_nodes(n))
+    return None
+
+
+def _call_args_to_params(call: ast.Call, callee: FuncInfo,
+                         mod: ModuleIndex, tainted: Set[str]) -> Set[str]:
+    """Callee params that receive a tainted argument at this call site.
+    Literal arguments (``commit=True``) taint nothing — static call-site
+    constants stay host values in the callee."""
+    args = callee.node.args
+    pos = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+    if pos and pos[0] == "self":
+        pos = pos[1:]
+    out: Set[str] = set()
+    for i, a in enumerate(call.args):
+        if isinstance(a, ast.Starred):
+            continue
+        if _tainted_in(mod, a, tainted) and i < len(pos):
+            out.add(pos[i])
+    for kw in call.keywords:
+        if kw.arg and _tainted_in(mod, kw.value, tainted):
+            out.add(kw.arg)
+    return out
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for e in target.elts:
+            out.extend(_assigned_names(e))
+        return out
+    return []
+
+
+def _check_traced_branches(project: Project, config: Config, func: FuncInfo,
+                           tainted_params: Set[str], root: str, depth: int,
+                           findings: List[Finding], seen: Set[tuple]) -> None:
+    key = (id(func.node), frozenset(tainted_params))
+    if key in seen or depth > config.max_call_depth or not tainted_params:
+        return
+    seen.add(key)
+    mod = func.module
+    tainted = set(tainted_params)
+    local_funcs = _local_defs(func)
+
+    def visit(stmts: List[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue   # nested defs analyzed when called
+            if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = st.value
+                if value is not None and _tainted_in(mod, value, tainted):
+                    targets = (st.targets if isinstance(st, ast.Assign)
+                               else [st.target])
+                    for t in targets:
+                        tainted.update(_assigned_names(t))
+            if isinstance(st, (ast.If, ast.While)):
+                name = _tainted_in(mod, st.test, tainted)
+                if name:
+                    kind = "if" if isinstance(st, ast.If) else "while"
+                    _finding(
+                        "RJ001", mod, st, func.qualname,
+                        f"host `{kind}` on traced value `{name}` "
+                        f"(reachable from jit root `{root}`)", findings)
+                visit(st.body)
+                visit(st.orelse)
+            elif isinstance(st, ast.Assert):
+                name = _tainted_in(mod, st.test, tainted)
+                if name:
+                    _finding(
+                        "RJ001", mod, st, func.qualname,
+                        f"host `assert` on traced value `{name}` "
+                        f"(reachable from jit root `{root}`)", findings)
+            elif isinstance(st, ast.For):
+                if _tainted_in(mod, st.iter, tainted):
+                    tainted.update(_assigned_names(st.target))
+                visit(st.body)
+                visit(st.orelse)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                visit(st.body)
+            elif isinstance(st, ast.Try):
+                visit(st.body)
+                for h in st.handlers:
+                    visit(h.body)
+                visit(st.orelse)
+                visit(st.finalbody)
+            # interprocedural: follow tainted args into project callees
+            for call in [n for n in ast.walk(st) if isinstance(n, ast.Call)]:
+                callee = project.resolve_function(
+                    mod, call.func, caller=func, local_funcs=local_funcs)
+                if callee is None or callee.node is func.node:
+                    continue
+                sub = _call_args_to_params(call, callee, mod, tainted)
+                if sub:
+                    _check_traced_branches(project, config, callee, sub,
+                                           root, depth + 1, findings, seen)
+
+    visit(list(func.node.body))
+
+
+@rule("RJ001", "host control flow on traced values in jit-reachable code")
+def rj001(project: Project, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[tuple] = set()
+    for func, static in find_jit_roots(project, config):
+        args = func.node.args
+        params = ([a.arg for a in args.posonlyargs]
+                  + [a.arg for a in args.args]
+                  + [a.arg for a in args.kwonlyargs])
+        tainted = {p for p in params if p not in static and p != "self"}
+        _check_traced_branches(project, config, func, tainted, func.qualname,
+                               0, findings, seen)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RJ002: implicit device syncs in the serve/decode hot loops
+# ---------------------------------------------------------------------------
+_SYNC_DOTTED = {"numpy.asarray", "numpy.array", "jax.device_get",
+                "jax.block_until_ready"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_SYNC_BUILTINS = {"float", "int"}
+
+
+@rule("RJ002", "implicit device sync in a serve/decode hot loop")
+def rj002(project: Project, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        for func in mod.functions.values():
+            if not any(func.qualname.endswith(h)
+                       for h in config.hot_loop_functions):
+                continue
+            for node in ast.walk(func.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = mod.dotted_name(node.func)
+                if dotted in _SYNC_DOTTED:
+                    _finding("RJ002", mod, node, func.qualname,
+                             f"`{dotted}` forces a device sync inside "
+                             f"`{func.qualname}`", findings)
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _SYNC_METHODS
+                        and not node.args and not node.keywords):
+                    _finding("RJ002", mod, node, func.qualname,
+                             f"`.{node.func.attr}()` forces a device sync "
+                             f"inside `{func.qualname}`", findings)
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in _SYNC_BUILTINS
+                        and node.func.id not in mod.from_imports
+                        and len(node.args) == 1
+                        and not isinstance(node.args[0], ast.Constant)):
+                    _finding("RJ002", mod, node, func.qualname,
+                             f"`{node.func.id}(...)` on an array forces a "
+                             f"device sync inside `{func.qualname}`",
+                             findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RJ003: device work in host-only modules
+# ---------------------------------------------------------------------------
+@rule("RJ003", "jax/jnp usage in a host-only module")
+def rj003(project: Project, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        if not _match_module(mod.rel, config.host_only_modules):
+            continue
+        jax_aliases = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax" or a.name.startswith("jax."):
+                        jax_aliases.add(a.asname or a.name.split(".")[0])
+                        _finding("RJ003", mod, node, "<module>",
+                                 f"host-only module imports `{a.name}`",
+                                 findings)
+            elif isinstance(node, ast.ImportFrom) and node.module and (
+                    node.module == "jax" or node.module.startswith("jax.")):
+                _finding("RJ003", mod, node, "<module>",
+                         f"host-only module imports from `{node.module}`",
+                         findings)
+                jax_aliases.update(a.asname or a.name for a in node.names)
+        seen_lines: Set[int] = set()
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                    and node.id in jax_aliases
+                    and node.lineno not in seen_lines):
+                seen_lines.add(node.lineno)
+                _finding("RJ003", mod, node, "<module>",
+                         f"host-only module uses `{node.id}` "
+                         "(device work in host bookkeeping)", findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RJ004: mutable jit-boundary state
+# ---------------------------------------------------------------------------
+_MUTATING_METHODS = {"append", "extend", "add", "update", "setdefault",
+                     "pop", "popitem", "insert", "remove", "clear"}
+
+
+@rule("RJ004", "mutable static-arg spec or jit-closure state mutation")
+def rj004(project: Project, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    # (a) list/set/dict static_argnums/static_argnames specs
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            is_jit = _is_jit_callee(mod, node.func)
+            dotted = mod.dotted_name(node.func)
+            is_partial_jit = (dotted == "functools.partial" and node.args
+                              and _is_jit_callee(mod, node.args[0]))
+            if not (is_jit or is_partial_jit):
+                continue
+            for kw in node.keywords:
+                if kw.arg in ("static_argnums", "static_argnames") and \
+                        isinstance(kw.value, (ast.List, ast.Set, ast.Dict,
+                                              ast.ListComp, ast.SetComp,
+                                              ast.DictComp)):
+                    _finding("RJ004", mod, kw.value, "<module>",
+                             f"mutable `{kw.arg}` spec — use a tuple "
+                             "(hashable, stable jit cache key)", findings)
+    # (b) jit-wrapped functions mutating closure / object state at trace time
+    for func, _static in find_jit_roots(project, config):
+        mod = func.module
+        local_names: Set[str] = set()
+        args = func.node.args
+        local_names.update(a.arg for a in args.posonlyargs)
+        local_names.update(a.arg for a in args.args)
+        local_names.update(a.arg for a in args.kwonlyargs)
+        for n in ast.walk(func.node):
+            for t in getattr(n, "targets", []) or (
+                    [n.target] if isinstance(n, (ast.AnnAssign, ast.For))
+                    else []):
+                local_names.update(_assigned_names(t))
+        for n in ast.walk(func.node):
+            target = None
+            if isinstance(n, (ast.Assign,)):
+                targets = n.targets
+            elif isinstance(n, (ast.AugAssign, ast.AnnAssign)):
+                targets = [n.target]
+            else:
+                targets = []
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    target = t
+                elif isinstance(t, ast.Subscript):
+                    base = t.value
+                    if isinstance(base, ast.Attribute) or (
+                            isinstance(base, ast.Name)
+                            and base.id not in local_names):
+                        target = t
+                if target is not None:
+                    _finding("RJ004", mod, n, func.qualname,
+                             "jit-wrapped function mutates closure/object "
+                             "state (trace-time side effect: runs once per "
+                             "trace, not per call)", findings)
+                    target = None
+            if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in _MUTATING_METHODS
+                    and isinstance(n.func.value, ast.Name)
+                    and n.func.value.id not in local_names):
+                _finding("RJ004", mod, n, func.qualname,
+                         f"jit-wrapped function calls `.{n.func.attr}()` on "
+                         "closure state (trace-time side effect)", findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RJ005: per-call jit re-wrap
+# ---------------------------------------------------------------------------
+def _in_loop(mod: ModuleIndex, node: ast.AST) -> bool:
+    cur = mod.parent.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+            return True
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False   # a def inside the loop re-binds per iteration,
+                           # but the jit call itself runs when called
+        cur = mod.parent.get(cur)
+    return False
+
+
+def _is_aot_chain(mod: ModuleIndex, node: ast.AST) -> bool:
+    """jax.jit(f).lower(...) / .compile() — deliberate AOT, not a re-wrap."""
+    parent = mod.parent.get(node)
+    return (isinstance(parent, ast.Attribute)
+            and parent.attr in ("lower", "compile", "trace"))
+
+
+@rule("RJ005", "jit/partial re-wrapped per call around a jitted function")
+def rj005(project: Project, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules:
+        # names bound to jitted callables at module or class scope
+        jitted_names: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                    and _is_jit_callee(mod, node.value.func):
+                for t in node.targets:
+                    jitted_names.update(_assigned_names(t))
+        for info in mod.functions.values():
+            for dec in getattr(info.node, "decorator_list", []):
+                if _is_jit_callee(mod, dec) or (
+                        isinstance(dec, ast.Call)
+                        and _is_jit_callee(mod, dec.func)):
+                    jitted_names.add(info.name)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            # wrap-and-call in one expression: jax.jit(f)(x)
+            if isinstance(node.func, ast.Call) and \
+                    _is_jit_callee(mod, node.func.func):
+                _finding("RJ005", mod, node, "<module>",
+                         "`jax.jit(f)(...)` wraps and calls in one "
+                         "expression — the wrapper (and its cache) is "
+                         "rebuilt every call; jit once, call many",
+                         findings)
+                continue
+            if not _in_loop(mod, node) or _is_aot_chain(mod, node):
+                continue
+            dotted = mod.dotted_name(node.func)
+            if _is_jit_callee(mod, node.func):
+                _finding("RJ005", mod, node, "<module>",
+                         "`jax.jit(...)` inside a loop — a fresh wrapper is "
+                         "a fresh jit cache, every iteration recompiles",
+                         findings)
+            elif dotted in ("functools.partial", "partial") and node.args:
+                head = node.args[0]
+                if isinstance(head, ast.Name) and head.id in jitted_names:
+                    _finding("RJ005", mod, node, "<module>",
+                             f"`functools.partial({head.id}, ...)` inside a "
+                             "loop re-wraps a jitted function per iteration",
+                             findings)
+    return findings
+
+
+def run_rules(project: Project, config: Optional[Config] = None,
+              codes: Optional[Sequence[str]] = None) -> List[Finding]:
+    config = config or Config()
+    out: List[Finding] = []
+    for code, (_title, fn) in sorted(RULES.items()):
+        if codes and code not in codes:
+            continue
+        out.extend(fn(project, config))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

@@ -1,0 +1,120 @@
+"""Runtime retrace sentry: count XLA traces per jitted entry point.
+
+DINGO's serving guarantee — and every perf number in ``experiments/`` — rests
+on the grid staying ONE compiled program per (bucket, clock, kv_layout)
+group: live masks, carries, page tables, and per-row commit deltas swap
+through the jitted step as *traced data*, never as a retrace.  Until now that
+invariant was pinned by a single hand-placed counter
+(``DiffusionEngine.decode_trace_count``).  The :class:`Sentry` generalizes
+it: every jit entry point an engine owns is registered by name, each trace
+of its Python body bumps a per-entry counter (the body of a jitted function
+runs exactly once per trace, so counting there *is* counting compiles), and
+the counts surface three ways:
+
+  * ``sentry.counts`` — plain per-entry dict, queried by tests and benches;
+  * ``obs.jit_retraces_total`` — a labeled counter in the shared
+    :class:`~repro.obs.observer.Observer` registry (``entry=<name>``), so a
+    production deployment alarms on retrace storms like any other metric;
+  * :meth:`Sentry.expect` — a context manager asserting a *declared trace
+    budget*: ``with sentry.expect(serve_step=3): ...`` raises
+    :class:`RetraceBudgetExceeded` when the block traced an entry point more
+    often than declared.
+
+The static half of this contract lives in :mod:`repro.analysis.check`
+(rules RJ001–RJ005 reject the bug classes that *cause* retraces); the sentry
+is the runtime tripwire for whatever slips through.
+"""
+from __future__ import annotations
+
+import functools
+from contextlib import contextmanager
+from typing import Callable, Dict, Optional
+
+from repro.obs import NULL_OBSERVER
+
+__all__ = ["RetraceBudgetExceeded", "Sentry"]
+
+
+class RetraceBudgetExceeded(AssertionError):
+    """An entry point traced more often than its declared budget."""
+
+
+class Sentry:
+    """Per-entry-point trace counter for a family of jitted functions.
+
+    One Sentry per engine: wrap each function *before* handing it to
+    ``jax.jit`` (:meth:`wrap`), or let :meth:`jit` do both.  Counting happens
+    in the wrapper's Python body, which jax executes once per trace — zero
+    cost on cached calls, exact by construction.
+    """
+
+    def __init__(self, observer=NULL_OBSERVER):
+        self.counts: Dict[str, int] = {}
+        self.observer = observer
+
+    # ---- registration ----------------------------------------------------
+    def wrap(self, name: str, fn: Callable) -> Callable:
+        """Wrap ``fn`` so every execution of its Python body (i.e. every
+        trace, once jitted) bumps ``counts[name]`` and the shared
+        ``jit_retraces_total`` metric."""
+        self.counts.setdefault(name, 0)
+
+        @functools.wraps(fn)
+        def counted(*args, **kwargs):
+            # trace-time side effect by design: the body runs once per trace,
+            # so the increment IS the trace count (never on cached calls)
+            self.counts[name] += 1  # rj: allow RJ004 -- trace counter: mutating the sentry from trace time is the mechanism
+            self.observer.count("jit_retraces_total", entry=name)
+            return fn(*args, **kwargs)
+
+        return counted
+
+    def jit(self, name: str, fn: Callable, **jit_kwargs) -> Callable:
+        """``jax.jit`` with trace counting: the one-stop registration every
+        engine entry point goes through."""
+        import jax
+
+        return jax.jit(self.wrap(name, fn), **jit_kwargs)
+
+    # ---- queries ---------------------------------------------------------
+    def count(self, name: str) -> int:
+        return self.counts.get(name, 0)
+
+    def total(self) -> int:
+        """Traces across every registered entry point."""
+        return sum(self.counts.values())
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.counts)
+
+    # ---- declared budgets ------------------------------------------------
+    @contextmanager
+    def expect(self, _total: Optional[int] = None, **budgets: int):
+        """Assert a declared trace budget over the enclosed block.
+
+        ``expect(serve_step=3)`` allows at most 3 new traces of the
+        ``serve_step`` entry point inside the block; ``expect(5)`` bounds the
+        total across all entry points.  Raises
+        :class:`RetraceBudgetExceeded` listing every violation.  Budgets are
+        *upper* bounds — warm entry points tracing zero times is the ideal.
+        """
+        before = dict(self.counts)
+        yield self
+        violations = []
+        for name, budget in budgets.items():
+            new = self.counts.get(name, 0) - before.get(name, 0)
+            if new > budget:
+                violations.append(
+                    f"{name}: {new} traces > declared budget {budget}"
+                )
+        if _total is not None:
+            new_total = self.total() - sum(before.values())
+            if new_total > _total:
+                violations.append(
+                    f"total: {new_total} traces > declared budget {_total}"
+                )
+        if violations:
+            raise RetraceBudgetExceeded(
+                "retrace budget exceeded — a data swap became a recompile:\n  "
+                + "\n  ".join(violations)
+            )

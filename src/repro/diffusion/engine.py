@@ -33,7 +33,6 @@ swapping masks between blocks is a data upload, never a retrace
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import NamedTuple, Optional, Sequence
 
@@ -41,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import Sentry
 from repro.config import ModelConfig, ServeConfig
 from repro.core import DingoTables, decoders
 from repro.models import ModelInputs, forward, init_caches
@@ -91,13 +91,13 @@ class DiffusionEngine:
         if self._strategy.needs_tables and tables is None:
             raise ValueError(f"decode={scfg.decode} requires DINGO tables")
 
-        # traces of the jitted decode step: stays at 1 per (shape, structure)
-        # however many blocks swap live masks / carries through it
-        self.decode_trace_count = 0
+        # retrace sentry: every jit entry point registers here, one trace
+        # counter per entry — the generalization of the old hand-placed
+        # ``decode_trace_count`` (kept as a property reading the sentry)
+        self.sentry = Sentry(observer=observer)
 
         cfg_ = cfg
 
-        @functools.partial(jax.jit, static_argnames=("attend_cache",))
         def prefill(params, caches, tokens, start, attend_cache=False):
             # named_scope: prefill vs block-commit passes separate cleanly in
             # device profiles (same jitted fn, distinguished by attend_cache)
@@ -112,21 +112,28 @@ class DiffusionEngine:
 
         raw_step = make_serve_step(cfg, scfg, mask_token_id)
 
+        # ONE shared step for both surfaces: forward + remask + constrained
+        # block decode, exactly as the serving grid runs it. ``tables_arg``
+        # (live mask included) and ``carry`` are traced data; the sentry's
+        # per-trace counter proves the per-block swaps never recompile.
+        self._prefill = self.sentry.jit(
+            "prefill", prefill, static_argnames=("attend_cache",))
+
         def step(params, caches, block_tokens, committed, carry, start, rng,
                  tables_arg, n_commit_arg):
-            # ONE shared step for both surfaces: forward + remask +
-            # constrained block decode, exactly as the serving grid runs it.
-            # ``tables_arg`` (live mask included) and ``carry`` are traced
-            # data; the body runs once per trace, so the counter proves the
-            # per-block swaps never recompile.
-            self.decode_trace_count += 1
             return raw_step(params, caches, block_tokens, committed, carry,
                             start, rng, tables_arg=tables_arg,
                             n_commit_arg=n_commit_arg)
 
-        self._prefill = prefill
-        self._step = jax.jit(step)
+        self._step = self.sentry.jit("decode_step", step)
         self._carry_next_fn = self._build_carry_next()
+
+    @property
+    def decode_trace_count(self) -> int:
+        """Traces of the jitted decode step: stays at 1 per (shape,
+        structure) however many blocks swap live masks / carries through it.
+        Backed by the sentry's ``decode_step`` entry-point counter."""
+        return self.sentry.count("decode_step")
 
     @property
     def _batched_tables(self) -> bool:
@@ -186,8 +193,11 @@ class DiffusionEngine:
 
         rng = jax.random.PRNGKey(seed)
         carry = self._carry0(b)
+        # accumulate device-side; the one host sync happens after the loop
+        # (per-block np.asarray here would serialize every block on a
+        # device→host transfer — the hazard RJ002 exists to reject)
         all_tokens = []
-        all_valid = np.ones((b,), bool)
+        all_valid = jnp.ones((b,), bool)
 
         for blk in range(n_blocks):
             start = jnp.asarray(m + blk * d, jnp.int32)
@@ -207,17 +217,19 @@ class DiffusionEngine:
                 )
             # commit block to caches (block attends the prefix it was decoded against)
             caches = self._prefill(self.params, caches, block_tokens, start, attend_cache=True)
-            all_tokens.append(np.asarray(block_tokens))
-            all_valid &= np.asarray(valid)
+            all_tokens.append(block_tokens)
+            all_valid = all_valid & valid
             carry = self._carry_next_fn(carry, q_final, block_tokens)
+        tokens_np = np.asarray(jnp.concatenate(all_tokens, axis=1))  # rj: allow RJ002 -- single end-of-generate retire sync
+        valid_np = np.asarray(all_valid)  # rj: allow RJ002 -- single end-of-generate retire sync
         t1 = time.perf_counter()
         if obs.enabled:
             obs.count("decode_steps_total", n_blocks * steps_per_block)
             obs.count("blocks_total", n_blocks)
             obs.observe("batch_decode_s", t1 - t_pf)
         return GenerationResult(
-            tokens=np.concatenate(all_tokens, axis=1),
-            valid=all_valid,
+            tokens=tokens_np,
+            valid=valid_np,
             time_s=t1 - t0,
             steps=n_blocks * steps_per_block,
             prefill_s=t_pf - t0,

@@ -5,7 +5,9 @@ Layers:
     paged      fixed-size KV page allocator (reserve/alloc, trash page 0)
     slo        SLO-aware admission policy (decode-step projection from the
                distance-to-accept tables; degrade-before-reject)
-    scheduler  slot-based continuous batching, (Q, C)-bucketed table stacking
+    scheduler  slot-based continuous batching (host-only bookkeeping)
+    tables     device half of slot tables: padded-table LRU + (Q, C)-bucketed
+               grid stacking (SlotTableStacker)
     engine     serve loop driving make_serve_step; yields completions
                (kv_layout='dense' per-slot grid or 'paged' shared page pool)
 
@@ -26,6 +28,7 @@ from .engine import ServingEngine
 from .paged import PagePool, PagesExhausted, PoolStats
 from .scheduler import ContinuousBatchingScheduler, Slot, qc_bucket
 from .slo import SLO
+from .tables import SlotTableStacker
 
 # Old import paths (pre repro.api/repro.constraints): same objects, resolved
 # through __getattr__ so `from repro.serving import Constraint` keeps working
@@ -45,7 +48,8 @@ _DEPRECATED = {
 
 __all__ = [
     "ServingEngine", "PagePool", "PagesExhausted", "PoolStats",
-    "ContinuousBatchingScheduler", "SLO", "Slot", "qc_bucket",
+    "ContinuousBatchingScheduler", "SLO", "Slot", "SlotTableStacker",
+    "qc_bucket",
     *_DEPRECATED,
 ]
 

@@ -67,6 +67,7 @@ from repro.models import (
     with_page_tables,
 )
 
+from repro.analysis.retrace import Sentry
 from repro.api import Completion, Request
 from repro.constraints import ConstraintCache
 from repro.obs import NULL_OBSERVER
@@ -74,6 +75,7 @@ from repro.obs import NULL_OBSERVER
 from .paged import PagePool
 from .scheduler import ContinuousBatchingScheduler, Slot
 from .slo import SLO
+from .tables import SlotTableStacker
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -232,6 +234,9 @@ class ServingEngine:
             slo=slo, steps_per_block=len(self._commit_deltas),
             observer=self.obs,
         )
+        # device half of slot tables (the scheduler stays host-only/RJ003):
+        # padded-table LRU + (bucket, assignment)-keyed grid stack
+        self.stacker = SlotTableStacker(n_slots)
         self._rng = jax.random.PRNGKey(seed)
         if kv_layout == "paged":
             self.caches = init_paged_caches(
@@ -259,10 +264,19 @@ class ServingEngine:
         self._grid_snap = None
         self._grid_snap_ver = -1
 
-        cfg_ = cfg
-        self._step = jax.jit(make_serve_step(cfg, scfg, self.mask_id))
+        # retrace sentry: every jit entry point below registers by name, so
+        # trace counts surface as ``obs.jit_retraces_total`` and tests can
+        # assert the declared budget (1 serve_step trace per bucket group)
+        self.sentry = Sentry(observer=self.obs)
+        # (Qb, Cb) table-bucket groups the grid has run under: the ONLY thing
+        # allowed to retrace serve_step is a new bucket shape, so
+        # ``declared_trace_budget`` == len(trace_groups)
+        self.trace_groups: set = set()
 
-        @jax.jit
+        cfg_ = cfg
+        self._step = self.sentry.jit(
+            "serve_step", make_serve_step(cfg, scfg, self.mask_id))
+
         def prefill1(params, caches, tokens):
             b, m = tokens.shape
             pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None], (b, m))
@@ -274,7 +288,6 @@ class ServingEngine:
             )
             return caches
 
-        @jax.jit
         def commit_block(params, caches, block_tokens, starts, page_tables=None,
                          commit_mask=None):
             if page_tables is not None:
@@ -293,7 +306,6 @@ class ServingEngine:
                 caches = _select_commit_rows(before, caches, commit_mask)
             return caches
 
-        @jax.jit
         def commit_row(params, caches, block_row, start, idx, page_tables=None):
             # batch-1 commit of ONE slot's finished block: the common case
             # under per-slot clocks is a single row crossing its boundary per
@@ -311,7 +323,6 @@ class ServingEngine:
             )
             return _scatter_row(caches, small, idx)
 
-        @jax.jit
         def scatter_slot(big, small, idx):
             # cache leaves are (layers, batch, ...): write row `idx` of every leaf
             return jax.tree_util.tree_map(
@@ -320,7 +331,6 @@ class ServingEngine:
 
         ps_ = page_size
 
-        @jax.jit
         def scatter_slot_paged(big, small, idx, pages_row, mp):
             # big: paged caches; small: batch-1 DENSE prefill caches over the
             # page-aligned max_len. Each table entry j takes the dense span
@@ -353,11 +363,29 @@ class ServingEngine:
             return [tuple(one(b_, s_) for b_, s_ in zip(bseg, sseg))
                     for bseg, sseg in zip(big, small)]
 
-        self._prefill1 = prefill1
-        self._commit_block = commit_block
-        self._commit_row = commit_row
-        self._scatter_slot = scatter_slot
-        self._scatter_slot_paged = scatter_slot_paged
+        self._prefill1 = self.sentry.jit("prefill1", prefill1)
+        self._commit_block = self.sentry.jit("commit_block", commit_block)
+        self._commit_row = self.sentry.jit("commit_row", commit_row)
+        self._scatter_slot = self.sentry.jit("scatter_slot", scatter_slot)
+        self._scatter_slot_paged = self.sentry.jit(
+            "scatter_slot_paged", scatter_slot_paged)
+
+    # ---- declared trace budget -------------------------------------------
+    def _note_trace_group(self, tables) -> None:
+        """Record the (Qb, Cb) table-bucket group the grid is about to run
+        under. Bucket shape is the only legitimate serve_step retrace axis
+        within one engine (clock / kv_layout / n_slots are fixed at
+        construction), so ``declared_trace_budget`` tracks exactly the groups
+        seen — any trace beyond that is a data swap gone wrong."""
+        key = tuple(tables.cnext.shape) if tables is not None else None
+        self.trace_groups.add(key)
+
+    @property
+    def declared_trace_budget(self) -> int:
+        """Upper bound on legitimate serve_step traces: one per distinct
+        (bucket, clock, kv_layout) group this engine has run (clock and
+        kv_layout are per-engine constants, so groups == bucket shapes)."""
+        return max(1, len(self.trace_groups))
 
     # ---- request intake --------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -496,7 +524,8 @@ class ServingEngine:
             if self.pool is not None:
                 self._ensure_block_pages()
                 page_tables = jnp.asarray(self.page_table)
-            tables = sched.stacked_tables()
+            tables = self.stacker.stacked(sched)
+            self._note_trace_group(tables)
             carry = jnp.asarray(sched.carry_batch())
             starts = jnp.asarray(sched.starts())[:, None]   # (B, 1) per-row offsets
             block_tokens = jnp.full((b, d), self.mask_id, jnp.int32)
@@ -525,7 +554,9 @@ class ServingEngine:
             obs.count("decode_steps_total", len(self._commit_deltas))
             obs.count("blocks_total")
         finished = sched.record_block(
-            np.asarray(block_tokens), np.asarray(valid), np.asarray(qf),
+            np.asarray(block_tokens),  # rj: allow RJ002 -- block-barrier retire site: committed tokens leave the device here
+            np.asarray(valid),  # rj: allow RJ002 -- block-barrier retire site
+            np.asarray(qf),  # rj: allow RJ002 -- block-barrier retire site
             steps=len(self._commit_deltas),
         )
         fin = {s.index for s in finished}
@@ -571,13 +602,14 @@ class ServingEngine:
                 if self.pool is not None:
                     page_tables = jnp.asarray(self.page_table)
                 starts_np = sched.starts()
-                live = np.asarray([not s.free for s in sched.slots], bool)
+                live = np.asarray([not s.free for s in sched.slots], bool)  # rj: allow RJ002 -- host list -> numpy, no device array involved
                 self._grid_snap = (
-                    sched.stacked_tables(), jnp.asarray(sched.carry_batch()),
+                    self.stacker.stacked(sched), jnp.asarray(sched.carry_batch()),
                     starts_np, jnp.asarray(starts_np)[:, None],
                     live, jnp.asarray(live), page_tables,
                 )
                 self._grid_snap_ver = self._grid_ver
+                self._note_trace_group(self._grid_snap[0])
             (tables, carry, starts_np, starts_dev, live, live_dev,
              page_tables) = self._grid_snap
             # each row advances by ITS step's schedule delta; idle rows by 0
@@ -605,9 +637,12 @@ class ServingEngine:
         if not bnd:
             return out
         self._grid_ver += 1          # budgets/carries/starts change below
-        blk_np = np.asarray(self._blk)
+        blk_np = np.asarray(self._blk)  # rj: allow RJ002 -- row-boundary retire site: finished rows leave the device here
         finished = sched.record_block(
-            blk_np, np.asarray(valid), np.asarray(qf), steps=t_steps, rows=bnd,
+            blk_np,
+            np.asarray(valid),  # rj: allow RJ002 -- row-boundary retire site
+            np.asarray(qf),  # rj: allow RJ002 -- row-boundary retire site
+            steps=t_steps, rows=bnd,
         )
         self.blocks_run += len(bnd)
         if obs.enabled:

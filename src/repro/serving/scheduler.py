@@ -17,6 +17,11 @@ stacked (``pad_tables``/``stack_tables`` semantics) so one jit-compiled
 over the live slots' table shapes, so admission churn only recompiles when a
 request genuinely crosses a bucket boundary — the bounded-recompilation knob.
 
+This module is HOST-ONLY bookkeeping (rule RJ003): the scheduler computes
+buckets, budgets, carries, and live masks in numpy; the device half — padded
+table upload and grid stacking — lives in
+:class:`repro.serving.tables.SlotTableStacker`, which the engine owns.
+
 Free slots hold a placeholder match-anything constraint; their decode output
 is discarded. A slot retires when its block budget is exhausted or the model
 pads a whole block with EOS from an accepting state — retirement is
@@ -26,11 +31,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import OrderedDict, deque
+from collections import deque
 from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api import Request
@@ -43,7 +46,6 @@ from repro.constraints import (
     budget_live_rows,
     qc_bucket,
 )
-from repro.core import DingoTables, pad_tables
 from repro.core.decoders import DINGO, GREEDY, UNCONSTRAINED
 from repro.core.dingo import NEG_INF
 from repro.obs import NULL_OBSERVER
@@ -149,12 +151,6 @@ class ContinuousBatchingScheduler:
         self.placeholder, _ = cache.get_or_compile(PLACEHOLDER_PATTERN, tokenizer)
         for s in self.slots:
             self._park(s)
-        # padded-table memo: (pattern, Qb, Cb) -> DingoTables on device.
-        # LRU — hits refresh recency, capacity evicts the least recently used
-        self._padded: "OrderedDict[Tuple[str, int, int], DingoTables]" = OrderedDict()
-        self._padded_cap = 8 * n_slots + 32
-        self._stacked: Optional[DingoTables] = None
-        self._stacked_key: Optional[tuple] = None
         # per-pattern memo: states whose ONLY legal continuation is EOS∞
         self._eos_only: Dict[str, np.ndarray] = {}
 
@@ -278,7 +274,6 @@ class ContinuousBatchingScheduler:
                 admitted.append(slot)
                 break
         if admitted:
-            self._stacked_key = None  # table assignment changed
             self.stats.admitted += len(admitted)
             self.observer.count("sched_admitted_total", len(admitted))
         return admitted, rejected
@@ -316,25 +311,6 @@ class ContinuousBatchingScheduler:
     def _entries(self):
         return [s.entry for s in self.slots]
 
-    def stacked_tables(self) -> DingoTables:
-        """Batched (B, Qb, Cb) tables over all slots, with each row's
-        budget-aware ``live`` end-state mask swapped in (:meth:`live_rows`).
-
-        The padded/stacked transition tables are memoized on (bucket, slot
-        assignment) ONLY — a slot crossing its own block boundary changes
-        just its budget, so under per-slot clocks the boundary updates a
-        (B, Qb) bool mask instead of re-padding and re-uploading every
-        table: per-row live swaps are data, never a restack or retrace."""
-        qb, cb = self.bucket()
-        key = (qb, cb) + tuple(id(s.entry) for s in self.slots)
-        if self._stacked_key != key:
-            padded = [self._padded_tables(s.entry, qb, cb) for s in self.slots]
-            self._stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *padded
-            )
-            self._stacked_key = key
-        return self._stacked._replace(live=jnp.asarray(self.live_rows(qb)))
-
     def live_rows(self, qb: int) -> np.ndarray:
         """(B, Qb) per-row live end-state masks in the padded state space:
         each constrained DINGO row's live set is restricted to states whose
@@ -359,18 +335,6 @@ class ContinuousBatchingScheduler:
         if self.decode != DINGO or slot.free or not slot.constrained:
             return None
         return block_budget(slot.blocks_total, slot.blocks_done, self.block_size)
-
-    def _padded_tables(self, entry: CompiledConstraint, qb: int, cb: int) -> DingoTables:
-        key = (entry.pattern, qb, cb)
-        hit = self._padded.get(key)
-        if hit is None:
-            hit = pad_tables(entry.tokendfa, qb, cb)
-            self._padded[key] = hit
-            while len(self._padded) > self._padded_cap:
-                self._padded.popitem(last=False)   # least recently used
-        else:
-            self._padded.move_to_end(key)          # refresh recency on hit
-        return hit
 
     def carry_batch(self) -> np.ndarray:
         """Per-slot DP carry in the current bucket's padded state space:
@@ -496,4 +460,3 @@ class ContinuousBatchingScheduler:
             # pages + any unexercised reservation (early EOS retirement)
             self.page_pool.free(slot.index)
         self._park(slot)
-        self._stacked_key = None

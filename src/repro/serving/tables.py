@@ -1,0 +1,75 @@
+"""Device-side slot-table management for the serving grid.
+
+The :class:`~repro.serving.scheduler.ContinuousBatchingScheduler` is pure
+host bookkeeping (slots, budgets, numpy carries — rule RJ003 pins that); the
+moment per-slot DINGO tables become DEVICE arrays lives here instead.
+:class:`SlotTableStacker` owns the two memos the hot path leans on:
+
+  * a per-(pattern, Qb, Cb) LRU of padded tables — ``pad_tables`` uploads
+    device arrays, so re-padding a regex the grid has already seen would be
+    a fresh HBM upload per admission;
+  * the stacked (B, Qb, Cb) grid batch, keyed on (bucket, slot assignment).
+    The key embeds ``id(entry)`` per slot, so it self-invalidates on
+    admission/retirement churn — no invalidation hooks to forget.
+
+Each row's budget-aware ``live`` end-state mask is re-derived every call
+(host-side numpy from :meth:`scheduler.live_rows`) and swapped in as traced
+data: a slot crossing its own block boundary updates a (B, Qb) bool upload,
+never a restack or a retrace.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.constraints import CompiledConstraint
+from repro.core import DingoTables, pad_tables
+
+__all__ = ["SlotTableStacker"]
+
+
+class SlotTableStacker:
+    """Padded/stacked DINGO-table memos for a fixed grid of ``n_slots``."""
+
+    def __init__(self, n_slots: int):
+        # padded-table memo: (pattern, Qb, Cb) -> DingoTables on device.
+        # LRU — hits refresh recency, capacity evicts the least recently used
+        self._padded: "OrderedDict[Tuple[str, int, int], DingoTables]" = OrderedDict()
+        self._padded_cap = 8 * n_slots + 32
+        self._stacked: Optional[DingoTables] = None
+        self._stacked_key: Optional[tuple] = None
+
+    def padded(self, entry: CompiledConstraint, qb: int, cb: int) -> DingoTables:
+        key = (entry.pattern, qb, cb)
+        hit = self._padded.get(key)
+        if hit is None:
+            hit = pad_tables(entry.tokendfa, qb, cb)
+            self._padded[key] = hit
+            while len(self._padded) > self._padded_cap:
+                self._padded.popitem(last=False)   # least recently used
+        else:
+            self._padded.move_to_end(key)          # refresh recency on hit
+        return hit
+
+    def stacked(self, sched) -> DingoTables:
+        """Batched (B, Qb, Cb) tables over all of ``sched``'s slots, with each
+        row's budget-aware ``live`` end-state mask swapped in.
+
+        The padded/stacked transition tables are memoized on (bucket, slot
+        assignment) ONLY — a slot crossing its own block boundary changes
+        just its budget, so under per-slot clocks the boundary updates a
+        (B, Qb) bool mask instead of re-padding and re-uploading every
+        table: per-row live swaps are data, never a restack or retrace."""
+        qb, cb = sched.bucket()
+        entries = [s.entry for s in sched.slots]
+        key = (qb, cb) + tuple(id(e) for e in entries)
+        if self._stacked_key != key:
+            padded = [self.padded(e, qb, cb) for e in entries]
+            self._stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *padded
+            )
+            self._stacked_key = key
+        return self._stacked._replace(live=jnp.asarray(sched.live_rows(qb)))

@@ -1,0 +1,364 @@
+"""repro.analysis.check: per-rule fixture snippets (true positive + true
+negative each), pragma suppression, baseline add/expire round-trip, CLI
+exit-code/JSON behavior, and the repo self-scan pin (zero new findings)."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.check import Config, index_paths, run_rules
+from repro.analysis.check import baseline as bl
+from repro.analysis.check.cli import main as cli_main
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _scan_snippet(tmp_path, source, config=None, name="mod.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    project = index_paths([f], root=tmp_path)
+    return run_rules(project, config or Config(
+        jit_root_modules=(), host_only_modules=(), hot_loop_functions=()))
+
+
+def _codes(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# RJ001: host control flow on traced values
+# ---------------------------------------------------------------------------
+def test_rj001_positive_direct_and_derived(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x, n):
+            y = x + 1
+            if y > 0:              # host branch on a traced derivation
+                return y
+            while n:               # and on a traced param
+                n = n - 1
+            assert x.sum() > 0     # and a traced assert
+            return n
+    """)
+    rj = [f for f in fs if f.rule == "RJ001"]
+    assert len(rj) == 3
+    assert "`if` on traced value `y`" in rj[0].message
+
+
+def test_rj001_positive_interprocedural(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        def helper(v):
+            if v > 2:              # reached with a traced argument
+                return v
+            return -v
+
+        @jax.jit
+        def f(x):
+            return helper(x * 3)
+    """)
+    rj = [f for f in fs if f.rule == "RJ001"]
+    assert len(rj) == 1 and rj[0].func == "helper"
+    assert "reachable from jit root `f`" in rj[0].message
+
+
+def test_rj001_negative_exempt_forms(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, w0=None, mode="fast"):
+            if w0 is None:             # identity check: host-safe
+                w0 = x * 0
+            if x.ndim == 2:            # static metadata
+                x = x[None]
+            if x.shape[0] > 4:         # static metadata
+                x = x[:4]
+            if isinstance(w0, tuple):  # type check
+                w0 = w0[0]
+            if mode == "fast":         # static arg: excluded from taint
+                return x + w0
+            return x - w0
+    """)
+    assert not [f for f in fs if f.rule == "RJ001"]
+
+
+def test_rj001_factory_and_sentry_roots(tmp_path):
+    """Roots found through the repo's two idioms: jax.jit(factory(...)) on
+    the factory's returned inner function, and sentry.jit("name", fn)."""
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        def make_step(cfg):
+            def step(x):
+                if x > 0:          # inner fn of a jitted factory product
+                    return x
+                return -x
+            return step
+
+        _step = jax.jit(make_step(None))
+
+        def install(sentry):
+            def body(y):
+                if y.sum():        # sentry-jitted root
+                    return y
+                return -y
+            return sentry.jit("body", body)
+    """)
+    rj = [f for f in fs if f.rule == "RJ001"]
+    assert {f.func for f in rj} == {"make_step.step", "install.body"}
+
+
+# ---------------------------------------------------------------------------
+# RJ002: implicit device syncs in hot loops
+# ---------------------------------------------------------------------------
+RJ002_CFG = Config(jit_root_modules=(), host_only_modules=(),
+                   hot_loop_functions=("Eng.step",))
+
+
+def test_rj002_positive(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import numpy as np
+        import jax
+
+        class Eng:
+            def step(self, x):
+                a = np.asarray(x)          # sync
+                b = x.item()               # sync
+                c = float(x[0])            # sync
+                jax.device_get(x)          # sync
+                return a, b, c
+    """, RJ002_CFG)
+    assert _codes([f for f in fs if f.rule == "RJ002"]) == ["RJ002"] * 4
+
+
+def test_rj002_negative_outside_hot_loop_and_pragma(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import numpy as np
+
+        class Eng:
+            def step(self, x):
+                y = np.asarray(x)  # rj: allow RJ002 -- commit site
+                return np.where(y, 1, 0)   # not a sync call
+
+            def cold(self, x):
+                return np.asarray(x)       # not a hot loop
+    """, RJ002_CFG)
+    assert not [f for f in fs if f.rule == "RJ002"]
+
+
+# ---------------------------------------------------------------------------
+# RJ003: device work in host-only modules
+# ---------------------------------------------------------------------------
+def test_rj003_positive_and_negative(tmp_path):
+    cfg = Config(jit_root_modules=(), hot_loop_functions=(),
+                 host_only_modules=("sched.py",))
+    (tmp_path / "sched.py").write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def budget(xs):
+            return jnp.asarray(xs).sum()
+    """))
+    (tmp_path / "device_ok.py").write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def stack(xs):
+            return jnp.stack(xs)
+    """))
+    project = index_paths([tmp_path], root=tmp_path)
+    fs = [f for f in run_rules(project, cfg) if f.rule == "RJ003"]
+    assert fs and all(f.path == "sched.py" for f in fs)
+    assert any("imports" in f.message for f in fs)
+    assert any("uses `jnp`" in f.message for f in fs)
+
+
+def test_rj003_repo_host_modules_are_clean():
+    """The PR's point: scheduler/SLO/paged/cache really are jax-free now."""
+    project = index_paths(
+        [REPO / "src" / "repro" / "serving", REPO / "src" / "repro" / "constraints"],
+        root=REPO)
+    fs = [f for f in run_rules(project, Config(jit_root_modules=(),
+                                               hot_loop_functions=()))
+          if f.rule == "RJ003"]
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RJ004: mutable jit-boundary state
+# ---------------------------------------------------------------------------
+def test_rj004_positive(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        cache = {}
+        log = []
+
+        jitted = jax.jit(lambda x: x, static_argnums=[0])   # mutable spec
+
+        @jax.jit
+        def f(x):
+            cache[0] = x           # closure subscript store at trace time
+            log.append(1)          # closure mutation at trace time
+            return x
+    """)
+    rj = [f for f in fs if f.rule == "RJ004"]
+    msgs = " | ".join(f.message for f in rj)
+    assert len(rj) == 3
+    assert "static_argnums" in msgs and "closure" in msgs
+
+
+def test_rj004_negative(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        jitted = jax.jit(lambda x: x, static_argnums=(0,))  # tuple: hashable
+
+        @jax.jit
+        def f(x):
+            local = {}
+            local["y"] = x * 2     # local mutation is fine
+            return local["y"]
+    """)
+    assert not [f for f in fs if f.rule == "RJ004"]
+
+
+# ---------------------------------------------------------------------------
+# RJ005: per-call jit re-wrap
+# ---------------------------------------------------------------------------
+def test_rj005_positive(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import functools
+        import jax
+
+        def g(x):
+            return x
+
+        fast = jax.jit(g)
+
+        def drive(xs):
+            y = jax.jit(g)(xs[0])              # wrap-and-call
+            for x in xs:
+                h = jax.jit(g)                 # re-wrap per iteration
+                y = y + functools.partial(fast, x)()   # re-partial per iter
+            return y
+    """)
+    rj = [f for f in fs if f.rule == "RJ005"]
+    assert len(rj) == 3
+    msgs = " | ".join(f.message for f in rj)
+    assert "wraps and calls" in msgs and "inside a loop" in msgs
+
+
+def test_rj005_negative_module_level_and_aot(tmp_path):
+    fs = _scan_snippet(tmp_path, """
+        import jax
+
+        def g(x):
+            return x
+
+        fast = jax.jit(g)                      # once, at module scope
+
+        def aot(plans):
+            out = []
+            for p in plans:
+                out.append(jax.jit(g).lower(p).compile())   # deliberate AOT
+            return out
+    """)
+    assert not [f for f in fs if f.rule == "RJ005"]
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + CLI
+# ---------------------------------------------------------------------------
+BAD_SRC = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+"""
+
+
+def test_baseline_add_then_expire_roundtrip(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text(textwrap.dedent(BAD_SRC))
+    base = tmp_path / "base.json"
+
+    # 1) finding is new -> exit 1
+    assert cli_main([str(f), "--baseline", str(base)]) == 1
+    # 2) grandfather it -> exit 0, file has a TODO justification slot
+    assert cli_main([str(f), "--baseline", str(base),
+                     "--update-baseline"]) == 0
+    data = json.loads(base.read_text())
+    assert len(data["findings"]) == 1
+    assert data["findings"][0]["justification"] == "TODO: justify"
+    fp = data["findings"][0]["fingerprint"]
+    # justifications survive a re-write
+    data["findings"][0]["justification"] = "known issue #42"
+    base.write_text(json.dumps(data))
+    assert cli_main([str(f), "--baseline", str(base)]) == 0
+    assert cli_main([str(f), "--baseline", str(base),
+                     "--update-baseline"]) == 0
+    assert json.loads(base.read_text())["findings"][0]["justification"] \
+        == "known issue #42"
+    # 3) fix the code -> the baselined entry EXPIRES (reported, exit 0)
+    f.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return -x\n")
+    new, old, expired = bl.split([], bl.load(base))
+    assert not new and not old and [e["fingerprint"] for e in expired] == [fp]
+    assert cli_main([str(f), "--baseline", str(base)]) == 0
+
+
+def test_cli_json_output_and_exit_codes(tmp_path, capsys):
+    f = tmp_path / "bad.py"
+    f.write_text(textwrap.dedent(BAD_SRC))
+    rc = cli_main([str(f), "--no-baseline", "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["rules"] == ["RJ001", "RJ002", "RJ003", "RJ004", "RJ005"]
+    assert len(out["new"]) == len(out["findings"]) == 1
+    assert out["findings"][0]["rule"] == "RJ001"
+    assert out["findings"][0]["fingerprint"] == out["new"][0]
+
+    ok = tmp_path / "ok.py"
+    ok.write_text("def f(x):\n    return x\n")
+    assert cli_main([str(ok), "--no-baseline"]) == 0
+
+
+def test_fingerprint_stable_across_line_moves(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text(textwrap.dedent(BAD_SRC))
+    fs1 = run_rules(index_paths([f], root=tmp_path))
+    f.write_text("# a comment pushing everything down\n\n"
+                 + textwrap.dedent(BAD_SRC))
+    fs2 = run_rules(index_paths([f], root=tmp_path))
+    assert [x.fingerprint for x in fs1] == [x.fingerprint for x in fs2]
+    assert fs1[0].line != fs2[0].line
+
+
+# ---------------------------------------------------------------------------
+# the repo self-scan: no new findings, as a test (CI also runs the CLI)
+# ---------------------------------------------------------------------------
+def test_repo_self_scan_no_new_findings():
+    findings = run_rules(index_paths(
+        [REPO / "src", REPO / "benchmarks"], root=REPO))
+    base = bl.load(REPO / "analysis-baseline.json")
+    new, _old, _expired = bl.split(findings, base)
+    assert new == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in new)
+
+
+def test_repo_self_scan_cli_entrypoint():
+    """`python -m repro.analysis.check src/ benchmarks/` exits 0 at repo
+    root — exactly the CI invocation."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.check", "src", "benchmarks"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -307,28 +307,29 @@ def test_scheduler_live_rows_uses_shared_helper(tok):
 
 
 # ---------------------------------------------------------------------------
-# scheduler padded-table memo is LRU, not FIFO
+# stacker padded-table memo is LRU, not FIFO
 # ---------------------------------------------------------------------------
 def test_padded_tables_lru_eviction(tok):
+    from repro.serving.tables import SlotTableStacker
+
     cache = ConstraintCache()
-    sched = ContinuousBatchingScheduler(1, cache, tok, block_size=8)
-    sched._padded.clear()
-    sched._padded_cap = 2
+    stacker = SlotTableStacker(1)
+    stacker._padded_cap = 2
     entries = [cache.get_or_compile(p, tok)[0]
                for p in (r"a+", r"b+", r"(ab)+")]
     qb = qc_bucket(max(e.tokendfa.num_states for e in entries))
     cb = qc_bucket(max(e.tokendfa.num_classes for e in entries))
 
     key = lambda e: (e.pattern, qb, cb)
-    sched._padded_tables(entries[0], qb, cb)
-    sched._padded_tables(entries[1], qb, cb)
+    stacker.padded(entries[0], qb, cb)
+    stacker.padded(entries[1], qb, cb)
     # touch the OLDEST-inserted entry, then insert a third: the untouched
     # middle entry must be the one evicted (FIFO would evict entries[0])
-    sched._padded_tables(entries[0], qb, cb)
-    sched._padded_tables(entries[2], qb, cb)
-    assert key(entries[0]) in sched._padded
-    assert key(entries[1]) not in sched._padded
-    assert key(entries[2]) in sched._padded
-    assert len(sched._padded) == 2
+    stacker.padded(entries[0], qb, cb)
+    stacker.padded(entries[2], qb, cb)
+    assert key(entries[0]) in stacker._padded
+    assert key(entries[1]) not in stacker._padded
+    assert key(entries[2]) in stacker._padded
+    assert len(stacker._padded) == 2
     # hits return the memoized object (no re-pad)
-    assert sched._padded_tables(entries[0], qb, cb) is sched._padded[key(entries[0])]
+    assert stacker.padded(entries[0], qb, cb) is stacker._padded[key(entries[0])]

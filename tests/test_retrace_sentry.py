@@ -1,0 +1,169 @@
+"""Retrace sentry: trace counting, declared budgets, and the serving
+differential — the mixed 8-request stream under clock {slot, block} x
+kv_layout {dense, paged} must (a) trace serve_step exactly once per
+(bucket, clock, kv_layout) group (the sentry-pinned compile-once invariant)
+and (b) stay token-identical across all four configurations."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.retrace import RetraceBudgetExceeded, Sentry
+from repro.api import Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import Constraint, ConstraintCache, schema_for_fields
+from repro.data import synthetic
+from repro.models import init_model
+from repro.obs import Observer
+from repro.serving import ServingEngine
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+# ---------------------------------------------------------------------------
+# unit: counting + budgets
+# ---------------------------------------------------------------------------
+def test_sentry_counts_traces_not_calls():
+    s = Sentry()
+    f = s.jit("f", lambda x: x * 2)
+    a = jnp.arange(4)
+    f(a), f(a), f(a)                       # one shape -> one trace
+    assert s.count("f") == 1
+    f(jnp.arange(8))                       # new shape -> one more trace
+    assert s.count("f") == 2
+    assert s.total() == 2
+    assert s.snapshot() == {"f": 2}
+
+
+def test_sentry_expect_budget():
+    s = Sentry()
+    f = s.jit("f", lambda x: x + 1)
+    with s.expect(f=1):
+        f(jnp.arange(4))
+        f(jnp.arange(4))                   # cached: no new trace
+    with pytest.raises(RetraceBudgetExceeded) as ei:
+        with s.expect(f=0):
+            f(jnp.arange(16))              # new shape inside a 0-budget block
+    assert "f: 1 traces > declared budget 0" in str(ei.value)
+    # total-budget form
+    with pytest.raises(RetraceBudgetExceeded):
+        with s.expect(0):
+            f(jnp.arange(32))
+
+
+def test_sentry_observer_metric():
+    obs = Observer()
+    s = Sentry(observer=obs)
+    f = s.jit("step", lambda x: x - 1)
+    f(jnp.arange(4)), f(jnp.arange(4)), f(jnp.arange(8))
+    snap = obs.snapshot()
+    assert snap['jit_retraces_total{entry="step"}'] == 2
+
+
+def test_engine_decode_trace_count_is_sentry_backed(tok, setup):
+    """DiffusionEngine.decode_trace_count (the pre-sentry hand counter) now
+    reads the sentry's decode_step entry — same invariant, one mechanism."""
+    from repro.api import Engine
+
+    cfg, params, scfg = setup
+    eng = Engine(params, cfg, dataclasses.replace(scfg, gen_len=16), tok)
+    out = eng.generate([Request("ab or ba: ", Constraint.regex(r"(ab|ba)+"),
+                                max_new_tokens=16)], seed=0)
+    assert out[0].tokens
+    assert eng.last_decode_traces == [1]
+
+
+# ---------------------------------------------------------------------------
+# differential: 8-req mixed stream x {slot, block} x {dense, paged}
+# ---------------------------------------------------------------------------
+def _mixed_stream():
+    """8 requests over 4 distinct constraints (2 JSON-Schema + 2 regex),
+    heterogeneous prompt lengths and budgets — the ISSUE's mixed stream."""
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    js1 = schema_for_fields(synthetic.JSON_SCHEMAS[1][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.json_schema(js1), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+    ]
+    return [Request(f"prompt {i}: " + "x" * (3 * i), c, max_new_tokens=m)
+            for i, (c, m) in enumerate(specs)]
+
+
+@pytest.mark.slow
+def test_retrace_budget_differential(tok, setup):
+    """serve_step traces == declared budget (1 per bucket group) in every
+    (clock, kv_layout) configuration, and completions are token-identical
+    across all four — retrace discipline costs nothing behaviorally."""
+    cfg, params, scfg = setup
+    runs = {}
+    for clock in ("slot", "block"):
+        for layout in ("dense", "paged"):
+            eng = ServingEngine(
+                params, cfg, scfg, tok, n_slots=3, max_prompt_len=32,
+                constraint_cache=ConstraintCache(), seed=0,
+                kv_layout=layout, page_size=8, clock=clock,
+            )
+            reqs = _mixed_stream()
+            order = {r.request_id: i for i, r in enumerate(reqs)}
+            done = {order[c.request_id]: c for c in eng.serve(reqs)}
+            assert set(done) == set(range(8))
+            # THE invariant: one serve_step trace per (bucket, clock,
+            # kv_layout) group — clock/kv_layout are engine constants, so
+            # within one engine the budget is the bucket-group count
+            assert eng.sentry.count("serve_step") == len(eng.trace_groups), (
+                clock, layout, eng.sentry.snapshot(), eng.trace_groups)
+            assert eng.sentry.count("serve_step") <= eng.declared_trace_budget
+            runs[(clock, layout)] = (done, eng)
+
+    # token identity across all four configurations
+    base, _ = runs[("slot", "dense")]
+    for key, (done, _eng) in runs.items():
+        for i in sorted(base):
+            assert done[i].tokens == base[i].tokens, (
+                f"request #{i} diverged under {key}")
+            assert done[i].valid == base[i].valid
+
+    # warm re-serve: same buckets -> ZERO new traces, enforced by expect()
+    done, eng = runs[("slot", "dense")]
+    reqs2 = _mixed_stream()
+    with eng.sentry.expect(serve_step=0):
+        done2 = list(eng.serve(reqs2))
+    assert len(done2) == 8
+
+
+@pytest.mark.slow
+def test_retrace_sentry_surfaces_in_stats(tok, setup):
+    """jit_retraces_total flows through the Observer into Engine.stats()."""
+    cfg, params, scfg = setup
+    eng = ServingEngine(
+        params, cfg, scfg, tok, n_slots=2, max_prompt_len=32,
+        observer=Observer(), seed=0,
+    )
+    reqs = _mixed_stream()[:3]
+    list(eng.serve(reqs))
+    metrics = eng.stats()["metrics"]
+    retrace_keys = [k for k in metrics if k.startswith("jit_retraces_total")]
+    assert retrace_keys, metrics
+    total = sum(metrics[k] for k in retrace_keys)
+    assert total == eng.sentry.total() > 0

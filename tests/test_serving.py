@@ -226,7 +226,8 @@ def test_scheduler_dfa_state_threading(tok):
     r2 = Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16)  # 4 blocks
     sched.submit(r1), sched.submit(r2)
     (s1, s2), _ = sched.admit()
-    tables = sched.stacked_tables()
+    from repro.serving.tables import SlotTableStacker
+    tables = SlotTableStacker(2).stacked(sched)
     qb, cb = sched.bucket()
     assert np.asarray(tables.cnext).shape == (2, qb, cb)
     td = s1.entry.tokendfa
@@ -252,11 +253,13 @@ def test_scheduler_budget_live_tightens(tok):
     sched = _mk_sched(tok, n_slots=1, decode="dingo", max_blocks=2, block_size=4)
     sched.submit(Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8))
     (s,), _ = sched.admit()
+    from repro.serving.tables import SlotTableStacker
+    stacker = SlotTableStacker(1)
     td = s.entry.tokendfa
-    live0 = np.asarray(sched.stacked_tables().live)[0]
+    live0 = np.asarray(stacker.stacked(sched).live)[0]
     s.blocks_done = 1                  # entering the final block
-    sched._stacked_key = None
-    live1 = np.asarray(sched.stacked_tables().live)[0]
+    # live is re-derived on every stacked() call — no invalidation needed
+    live1 = np.asarray(stacker.stacked(sched).live)[0]
     assert live1.sum() <= live0.sum()
     np.testing.assert_array_equal(live1[: td.num_states], td.accepting)
 
