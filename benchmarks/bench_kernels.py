@@ -104,6 +104,44 @@ def run(quick: bool = True):
     roofline["decode_attention"] = dict(
         _roofline_entry(ref.decode_attention_ref, (qq, kk, vv), us), shape=f"S={s}")
 
+    # ---- fused constrained-decode step (class_max ∘ edges ∘ maxplus in one
+    # kernel): the whole d-position DINGO block DP, jnp scan vs the fused
+    # pallas kernel. Gated keys are same-run and deterministic:
+    # fused_matches_jnp (bitwise token identity, the correctness bool) and
+    # fused_vs_jnp_makespan_x (interpret-mode decode-step makespan ratio —
+    # same-run, so runner speed cancels; absolute wall times are report-only).
+    import jax
+
+    from repro.core.dingo import DingoTables, dingo_decode
+
+    dd, qs, cs, vs = (8, 128, 128, 4096) if quick else (16, 256, 256, 32768)
+    tables = DingoTables(
+        class_id=jnp.asarray(rng.integers(0, cs, size=vs).astype(np.int32)),
+        cnext=jnp.asarray(rng.integers(0, qs, size=(qs, cs)).astype(np.int32)),
+        mask_reach=jnp.asarray(rng.random(size=(qs, qs)) < 0.1),
+        live=jnp.asarray(rng.random(size=qs) < 0.3),
+        start=jnp.asarray(0, jnp.int32),
+        mask_token_id=jnp.asarray(vs - 1, jnp.int32),
+    )
+    logp = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(dd, vs)).astype(np.float32)), axis=-1)
+    shape = f"d={dd};Q={qs};C={cs};V={vs}"
+    us_jnp = timeit(lambda: dingo_decode(logp, tables, impl="jnp"))
+    emit("fused_decode_jnp", us_jnp, shape)
+    us_fused = timeit(lambda: dingo_decode(logp, tables, impl="pallas_fused"))
+    emit("fused_decode_pallas_interp", us_fused, shape)
+    r_jnp = dingo_decode(logp, tables, impl="jnp")
+    r_fused = dingo_decode(logp, tables, impl="pallas_fused")
+    matches = bool(
+        np.array_equal(np.asarray(r_jnp.tokens), np.asarray(r_fused.tokens))
+        and np.asarray(r_jnp.logprob) == np.asarray(r_fused.logprob)
+        and int(r_jnp.q_final) == int(r_fused.q_final)
+    )
+    roofline["fused_dingo_dp"] = dict(
+        _roofline_entry(lambda lp: dingo_decode(lp, tables, impl="jnp"),
+                        (logp,), us_jnp),
+        shape=shape, fused_interp_wall_us=us_fused)
+
     os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
     with open(BENCH_JSON, "w") as f:
         json.dump({
@@ -111,6 +149,17 @@ def run(quick: bool = True):
             "created_unix": time.time(),
             "config": dict(quick=quick),
             "roofline": roofline,
+            "gates": {
+                # bool gate (True=1.0): the fused kernel's decode is bitwise
+                # identical to the jnp reference on this run's random tables
+                "fused_matches_jnp": float(matches),
+                # same-run interpret-mode decode-step makespan ratio
+                # (jnp over fused: higher = fused relatively faster)
+                "fused_vs_jnp_makespan_x": us_jnp / us_fused if us_fused else 0.0,
+                # absolute wall times: report-only in ci_compare
+                "jnp_decode_step_us": us_jnp,
+                "fused_decode_step_us": us_fused,
+            },
         }, f, indent=1)
 
 

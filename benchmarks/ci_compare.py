@@ -1,9 +1,10 @@
-"""CI benchmark-regression gate for the serving and trace benches.
+"""CI benchmark-regression gate for the serving, trace and kernels benches.
 
-Compares a freshly produced ``BENCH_serving.json`` (default profile) or
-``BENCH_trace.json`` (``--profile trace``) against the committed baseline and
-fails (exit 1) when a gated metric regresses by more than the tolerance. Two
-kinds of gates:
+Compares a freshly produced ``BENCH_serving.json`` (default profile),
+``BENCH_trace.json`` (``--profile trace``) or ``BENCH_kernels.json``
+(``--profile kernels``) against the committed baseline and fails (exit 1)
+when a gated metric regresses by more than the tolerance. Two kinds of
+gates:
 
 * **ratio keys** (machine-independent): metrics that compare two arms of the
   SAME run and are deterministic — ``slot_clock_steps_gain_x``, the
@@ -32,6 +33,11 @@ domain, see ``repro.serving.slo``), so matched fractions gate as floors,
 makespan / reject / degrade counts gate on the two-sided band, and the
 drained-clean booleans (no slot or page leak at drain) gate tightly. Wall
 goodput/latency is report-only; no runner normalization applies.
+
+The kernels profile gates the fused constrained-decode kernel
+(``repro.kernels.fused_decode``): bitwise parity with the jnp reference
+(bool, tight) and the same-run interpret-mode decode-step makespan ratio
+(floor); absolute wall times are report-only.
 
 Exit codes: 0 ok, 1 regression (or missing new key), 2 usage/IO error.
 """
@@ -119,6 +125,26 @@ TRACE_REPORT_KEYS = (
     "slo.ttfc_p50_s",
 )
 
+# ---- kernels profile (BENCH_kernels.json) ----------------------------------
+KERNELS_RATIO_KEYS = (
+    # bool gate (True=1.0): the fused Pallas decode step is bitwise identical
+    # to the jnp reference on the bench's random tables — deterministic, so
+    # it gates tightly at any tolerance
+    "gates.fused_matches_jnp",
+    # floor gate: interpret-mode decode-step makespan ratio, jnp wall over
+    # fused wall in the SAME run (runner speed cancels; interpreter overhead
+    # is stable for fixed shapes). Falling through the floor means the fused
+    # kernel's interpret path got structurally slower (e.g. a grid or
+    # padding change blew up the per-tile work).
+    "gates.fused_vs_jnp_makespan_x",
+)
+KERNELS_REPORT_KEYS = (
+    # absolute wall times of the two decode-step arms: meaningful on one
+    # machine, noise across runners — never gated
+    "gates.jnp_decode_step_us",
+    "gates.fused_decode_step_us",
+)
+
 PROFILES = {
     "serving": dict(
         ratio_keys=RATIO_KEYS,
@@ -131,6 +157,13 @@ PROFILES = {
         ratio_keys=TRACE_RATIO_KEYS,
         band_keys=TRACE_BAND_KEYS,
         report_keys=TRACE_REPORT_KEYS,
+        throughput_keys=(),
+        normalize=None,
+    ),
+    "kernels": dict(
+        ratio_keys=KERNELS_RATIO_KEYS,
+        band_keys=(),
+        report_keys=KERNELS_REPORT_KEYS,
         throughput_keys=(),
         normalize=None,
     ),
@@ -244,8 +277,9 @@ def main(argv=None) -> int:
         "--profile",
         choices=sorted(PROFILES),
         default="serving",
-        help="key set to gate: serving (BENCH_serving.json, default) or "
-        "trace (BENCH_trace.json, machine-independent keys only)",
+        help="key set to gate: serving (BENCH_serving.json, default), "
+        "trace (BENCH_trace.json, machine-independent keys only) or "
+        "kernels (BENCH_kernels.json fused-decode gates)",
     )
     args = ap.parse_args(argv)
 

@@ -189,7 +189,11 @@ class ServeConfig:
     diffusion_steps_per_block: int = 16
     remask: str = "top_prob"       # random | top_prob | entropy
     decode: str = "dingo"          # unconstrained | greedy | dingo
-    kernel_impl: str = "jnp"       # jnp | pallas
+    # serve-step kernel path: jnp (pure-jax CPU reference) | pallas
+    # (per-stage kernels) | pallas_fused (one fused DINGO DP kernel + paged
+    # attention kernel — the TPU hot path); token-identical by differential
+    # test (docs/API.md "Choosing kernel_impl")
+    kernel_impl: str = "jnp"       # jnp | pallas | pallas_fused
 
 
 @dataclasses.dataclass(frozen=True)

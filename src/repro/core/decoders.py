@@ -15,6 +15,13 @@ and ``dingo``. Each strategy supplies
                                                   per-row batch axis
                                                   (``stack_tables``), None
                                                   when shared
+
+``impl`` is the kernel path (``ServeConfig.kernel_impl``, threaded here by
+``make_serve_step``): ``"jnp"`` (pure-jax reference), ``"pallas"``
+(per-stage kernels), or ``"pallas_fused"`` (the whole DINGO block DP as one
+Pallas kernel — ``repro.kernels.fused_decode``). All three are
+token-identical by differential test; strategies without kernels (greedy,
+unconstrained) accept and ignore it. See docs/API.md and docs/KERNELS.md.
     init_carry(tables, batch,                     the (B, ...) carry at the
                *, reset_mask, prev)               DFA start state; with
                                                   ``prev`` given, only rows
@@ -255,7 +262,9 @@ def decode_block(
 ) -> DecodeOut:
     """Decode one (d, V) block with the named strategy. ``w0`` (DINGO
     log-weights) and ``reach0`` (greedy reachable set) are alternative carry
-    encodings; whichever is non-None is handed to the strategy."""
+    encodings; whichever is non-None is handed to the strategy. ``impl``
+    picks the kernel path (``jnp`` | ``pallas`` | ``pallas_fused`` — see the
+    module docstring); results are identical across impls."""
     strat = get_strategy(method)
     if strat.needs_tables and tables is None:
         raise ValueError(

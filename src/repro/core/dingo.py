@@ -18,7 +18,11 @@ The per-position transition scores use the token-class decomposition
 class bins (the O(V) hot loop — Pallas kernel ``class_max``); stage 2 is a
 max-plus update over the small (Q, C) / (Q, Q) tables (Pallas kernel
 ``maxplus_dp``). A pure-jnp path is used by default so everything runs on CPU;
-``impl='pallas'`` routes stage 1/2 through the kernels (interpret mode on CPU).
+``impl='pallas'`` routes stage 1/2 through the separate kernels and
+``impl='pallas_fused'`` through the single fused kernel
+(``kernels/fused_decode.py``) that keeps the class maxima and DP weights
+VMEM-resident for the whole block (interpret mode on CPU either way — see
+docs/KERNELS.md).
 
 Everything here is jit-able with static (d, Q, C, V).
 """
@@ -198,7 +202,22 @@ def dingo_decode(
     ``parallel_transitions``: the O(d·|Q|·(|Q|+|V|)) transition-cost stage is
     computed for ALL d positions in parallel (vmap — on TPU, d-way batched
     class-max/edge kernels), leaving only the O(d·|Q|²) max-plus chain
-    sequential: computational depth O(|Q|²+|Q|·|V|) + O(d·|Q|²)."""
+    sequential: computational depth O(|Q|²+|Q|·|V|) + O(d·|Q|²).
+
+    ``impl`` selects how the DP recurrence runs (the result is bit-identical
+    across all three — differential-tested end to end):
+
+    * ``"jnp"`` (default) — pure jax.numpy ``lax.scan``; the CPU/interpret
+      reference and the right choice off-TPU.
+    * ``"pallas"`` — stage 1 (``class_max``) and stage 2 (``maxplus_dp``) run
+      as separate Pallas kernels inside the same scan; the (Q,Q) edge build
+      stays in XLA between them.
+    * ``"pallas_fused"`` — the whole d-step recurrence is ONE Pallas kernel
+      (``kernels.fused_decode``): class maxima and DP weights stay in VMEM
+      across the block, only the (V,) log-prob rows stream from HBM. The
+      serve hot path on TPU; ``parallel_transitions`` does not apply (the
+      kernel already overlaps the transition build with the vocab stream).
+    """
     d, V = logp.shape
     Q, C = tables.cnext.shape
     if w0 is None:
@@ -206,7 +225,14 @@ def dingo_decode(
             jnp.arange(Q) == tables.start, 0.0, NEG_INF
         ).astype(logp.dtype)
 
-    if parallel_transitions:
+    if impl == "pallas_fused":
+        from repro.kernels import ops as kops
+
+        w_final, bqs, btoks = kops.fused_dingo_dp(
+            logp, tables.class_id, tables.cnext, tables.mask_reach, w0,
+            tables.mask_token_id,
+        )
+    elif parallel_transitions:
         def trans_for(logp_i):
             cmax, carg = _class_max(logp_i, tables.class_id, C, impl)
             return edge_scores(cmax, carg, logp_i[tables.mask_token_id], tables)

@@ -22,7 +22,7 @@ def confidence(logits: jax.Array, strategy: str, rng=None, *, impl: str = "jnp")
     if strategy == "random":
         assert rng is not None
         return jax.random.uniform(rng, (b, d))
-    if impl == "pallas":
+    if impl in ("pallas", "pallas_fused"):
         from repro.kernels import ops as kops
 
         maxp, ent, _ = jax.vmap(kops.softmax_stats)(logits)

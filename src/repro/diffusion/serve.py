@@ -61,8 +61,19 @@ def make_serve_step(
     dead rows never grow their committed set, whatever their delta — swapping
     which rows are live is data, not a retrace. ``page_tables_arg`` (paged KV
     serving) is the (B, max_pages) slot→page mapping for this block; it is
-    installed into every paged cache leaf before the forward so the attention
-    gather reads each slot's current pages."""
+    installed into every paged cache leaf before the forward so cache
+    attention reads each slot's current pages.
+
+    ``scfg.kernel_impl`` selects the step's kernel path end to end (all
+    three are token-identical by differential test — docs/API.md):
+
+    * ``"jnp"`` — pure-jnp everywhere; the CPU reference.
+    * ``"pallas"`` — Pallas kernels per stage: ``softmax_stats`` for remask
+      confidence, ``class_max``+``maxplus_dp`` inside the DINGO decode, and
+      ``paged_decode_attention_pallas`` for paged cache attention.
+    * ``"pallas_fused"`` — like ``"pallas"`` but the whole DINGO block DP is
+      ONE fused kernel (``kernels/fused_decode.py``); the TPU serve hot path.
+    """
     strategy = decoders.get_strategy(scfg.decode)
     impl = scfg.kernel_impl
 
@@ -87,7 +98,7 @@ def make_serve_step(
         with jax.named_scope("serve_forward"):
             logits, caches, _, _ = forward(
                 params, cfg, ModelInputs(block_tokens, pos, encoder_embeds=enc),
-                caches, commit=False, window=None,
+                caches, commit=False, window=None, attn_impl=impl,
             )
         with jax.named_scope("serve_remask"):
             conf = confidence(logits, scfg.remask, rng, impl=impl)

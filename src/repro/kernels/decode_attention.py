@@ -61,12 +61,10 @@ def _kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def _paged_kernel(
-    pt_ref, len_ref,                       # scalar-prefetch: (B, P) page table, (B,) lengths
-    q_ref, k_ref, v_ref,                   # tiles per (b, kv_head, page)
-    o_ref, m_ref, l_ref, acc_ref,
-    *, page_size: int, scale: float
-):
+def _paged_accumulate(pt_ref, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                      acc_ref, *, page_size: int, scale: float):
+    """Shared online-softmax body of the paged kernels: one (batch, kv-head,
+    page) grid step folds this page's scores into the (m, l, acc) scratch."""
     b_idx = pl.program_id(0)
     p_idx = pl.program_id(2)
 
@@ -99,20 +97,50 @@ def _paged_kernel(
     )
     m_ref[...] = m_new
 
-    @pl.when(p_idx == pl.num_programs(2) - 1)
+
+def _paged_kernel(
+    pt_ref, len_ref,                       # scalar-prefetch: (B, P) page table, (B,) lengths
+    q_ref, k_ref, v_ref,                   # tiles per (b, kv_head, page)
+    o_ref, m_ref, l_ref, acc_ref,
+    *, page_size: int, scale: float
+):
+    _paged_accumulate(pt_ref, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                      acc_ref, page_size=page_size, scale=scale)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _fin():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_stats_kernel(
+    pt_ref, len_ref, q_ref, k_ref, v_ref,
+    o_ref, m_out_ref, l_out_ref, m_ref, l_ref, acc_ref,
+    *, page_size: int, scale: float
+):
+    """Stats variant: also emits the online-softmax (m, l) so the caller can
+    merge this partial with the current block's attention flash-decoding
+    style (``models.attention.merge_attention``)."""
+    _paged_accumulate(pt_ref, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                      acc_ref, page_size=page_size, scale=scale)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = acc_ref[...] / l[:, None]
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
 def paged_decode_attention_pallas(
-    q: jax.Array,            # (B, H, Dh)
+    q: jax.Array,            # (B, H, Dh) or (B, S, H, Dh) — a diffusion block
     k_pool: jax.Array,       # (n_pages, page_size, KVH, Dh) shared pool
     v_pool: jax.Array,       # (n_pages, page_size, KVH, Dh)
     page_table: jax.Array,   # (B, P) int32 physical page per logical span
     lengths: jax.Array,      # (B,) valid logical prefix length
     *,
     scale: float | None = None,
+    return_stats: bool = False,
     interpret: bool = False,
 ):
     """Paged flash-decoding: the page table is a scalar-prefetch operand, so
@@ -120,43 +148,82 @@ def paged_decode_attention_pallas(
     page from the shared pool — the gathered (B, P·page_size) cache view is
     never materialized in HBM. Same online-softmax accumulators as the dense
     kernel; logical positions past ``lengths`` (including every trash-page
-    tile) are masked."""
-    b, h, dh = q.shape
+    tile) are masked.
+
+    A 4-D ``q`` (B, S, H, Dh) is the serve hot path: the S block positions
+    all attend the same prefix with the same key-position mask, so they fold
+    into the grouped-query axis (G' = S·G) and amortize every page DMA
+    across the whole block. With ``return_stats`` the kernel returns the
+    flash partial ``(out, m, l)`` in ``models.attention.mha(...,
+    return_stats=True)`` layout — normalized f32 out (B, S, KVH, G, Dh) and
+    (B, S, KVH, G) stats — for ``merge_attention`` with the current block's
+    self-attention piece."""
+    squeeze = q.ndim == 3
+    q4 = q[:, None] if squeeze else q
+    b, s, h, dh = q4.shape
     ps, kvh = k_pool.shape[1], k_pool.shape[2]
     n_tables = page_table.shape[1]
     g = h // kvh
+    gp = s * g                        # folded grouped-query axis
     if scale is None:
         scale = dh ** -0.5
 
-    qg = q.reshape(b, kvh, g, dh)
+    qg = (q4.reshape(b, s, kvh, g, dh)
+          .transpose(0, 2, 1, 3, 4).reshape(b, kvh, gp, dh))
     kt = jnp.moveaxis(k_pool, 2, 1)   # (n_pages, KVH, ps, Dh)
     vt = jnp.moveaxis(v_pool, 2, 1)
 
     grid = (b, kvh, n_tables)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0)),
+
+    def _specs(n_out):
+        qkv_specs = [
+            pl.BlockSpec((1, 1, gp, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0)),
             pl.BlockSpec((1, 1, ps, dh),
                          lambda bi, ki, pi, pt, ln: (pt[bi, pi], ki, 0, 0)),
             pl.BlockSpec((1, 1, ps, dh),
                          lambda bi, ki, pi, pt, ln: (pt[bi, pi], ki, 0, 0)),
+        ]
+        o_spec = pl.BlockSpec((1, 1, gp, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0))
+        s_spec = pl.BlockSpec((1, 1, gp), lambda bi, ki, pi, pt, ln: (bi, ki, 0))
+        return pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=qkv_specs,
+            out_specs=o_spec if n_out == 1 else [o_spec, s_spec, s_spec],
+            scratch_shapes=[
+                pltpu.VMEM((gp,), jnp.float32),
+                pltpu.VMEM((gp,), jnp.float32),
+                pltpu.VMEM((gp, dh), jnp.float32),
+            ],
+        )
+
+    args = (page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, kt, vt)
+    if not return_stats:
+        out = pl.pallas_call(
+            functools.partial(_paged_kernel, page_size=ps, scale=scale),
+            grid_spec=_specs(1),
+            out_shape=jax.ShapeDtypeStruct((b, kvh, gp, dh), q.dtype),
+            interpret=interpret,
+        )(*args)
+        out = (out.reshape(b, kvh, s, g, dh)
+               .transpose(0, 2, 1, 3, 4).reshape(b, s, h, dh))
+        return out[:, 0] if squeeze else out
+    out, m, l = pl.pallas_call(
+        functools.partial(_paged_stats_kernel, page_size=ps, scale=scale),
+        grid_spec=_specs(3),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, gp, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, gp), jnp.float32),
+            jax.ShapeDtypeStruct((b, kvh, gp), jnp.float32),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, ki, pi, pt, ln: (bi, ki, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g, dh), jnp.float32),
-        ],
-    )
-    out = pl.pallas_call(
-        functools.partial(_paged_kernel, page_size=ps, scale=scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg, kt, vt)
-    return out.reshape(b, h, dh)
+    )(*args)
+    out = out.reshape(b, kvh, s, g, dh).transpose(0, 2, 1, 3, 4)
+    m = m.reshape(b, kvh, s, g).transpose(0, 2, 1, 3)
+    l = l.reshape(b, kvh, s, g).transpose(0, 2, 1, 3)
+    # stats stay in the (B, S, KVH, G[, Dh]) layout mha/merge_attention use,
+    # including for 3-D q (S=1)
+    return out, m, l
 
 
 def decode_attention_pallas(

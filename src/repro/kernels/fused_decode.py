@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: fused DINGO constrained-decode DP (stages 1+2 in one
+``pallas_call``).
+
+Runs the whole per-block Viterbi recurrence — token→class segment-max
+(``class_max.py``), the (Q,C)→(Q,Q) edge build with mask pseudo-token
+override (``core.dingo.edge_scores``), and the max-plus update with
+backpointers (``maxplus.py``) — as ONE kernel over grid ``(d, V/block_v)``.
+The (C,) class maxima, (C,) argmax tokens and the (Q,) DP weight vector live
+in VMEM scratch for the entire decode, so the only HBM traffic per position
+is the streaming read of its (V,) log-prob row plus the (d, Q) backpointer
+writes: the separate-kernel path's HBM round-trips of the (C,)/(Q,Q)
+intermediates between three XLA ops disappear (see docs/KERNELS.md and the
+fused roofline entry in ``experiments/BENCH_kernels.json``).
+
+Grid order: positions are the MAJOR axis and vocab tiles the minor axis (the
+last grid axis iterates fastest), so each position finishes its class-max
+accumulation before its transition fires, and the DP weight scratch carries
+sequentially from position i to i+1 — exactly the ``lax.scan`` of the jnp
+path, but without leaving the kernel.
+
+Bit-exactness with the jnp reference (``core.dingo``), pinned by
+``tests/test_fused_decode.py``:
+
+* ``max``/compares are exact on floats, and ``finite + NEG_INF == NEG_INF``
+  exactly in f32 (−1e30 absorbs anything above ~−1e21), so the score algebra
+  matches the reference term for term.
+* The edge build iterates classes in ascending order with a STRICT ``>``
+  update, which reproduces the reference's "smallest class index attaining
+  the max" tie-break; a ``LOW`` (−2e30) init distinguishes "no class maps
+  q'→q" (token backpointer defaults to ``carg[C-1]``, the reference's
+  clip-of-sentinel behavior) from a real mapping whose class max is exactly
+  ``NEG_INF`` (which must still win the token slot).
+* First-argmax everywhere: block-local min-token-index among attaining, and
+  strict ``>`` across vocab tiles, match segment_min / first-argmax.
+
+Padding: Q and C pad to 128 lanes, V to ``block_v``. Padding ``cnext``
+entries point at state ``q_pad`` (out of the target-state iota range), so
+they scatter nowhere; padding tokens carry class ``c_pad`` (out of range)
+and value ``NEG_INF``; padding ``w0``/``mask_reach`` rows are dead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+# "no mapping" sentinel for the edge build: strictly below any clamped score,
+# so a REAL q'->q mapping whose class max is exactly NEG_INF still claims the
+# token backpointer (parity with the reference's >= hit semantics)
+LOW = -2e30
+
+
+def _kernel(
+    logp_ref, cid_ref, cnext_ref, reach_ref, lpm_ref, w0_ref, mtid_ref,
+    w_out_ref, bq_ref, btok_ref,
+    cmax_s, carg_s, w_s,
+    *, block_v: int, vocab: int, num_classes: int, q_pad: int, c_pad: int,
+):
+    i = pl.program_id(0)   # block position (DP step)
+    j = pl.program_id(1)   # vocab tile
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init_stage1():
+        cmax_s[...] = jnp.full((c_pad,), NEG_INF, jnp.float32)
+        carg_s[...] = jnp.full((c_pad,), vocab, jnp.int32)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_w():
+        w_s[...] = w0_ref[...].astype(jnp.float32)
+
+    # ---- stage 1: class segment-max accumulate over this vocab tile
+    vals = logp_ref[0, :].astype(jnp.float32)             # (block_v,)
+    cid = cid_ref[...]                                    # (block_v,)
+    tok_idx = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_v,), 0)
+    vals = jnp.where(tok_idx < vocab, vals, NEG_INF)
+    class_iota = jax.lax.broadcasted_iota(jnp.int32, (block_v, c_pad), 1)
+    onehot = cid[:, None] == class_iota                   # (block_v, C)
+    contrib = jnp.where(onehot, vals[:, None], NEG_INF)
+    blk_max = contrib.max(axis=0)                         # (C,)
+    hit = contrib >= blk_max[None, :]
+    blk_arg = jnp.where(hit & onehot, tok_idx[:, None], vocab).min(axis=0)
+    cur_max = cmax_s[...]
+    better = blk_max > cur_max
+    cmax_s[...] = jnp.where(better, blk_max, cur_max)
+    carg_s[...] = jnp.where(better, blk_arg, carg_s[...]).astype(jnp.int32)
+
+    # ---- last vocab tile of this position: edge build + max-plus transition
+    @pl.when(j == nv - 1)
+    def _transition():
+        cmax = jnp.maximum(cmax_s[...], NEG_INF)
+        carg = jnp.where(carg_s[...] >= vocab, 0, carg_s[...])
+        cnext = cnext_ref[...]                            # (q_pad, c_pad)
+        q_iota = jax.lax.broadcasted_iota(jnp.int32, (q_pad, q_pad), 1)
+        e = jnp.full((q_pad, q_pad), LOW, jnp.float32)
+        # no-mapping default token: the reference clips its int32-max class
+        # sentinel to C-1, i.e. carg of the LAST real class
+        tokm = jnp.full((q_pad, q_pad), carg[num_classes - 1], jnp.int32)
+        for cls in range(num_classes):                    # static unroll
+            onehot_c = cnext[:, cls][:, None] == q_iota   # (q_pad, q_pad)
+            contrib_c = jnp.where(onehot_c, cmax[cls], LOW)
+            better_c = contrib_c > e                      # strict: first class wins ties
+            e = jnp.where(better_c, contrib_c, e)
+            tokm = jnp.where(better_c, carg[cls], tokm)
+        e_tok = jnp.maximum(e, NEG_INF)
+        e_mask = jnp.where(reach_ref[...], lpm_ref[0], NEG_INF)
+        use_mask = e_mask > e_tok
+        e_fin = jnp.where(use_mask, e_mask, e_tok)
+        tok_fin = jnp.where(use_mask, mtid_ref[0], tokm)
+
+        # ---- stage 2: max-plus update with (prev_state, token) backpointers
+        w = w_s[...]
+        scores = w[:, None] + e_fin                       # (q_pad, q_pad)
+        wnew = jnp.maximum(scores.max(axis=0), NEG_INF)
+        hitq = scores >= wnew[None, :]
+        row_iota = jax.lax.broadcasted_iota(jnp.int32, (q_pad, q_pad), 0)
+        bq = jnp.where(hitq, row_iota, q_pad).min(axis=0)
+        bq = jnp.where(bq >= q_pad, 0, bq)
+        # gather tok_fin[bq[q], q] without dynamic gather: one-hot sum
+        sel = row_iota == bq[None, :]
+        btok = jnp.where(sel, tok_fin, 0).sum(axis=0)
+        w_s[...] = wnew
+        w_out_ref[...] = wnew
+        bq_ref[0, :] = bq.astype(jnp.int32)
+        btok_ref[0, :] = btok.astype(jnp.int32)
+
+
+def fused_dingo_dp_pallas(
+    logp: jax.Array,          # (d, V) per-position log-probs
+    class_id: jax.Array,      # (V,) int32 token -> class
+    cnext: jax.Array,         # (Q, C) int32 class transition table
+    mask_reach: jax.Array,    # (Q, Q) bool mask pseudo-token reachability
+    w0: jax.Array,            # (Q,) initial DP log-weights
+    mask_token_id: jax.Array,  # () int32
+    *,
+    block_v: int = 2048,
+    interpret: bool = False,
+):
+    """Whole-block DINGO DP in one kernel: returns
+    ``(w_final (Q,), bqs (d, Q), btoks (d, Q))`` — the same values the jnp
+    path's ``lax.scan`` over ``class_max``/``edge_scores``/``maxplus_update``
+    produces, ready for the shared live-state argmax + backward walk in
+    ``core.dingo.dingo_decode``."""
+    d, v = logp.shape
+    q, c = cnext.shape
+    q_pad = max(128, -(-q // 128) * 128)
+    c_pad = max(128, -(-c // 128) * 128)
+    v_pad = -(-v // block_v) * block_v
+
+    logp32 = logp.astype(jnp.float32)
+    logp_p = jnp.pad(logp32, ((0, 0), (0, v_pad - v)), constant_values=NEG_INF)
+    # padding tokens carry class c_pad: outside the class iota range, they
+    # contribute to no accumulator at all
+    cid_p = jnp.pad(class_id.astype(jnp.int32), (0, v_pad - v),
+                    constant_values=c_pad)
+    # padding cnext entries target state q_pad: outside the target iota
+    # range, they scatter into no edge
+    cnext_p = jnp.pad(cnext.astype(jnp.int32),
+                      ((0, q_pad - q), (0, c_pad - c)), constant_values=q_pad)
+    reach_p = jnp.pad(mask_reach, ((0, q_pad - q), (0, q_pad - q)),
+                      constant_values=False)
+    w0_p = jnp.pad(w0.astype(jnp.float32), (0, q_pad - q),
+                   constant_values=NEG_INF)
+    mtid = jnp.asarray(mask_token_id, jnp.int32).reshape(1)
+    lpm = jnp.take(logp32, mtid[0], axis=1)               # (d,) logp of ⊥
+
+    grid = (d, v_pad // block_v)
+    w_final, bqs, btoks = pl.pallas_call(
+        functools.partial(
+            _kernel, block_v=block_v, vocab=v, num_classes=c,
+            q_pad=q_pad, c_pad=c_pad,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_v,), lambda i, j: (j,)),
+            pl.BlockSpec((q_pad, c_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((q_pad, q_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((q_pad,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_pad,), lambda i, j: (0,)),
+            pl.BlockSpec((1, q_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, q_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((d, q_pad), jnp.int32),
+            jax.ShapeDtypeStruct((d, q_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c_pad,), jnp.float32),
+            pltpu.VMEM((c_pad,), jnp.int32),
+            pltpu.VMEM((q_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logp_p, cid_p, cnext_p, reach_p, lpm, w0_p, mtid)
+    return w_final[:q], jnp.clip(bqs[:, :q], 0, q - 1), btoks[:, :q]

@@ -15,7 +15,8 @@ import functools
 import jax
 
 from .class_max import class_max_pallas
-from .decode_attention import decode_attention_pallas
+from .decode_attention import decode_attention_pallas, paged_decode_attention_pallas
+from .fused_decode import fused_dingo_dp_pallas
 from .maxplus import maxplus_dp_pallas
 from .softmax_stats import softmax_stats_pallas
 
@@ -47,3 +48,28 @@ def decode_attention(q, k, v, lengths=None, *, block_s: int = 512):
     with jax.named_scope("kernel_decode_attention"):
         return decode_attention_pallas(q, k, v, lengths, block_s=block_s,
                                        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("return_stats",))
+def paged_decode_attention(q, k_pool, v_pool, page_table, lengths, *,
+                           return_stats: bool = False):
+    """Paged flash-decoding over a shared page pool (see
+    ``decode_attention.paged_decode_attention_pallas``). ``q`` may carry a
+    block axis (B, S, H, Dh); ``return_stats`` yields the flash partial for
+    ``merge_attention`` — the serve hot path under
+    ``kernel_impl="pallas"``/``"pallas_fused"``."""
+    with jax.named_scope("kernel_paged_decode_attention"):
+        return paged_decode_attention_pallas(
+            q, k_pool, v_pool, page_table, lengths,
+            return_stats=return_stats, interpret=_interpret())
+
+
+@jax.jit
+def fused_dingo_dp(logp, class_id, cnext, mask_reach, w0, mask_token_id):
+    """Fused DINGO block DP (stages 1+2 of ``core.dingo`` in one kernel):
+    ``(d, V) log-probs -> (w_final, bqs, btoks)`` with the class maxima and
+    DP weights VMEM-resident across the whole block — the
+    ``kernel_impl="pallas_fused"`` hot path."""
+    with jax.named_scope("kernel_fused_dingo_dp"):
+        return fused_dingo_dp_pallas(logp, class_id, cnext, mask_reach, w0,
+                                     mask_token_id, interpret=_interpret())

@@ -97,6 +97,14 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--decode", default="dingo", choices=["unconstrained", "greedy", "dingo"])
     ap.add_argument("--remask", default="top_prob", choices=["random", "top_prob", "entropy"])
+    ap.add_argument("--kernel-impl", default="jnp",
+                    choices=["jnp", "pallas", "pallas_fused"],
+                    help="serve-step kernel path: jnp (pure-jax reference, "
+                         "fastest on CPU), pallas (per-stage Pallas kernels), "
+                         "pallas_fused (one fused DINGO-DP kernel + paged "
+                         "attention kernel — the TPU hot path; interpret mode "
+                         "off-TPU). All three are token-identical; see "
+                         "docs/API.md")
     ap.add_argument("--regex", default=r"<<[a-j]( (\+|\-|\*) [a-j])*>>")
     ap.add_argument("--prompt", default="q: total of a and b a: ")
     ap.add_argument("--batch", type=int, default=2)
@@ -144,6 +152,7 @@ def main():
         gen_len=max(args.gen_len, 32) if args.server else args.gen_len,
         block_size=args.block,
         diffusion_steps_per_block=args.steps, decode=args.decode, remask=args.remask,
+        kernel_impl=args.kernel_impl,
     )
     observer = (Observer(trace=args.trace is not None)
                 if (args.metrics_dump or args.trace) else None)

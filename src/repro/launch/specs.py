@@ -47,6 +47,11 @@ SHAPES: Dict[str, ShapeSpec] = {
 BLOCK = 32          # serving diffusion-block length
 DRYRUN_Q = 64       # representative DFA states for serve-step DINGO tables
 DRYRUN_C = 512      # representative token classes
+# serve-step kernel path lowered by the decode plans. "jnp" keeps the dry-run
+# lowering backend-portable (the Pallas kernels only lower natively on TPU);
+# flip to "pallas_fused" when lowering for a real TPU mesh to dry-run the
+# fused-kernel hot path (ServeConfig.kernel_impl; docs/API.md).
+KERNEL_IMPL = "jnp"
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +279,8 @@ def _decode_plan(cfg: ModelConfig, shape: ShapeSpec, rules, model_n, axis_sizes=
     b = shape.global_batch
     cache_len = serve_cache_len(cfg, shape)
     dt = jnp.dtype(cfg.dtype)
-    scfg = ServeConfig(decode="dingo", remask="top_prob", kernel_impl="jnp", block_size=BLOCK)
+    scfg = ServeConfig(decode="dingo", remask="top_prob",
+                       kernel_impl=KERNEL_IMPL, block_size=BLOCK)
     mask_id = cfg.vocab_size - 1
     serve_step = make_serve_step(cfg, scfg, mask_id, tables=None, n_commit=BLOCK // 4)
 

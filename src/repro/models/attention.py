@@ -205,13 +205,21 @@ def attn_apply(
     eps: float = 1e-6,
     commit: bool = False,
     attend_cache: bool = True,
+    attn_impl: str = "jnp",
 ):
     """Returns (out (B,S,D), updated cache or None).
 
     With a cache, the S query positions form the current diffusion block: they
     attend to the cached prefix plus the block itself (bidirectionally). With
     ``commit=True`` the block's K/V are appended to the cache (used by the
-    engine once a block's tokens are final, and for prompt prefill)."""
+    engine once a block's tokens are final, and for prompt prefill).
+
+    ``attn_impl`` selects how a PAGED prefix cache is attended: ``"jnp"``
+    gathers the slot's pages into a dense view and runs the jnp flash path;
+    ``"pallas"``/``"pallas_fused"`` drive ``paged_decode_attention_pallas``
+    directly over the page pool (scalar-prefetched page table, no gathered
+    cache in HBM) whenever no sliding window applies — the serve hot path.
+    Dense caches and windowed attention always use the jnp path."""
     b, s, d = x.shape
     h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     # constrain the PACKED projections (H*Dh is mesh-divisible even when H isn't,
@@ -244,22 +252,40 @@ def attn_apply(
         # decode: attend the (possibly sequence-sharded) prefix cache and the
         # block SEPARATELY and merge flash-decoding style — concatenating
         # would break the cache sharding and replicate gigabytes (DESIGN.md §4.5)
-        if isinstance(cache, PagedKVCache):
-            ck, cv = paged_gather(cache)
-        else:
-            ck, cv = cache.k, cache.v
-        t = ck.shape[1]
-        kpos_cache = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-        kv_valid = kpos_cache < cache.length[:, None]
-        # decode queries are one block (<=32): cache attention is a single DENSE
-        # sharded einsum — the chunked scan's fixed chunk size straddles the
-        # sequence-sharded cache's shard boundaries and forces an all-to-all
-        # reshard of the whole cache every layer (§Perf iteration 2)
-        part_cache = mha(
-            q, ck, cv, qpos_abs, kpos_cache,
-            window=window, kv_valid=kv_valid, chunk=max(t, cfg.attn_chunk),
-            return_stats=True,
+        use_paged_kernel = (
+            isinstance(cache, PagedKVCache)
+            and attn_impl in ("pallas", "pallas_fused")
+            and window is None
         )
+        if use_paged_kernel:
+            # hot path: the kernel DMAs each slot's pages straight from the
+            # shared pool (page table as a scalar-prefetch operand) and folds
+            # the S block queries into the grouped-query axis, so the dense
+            # (B, P·page_size) gathered view never touches HBM
+            from repro.kernels import ops as kops
+
+            part_cache = kops.paged_decode_attention(
+                q, cache.k, cache.v, cache.page_table, cache.length,
+                return_stats=True,
+            )
+        else:
+            if isinstance(cache, PagedKVCache):
+                ck, cv = paged_gather(cache)
+            else:
+                ck, cv = cache.k, cache.v
+            t = ck.shape[1]
+            kpos_cache = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+            kv_valid = kpos_cache < cache.length[:, None]
+            # decode queries are one block (<=32): cache attention is a single
+            # DENSE sharded einsum — the chunked scan's fixed chunk size
+            # straddles the sequence-sharded cache's shard boundaries and
+            # forces an all-to-all reshard of the whole cache every layer
+            # (§Perf iteration 2)
+            part_cache = mha(
+                q, ck, cv, qpos_abs, kpos_cache,
+                window=window, kv_valid=kv_valid, chunk=max(t, cfg.attn_chunk),
+                return_stats=True,
+            )
         part_block = mha(
             q, k, v, qpos_abs, qpos_abs, window=window,
             chunk=cfg.attn_chunk, return_stats=True,

@@ -81,6 +81,7 @@ def _layer_init(key, cfg: ModelConfig, kind: str, is_moe: bool, cross: bool, dty
 def _layer_apply(
     p, x, cfg: ModelConfig, kind: str, is_moe: bool, positions,
     cache, commit: bool, enc_out, window, attend_cache: bool = True,
+    attn_impl: str = "jnp",
 ):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if kind == "ssm":
@@ -95,7 +96,7 @@ def _layer_apply(
     else:
         mix, new_cache = attention.attn_apply(
             p["mixer"], h, cfg, positions, cache, window=window, commit=commit,
-            attend_cache=attend_cache,
+            attend_cache=attend_cache, attn_impl=attn_impl,
         )
     x = x + mix
     if "cross" in p and enc_out is not None:
@@ -195,11 +196,19 @@ def forward(
     remat: bool = False,
     logits_tail: Optional[int] = None,
     attend_cache: bool = True,
+    attn_impl: str = "jnp",
 ):
     """Returns (logits (B,S,V), new_caches, aux_loss, hidden).
 
     ``logits_tail=n`` computes logits only for the last n positions (prefill:
-    avoids a (B, 32k, 129k) unembed product when only caches are needed)."""
+    avoids a (B, 32k, 129k) unembed product when only caches are needed).
+
+    ``attn_impl`` (``"jnp"`` | ``"pallas"`` | ``"pallas_fused"``) picks the
+    prefix-cache attention path per layer: with a paged cache and no sliding
+    window, the pallas impls attend the page pool through
+    ``paged_decode_attention_pallas`` instead of gather + dense mha (see
+    ``attention.attn_apply``). It is threaded from ``ServeConfig.kernel_impl``
+    by ``make_serve_step``."""
     x = jnp.take(params["embed"], inputs.tokens, axis=0)
     if cfg.frontend == "vision" and inputs.vision_embeds is not None:
         pcount = inputs.vision_embeds.shape[1]
@@ -226,7 +235,7 @@ def forward(
                 cj = lc[j] if lc is not None else None
                 x, cj_new, aux = _layer_apply(
                     lp[j], x, cfg, kind, is_moe, inputs.positions,
-                    cj, commit, enc_out, eff_window, attend_cache,
+                    cj, commit, enc_out, eff_window, attend_cache, attn_impl,
                 )
                 new_lc.append(cj_new)
                 aux_acc = aux_acc + aux

@@ -181,6 +181,13 @@ class ServingEngine:
             raise ValueError(f"kv_layout must be 'dense' or 'paged', got {kv_layout!r}")
         if clock not in ("slot", "block"):
             raise ValueError(f"clock must be 'slot' or 'block', got {clock!r}")
+        # kernel path of the compiled serve step (remask confidence, DINGO
+        # block DP, paged cache attention) — all three are token-identical by
+        # differential test; see docs/API.md "Choosing kernel_impl"
+        if scfg.kernel_impl not in ("jnp", "pallas", "pallas_fused"):
+            raise ValueError(
+                f"kernel_impl must be 'jnp', 'pallas' or 'pallas_fused', "
+                f"got {scfg.kernel_impl!r}")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg

@@ -1,0 +1,210 @@
+"""Differential harness for the fused constrained-decode hot path
+(``kernel_impl="pallas_fused"``, docs/KERNELS.md).
+
+Three layers of evidence, mirroring how the path composes:
+
+1. unit: ``fused_dingo_dp`` (one pallas_call = class_max + edge build +
+   max-plus) is BITWISE identical to the jnp ``dingo_decode`` reference on
+   compiled token-DFA tables — tokens, validity, q_final, and logprob,
+   including argmax tie-breaks and no-mapping sentinels;
+2. batched: the vmapped strategy over stacked heterogeneous tables agrees
+   bitwise across impls (the serve grid's actual call shape);
+3. e2e: a mixed 8-request stream through the ServingEngine is
+   token-identical between ``kernel_impl="jnp"`` and ``"pallas_fused"``
+   across clock {slot, block} x kv {dense, paged} — the paged arms drive
+   ``paged_decode_attention_pallas`` (stats + merge) in the forward, so
+   this also pins that the kernel's accumulation order never flips an
+   argmax anywhere in the stream.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import Constraint, ConstraintCache, schema_for_fields
+from repro.core import (
+    build_token_dfa,
+    compile_pattern,
+    dingo_decode,
+    stack_tables,
+    tables_from_tokendfa,
+)
+from repro.core import decoders
+from repro.data import synthetic
+from repro.models import init_model
+from repro.serving import ServingEngine
+from repro.tokenizer import default_tokenizer
+
+VOCAB = [b"a", b"b", b"ab", b"+", b"(", b")", None]
+MASK_ID = 6
+PATTERNS = [r"\((a|b)+\)", r"(ab|ba)+", r"\(a\+b\)"]
+
+
+def _logp(rng, d, v):
+    return jnp.asarray(
+        np.log(rng.dirichlet(np.ones(v), size=d) + 1e-9).astype(np.float32))
+
+
+def _assert_same_decode(a, b):
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert bool(a.valid) == bool(b.valid)
+    assert int(a.q_final) == int(b.q_final)
+    # bitwise, not approx: the fused kernel reproduces the reference's
+    # exact tie-breaks (docs/KERNELS.md "Bit-exactness contract")
+    assert float(a.logprob) == float(b.logprob)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_fused_bitwise_matches_jnp(rng, pattern):
+    td = build_token_dfa(compile_pattern(pattern), VOCAB, mask_token_id=MASK_ID)
+    tables = tables_from_tokendfa(td)
+    for d in (4, 8):
+        for _ in range(3):
+            logp = _logp(rng, d, len(VOCAB))
+            _assert_same_decode(
+                dingo_decode(logp, tables, impl="jnp"),
+                dingo_decode(logp, tables, impl="pallas_fused"),
+            )
+
+
+def test_fused_composition_equals_stage_kernels(rng):
+    """fused == the pallas stage composition (class_max o maxplus_dp) too:
+    all three impls are interchangeable on the same tables."""
+    td = build_token_dfa(compile_pattern(PATTERNS[0]), VOCAB, mask_token_id=MASK_ID)
+    tables = tables_from_tokendfa(td)
+    logp = _logp(rng, 6, len(VOCAB))
+    jnp_out = dingo_decode(logp, tables, impl="jnp")
+    _assert_same_decode(jnp_out, dingo_decode(logp, tables, impl="pallas"))
+    _assert_same_decode(jnp_out, dingo_decode(logp, tables, impl="pallas_fused"))
+
+
+def test_fused_stacked_vmapped_matches_jnp(rng):
+    """The serve grid's call shape: heterogeneous (Q,C) tables stacked to one
+    batch, decoded through the vmapped strategy."""
+    tds = [build_token_dfa(compile_pattern(p), VOCAB, mask_token_id=MASK_ID)
+           for p in PATTERNS]
+    stacked = stack_tables(tds)
+    strat = decoders.get_strategy("dingo")
+    b, d = len(tds), 8
+    logp = _logp(rng, b * d, len(VOCAB)).reshape(b, d, len(VOCAB))
+    w0 = strat.init_carry(stacked, b)
+    out_jnp = strat.batched(logp, stacked, w0, t_ax=0, impl="jnp")
+    out_fused = strat.batched(logp, stacked, w0, t_ax=0, impl="pallas_fused")
+    for x, y in zip(out_jnp, out_fused):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_paged_stats_kernel_matches_plain_and_multi_query(rng):
+    """return_stats=True returns the same normalized output as the plain
+    paged kernel, and the multi-query fold (S>1 queries sharing one
+    query-independent length mask) equals per-position single-query calls."""
+    from repro.kernels.decode_attention import paged_decode_attention_pallas
+
+    b, h, kvh, dh, ps, p, s = 2, 4, 2, 16, 8, 4, 3
+    n_pages = 1 + b * p
+    pt = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages)).reshape(b, p).astype(np.int32))
+    k_pool = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh)), jnp.float32)
+    lengths = jnp.asarray([7, 29], jnp.int32)
+    q3 = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+
+    plain = paged_decode_attention_pallas(
+        q3, k_pool, v_pool, pt, lengths, interpret=True)
+    out, m, l = paged_decode_attention_pallas(
+        q3, k_pool, v_pool, pt, lengths, return_stats=True, interpret=True)
+    assert out.shape == (b, 1, kvh, h // kvh, dh) and m.shape == (b, 1, kvh, h // kvh)
+    np.testing.assert_allclose(
+        np.asarray(plain),
+        np.asarray(out.transpose(0, 2, 3, 1, 4).reshape(b, h, dh)),
+        rtol=1e-6, atol=1e-6)
+    assert bool(jnp.all(l > 0))
+
+    q4 = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    folded = paged_decode_attention_pallas(
+        q4, k_pool, v_pool, pt, lengths, interpret=True)
+    for i in range(s):
+        single = paged_decode_attention_pallas(
+            q4[:, i], k_pool, v_pool, pt, lengths, interpret=True)
+        np.testing.assert_allclose(np.asarray(folded[:, i]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# e2e serve differential (ISSUE 9 acceptance)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+def _mixed_stream():
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    js1 = schema_for_fields(synthetic.JSON_SCHEMAS[1][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.json_schema(js1), 32),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.regex(synthetic.MATH_REGEX), 8),
+    ]
+    return [Request(f"prompt {i}: " + "x" * (3 * i), c, max_new_tokens=m)
+            for i, (c, m) in enumerate(specs)]
+
+
+def _serve(engine, reqs):
+    order = {r.request_id: i for i, r in enumerate(reqs)}
+    return {order[c.request_id]: c for c in engine.serve(reqs)}
+
+
+@pytest.mark.parametrize("clock", ["slot", "block"])
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_fused_serve_token_identical(tok, setup, clock, layout):
+    """kernel_impl="pallas_fused" must be token-identical to "jnp" on a
+    mixed 8-request stream — per clock x kv layout. The paged arms run the
+    whole Pallas hot path (paged attention kernel + fused DP kernel)."""
+    cfg, params, scfg = setup
+    runs = {}
+    for impl in ("jnp", "pallas_fused"):
+        eng = ServingEngine(
+            params, cfg, dataclasses.replace(scfg, kernel_impl=impl), tok,
+            n_slots=3, max_prompt_len=32, constraint_cache=ConstraintCache(),
+            seed=0, kv_layout=layout, page_size=8, clock=clock,
+        )
+        runs[impl] = _serve(eng, _mixed_stream())
+
+    ref, fused = runs["jnp"], runs["pallas_fused"]
+    assert set(ref) == set(fused) == set(range(8))
+    for i in range(8):
+        np.testing.assert_array_equal(
+            np.asarray(ref[i].tokens), np.asarray(fused[i].tokens),
+            err_msg=f"request {i} diverged ({clock}/{layout})")
+        assert ref[i].text == fused[i].text
+        assert ref[i].valid == fused[i].valid
+        assert ref[i].matched == fused[i].matched
+
+
+def test_engine_rejects_unknown_kernel_impl(tok, setup):
+    cfg, params, scfg = setup
+    with pytest.raises(ValueError, match="kernel_impl"):
+        ServingEngine(params, cfg,
+                      dataclasses.replace(scfg, kernel_impl="mosaic"), tok,
+                      n_slots=2, max_prompt_len=32,
+                      constraint_cache=ConstraintCache(), seed=0)

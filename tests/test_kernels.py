@@ -133,8 +133,9 @@ def test_class_max_hypothesis(seed, v, c):
     np.testing.assert_array_equal(ca, ca2)
 
 
-def test_dingo_pallas_impl_matches_jnp(rng):
-    """End-to-end DP with kernel stages == pure-jnp DP."""
+@pytest.mark.parametrize("impl", ["pallas", "pallas_fused"])
+def test_dingo_pallas_impl_matches_jnp(rng, impl):
+    """End-to-end DP with kernel stages (or the fused kernel) == pure-jnp DP."""
     import jax.numpy as jnp
 
     from repro.core import (
@@ -150,7 +151,7 @@ def test_dingo_pallas_impl_matches_jnp(rng):
     for _ in range(5):
         logp = np.log(rng.dirichlet(np.ones(7), size=4) + 1e-9).astype(np.float32)
         a = dingo_decode(jnp.asarray(logp), tables, impl="jnp")
-        b = dingo_decode(jnp.asarray(logp), tables, impl="pallas")
+        b = dingo_decode(jnp.asarray(logp), tables, impl=impl)
         assert bool(a.valid) == bool(b.valid)
         if bool(a.valid):
             assert float(a.logprob) == pytest.approx(float(b.logprob), abs=1e-4)

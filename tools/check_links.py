@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Relative-markdown-link checker for the docs tree (CI ``docs`` job).
+
+Scans ``docs/**/*.md`` plus every top-level ``*.md`` and fails (exit 1) when
+an inline markdown link points at a file that does not exist in the repo, or
+at a heading anchor missing from the target markdown file. External links
+(``http(s)://``, ``mailto:``) are skipped — this is a repo-consistency check
+that must run in seconds with no network and no third-party installs, not a
+dead-URL crawler. Links inside fenced code blocks and inline code spans are
+ignored.
+
+    python tools/check_links.py            # repo root inferred from this file
+    python tools/check_links.py --root .   # explicit root
+
+Anchor checking uses the GitHub slug rule (lowercase; punctuation dropped;
+spaces to hyphens; duplicate headings get ``-1``, ``-2`` suffixes), so
+``docs/KERNELS.md#how-to-read-the-rooflines`` is verified against the actual
+headings of ``docs/KERNELS.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+# inline links and images: [text](target) / ![alt](target "title")
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.+?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _body_lines(text: str):
+    """Yield (lineno, line) for lines outside fenced code blocks."""
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+def heading_slugs(text: str) -> set[str]:
+    """GitHub-style anchor slugs for every heading in ``text``."""
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for _, line in _body_lines(text):
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        # strip code/emphasis markers but keep literal underscores —
+        # GitHub slugs them verbatim (`kernel_impl` -> kernel_impl)
+        raw = re.sub(r"[`*]", "", m.group(2))
+        slug = re.sub(r"[^\w\- ]", "", raw.lower()).strip().replace(" ", "-")
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    own_slugs = None  # lazy: most files have no same-file anchors
+    for lineno, line in _body_lines(text):
+        for target in LINK_RE.findall(CODE_SPAN_RE.sub("", line)):
+            if target.startswith(EXTERNAL):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if not path_part:  # same-file anchor: #section
+                if own_slugs is None:
+                    own_slugs = heading_slugs(text)
+                if anchor and anchor not in own_slugs:
+                    errors.append(f"{md}:{lineno}: no heading for anchor "
+                                  f"#{anchor}")
+                continue
+            dest = (md.parent / path_part).resolve()
+            try:
+                dest.relative_to(root)
+            except ValueError:
+                errors.append(f"{md}:{lineno}: link escapes the repo: "
+                              f"{target}")
+                continue
+            if not dest.exists():
+                errors.append(f"{md}:{lineno}: broken link: {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in heading_slugs(
+                        dest.read_text(encoding="utf-8")):
+                    errors.append(f"{md}:{lineno}: {path_part} has no "
+                                  f"heading for anchor #{anchor}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: parent of tools/)")
+    args = ap.parse_args(argv)
+    root = (pathlib.Path(args.root) if args.root
+            else pathlib.Path(__file__).resolve().parent.parent).resolve()
+
+    files = sorted(root.glob("*.md")) + sorted((root / "docs").rglob("*.md"))
+    if not files:
+        print(f"check_links: no markdown files under {root}", file=sys.stderr)
+        return 2
+
+    errors = []
+    for md in files:
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
