@@ -50,6 +50,10 @@ import sys
 
 RATIO_KEYS = (
     "slot_clock_steps_gain_x",
+    # same-run ratio, ~1.0 deterministic: the async front-end finishes the
+    # identical open-loop schedule in the same decode-step makespan as the
+    # sync slot-clock arm (prefill-ahead/streaming never cost decode steps)
+    "async_steps_match_x",
     # bool gate (True=1.0): every uniform-budget group of the forced batch
     # decode compiled its step exactly once — the per-block live/carry swaps
     # are traced data, never a retrace. Deterministic, so it gates tightly.
@@ -61,6 +65,10 @@ RATIO_KEYS = (
 REPORT_KEYS = (
     "slot_clock_req_s_gain_x",
     "slot_clock_p50_gain_x",
+    # async front-end vs sync slot clock on the same schedule: wall-clock
+    # (8-request stream on a shared runner) — reported, never gated
+    "async_req_s_gain_x",
+    "async_ttfc_gain_x",
     # forced vs unforced warm batch decode in the same run: wall-clock on an
     # 8-request stream, ±20% run-to-run on a shared runner — reported, never
     # gated; the normalized batch_forced.forced.req_s below carries the
@@ -72,6 +80,7 @@ THROUGHPUT_KEYS = (
     "warm.req_s",
     "arrivals_lockstep.req_s",
     "arrivals_slot_clock.req_s",
+    "arrivals_async.req_s",
     "batch_forced.forced.req_s",
 )
 BAND_KEYS = (
@@ -94,13 +103,21 @@ DEFAULT_NORMALIZE = "batch_warm.req_s"
 # ---- trace profile (BENCH_trace.json) --------------------------------------
 TRACE_RATIO_KEYS = (
     # bool gates (True=1.0): the 1000-request replay drained with zero slot
-    # and zero page leaks, in both arms
+    # and zero page leaks, in every arm
     "fifo_drained_clean",
     "slo_drained_clean",
+    "async_drained_clean",
+    "policy_drained_clean",
     # floor gates: the fraction of constrained completions whose tokens
     # host-side fullmatch — the soundness number, ~1.0 by construction
     "gates.fifo_matched_fraction",
     "gates.slo_matched_fraction",
+    "gates.async_matched_fraction",
+    "gates.policy_matched_fraction",
+    # same-run ratio, ~1.0 deterministic: the async front-end replays the
+    # identical trace in the SAME decode-step makespan as the sync fifo arm
+    # — overlapped prefill and streaming may never cost decode steps
+    "gates.async_vs_fifo_makespan_x",
 )
 TRACE_BAND_KEYS = (
     # two-sided |new-base| <= tol*base: makespan going DOWN is an improvement
@@ -113,16 +130,29 @@ TRACE_BAND_KEYS = (
     "gates.slo_attainment",
     "gates.slo_rejected",
     "gates.slo_degraded",
+    # async/preemptive arms (additive: skipped when the baseline predates
+    # them): step-domain makespans plus the priority policy's deterministic
+    # evict/replay counts on the seeded trace
+    "gates.async_makespan_steps",
+    "gates.policy_makespan_steps",
+    "gates.policy_preempted",
+    "gates.policy_resumed",
 )
 TRACE_REPORT_KEYS = (
     # wall-clock measures: meaningful on one machine, noise across runners
     "fifo.req_s",
     "fifo.goodput_req_s",
     "slo.goodput_req_s",
+    "async.goodput_req_s",
+    "policy.goodput_req_s",
     "fifo.p95_s",
     "slo.p95_s",
     "fifo.ttfc_p50_s",
     "slo.ttfc_p50_s",
+    # the async front-end's reason to exist in wall terms: first streamed
+    # token while the next prompt's prefill rides the async dispatch queue
+    "async.ttfc_p50_s",
+    "async.ttfc_p95_s",
 )
 
 # ---- kernels profile (BENCH_kernels.json) ----------------------------------

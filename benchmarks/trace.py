@@ -19,12 +19,16 @@ Three pieces, each usable on its own:
     arms drive through this same function.
 
   * **Bench** (:func:`run`) — replays a >= 1000-request trace at 16 slots
-    over an oversubscribed page pool, FIFO (``slo=None``) vs SLO-aware
-    admission, and writes ``experiments/BENCH_trace.json``. The committed
-    JSON is the CI baseline: bench-smoke re-runs the trace and
-    ``benchmarks/ci_compare.py --profile trace`` band-gates the
-    machine-independent keys (matched fraction, makespan steps, reject /
-    degrade counts, drained-clean booleans).
+    over an oversubscribed page pool in four arms: FIFO (``slo=None``),
+    SLO-aware admission, the asyncio streaming front-end
+    (:func:`replay_async` — same schedule, prefill-ahead + per-block token
+    streams, token-identical to FIFO), and the preemptive priority policy
+    (every 5th request in class 1; evict/park/replay). Writes
+    ``experiments/BENCH_trace.json``; the committed JSON is the CI baseline:
+    bench-smoke re-runs the trace and ``benchmarks/ci_compare.py --profile
+    trace`` band-gates the machine-independent keys (matched fraction,
+    makespan steps, reject / degrade / preempt / resume counts,
+    drained-clean booleans).
 """
 from __future__ import annotations
 
@@ -217,11 +221,7 @@ def replay(
                        else eng.step_block)
     items = sorted(arrivals, key=lambda p: p[0])
     eng.decode_steps = 0
-    stats0 = dataclasses.replace(sched.stats,
-                                 reject_reasons=dict(sched.stats.reject_reasons))
-    if eng.pool is not None:
-        pool0 = dataclasses.replace(eng.pool.stats)
-        eng.pool.stats.highwater = eng.pool.in_use   # replay's own peak
+    stats0, pool0 = _snapshot(eng)
     done: List = []
     arrival_step = {}
     finish_step = {}
@@ -255,7 +255,94 @@ def replay(
         # busy for part of it and gets half credit
         busy_steps += 0.5 * (busy + sched.busy) * (eng.decode_steps - before)
     wall = time.perf_counter() - t0
+    return _report(eng, done, arrival_step, finish_step, wall, busy_steps,
+                   stats0, pool0, slo_target_steps)
 
+
+def replay_async(
+    eng,
+    arrivals: Sequence[Tuple[int, Request]],
+    *,
+    prefill_ahead: int = 1,
+    idle_step_s: float = 1e-3,
+    slo_target_steps: Optional[int] = None,
+) -> dict:
+    """Open-loop replay through the asyncio streaming front-end
+    (:class:`repro.serving.AsyncServingEngine`): the IDENTICAL step-domain
+    arrival schedule as :func:`replay`, but each unit of work dispatches the
+    next queued prompt's prefill ahead of the micro-step and fans committed
+    blocks out to per-request token streams. Per request the output is
+    token-identical to :func:`replay` (pinned by tests/test_async_engine.py),
+    so the step-domain keys (makespan, matched fraction, sched counters)
+    must agree with the sync arm — the wall-clock keys (``ttfc_*``,
+    ``goodput_req_s``) are where overlapped prefill and streaming show up."""
+    import asyncio
+
+    from repro.serving import AsyncServingEngine
+
+    sched = eng.sched
+    items = sorted(arrivals, key=lambda p: p[0])
+    eng.decode_steps = 0
+    stats0, pool0 = _snapshot(eng)
+    done: List = []
+    arrival_step = {}
+    finish_step = {}
+    busy_steps = 0.0
+
+    async def _main():
+        nonlocal busy_steps
+        aeng = AsyncServingEngine(eng, prefill_ahead=prefill_ahead,
+                                  idle_sleep_s=idle_step_s)
+        i = 0
+        t0 = time.perf_counter()
+        t_prev, s_prev = t0, 0
+        while i < len(items) or sched.pending or sched.busy:
+            now = time.perf_counter()
+            while i < len(items) and eng.decode_steps >= items[i][0]:
+                due, req = items[i]
+                frac = ((due - s_prev) / (eng.decode_steps - s_prev)
+                        if eng.decode_steps > s_prev else 1.0)
+                req.submit_time_s = (t_prev
+                                     + max(0.0, min(1.0, frac)) * (now - t_prev))
+                arrival_step[req.request_id] = due
+                aeng.submit(req)
+                i += 1
+            if not (sched.pending or sched.busy):
+                await asyncio.sleep(idle_step_s)   # idle tick, loop stays live
+                eng.decode_steps += 1
+                t_prev, s_prev = time.perf_counter(), eng.decode_steps
+                continue
+            before = eng.decode_steps
+            busy = sched.busy
+            t_prev, s_prev = time.perf_counter(), before
+            ev = await aeng.step()
+            for c in ev.completions:
+                finish_step[c.request_id] = eng.decode_steps
+            done.extend(ev.completions)
+            busy_steps += 0.5 * (busy + sched.busy) * (eng.decode_steps - before)
+        return time.perf_counter() - t0
+
+    wall = asyncio.run(_main())
+    return _report(eng, done, arrival_step, finish_step, wall, busy_steps,
+                   stats0, pool0, slo_target_steps)
+
+
+def _snapshot(eng):
+    """Pre-replay stat snapshots so a warmed engine reports only this
+    replay's deltas."""
+    sched = eng.sched
+    stats0 = dataclasses.replace(sched.stats,
+                                 reject_reasons=dict(sched.stats.reject_reasons))
+    pool0 = None
+    if eng.pool is not None:
+        pool0 = dataclasses.replace(eng.pool.stats)
+        eng.pool.stats.highwater = eng.pool.in_use   # replay's own peak
+    return stats0, pool0
+
+
+def _report(eng, done, arrival_step, finish_step, wall, busy_steps,
+            stats0, pool0, slo_target_steps):
+    sched = eng.sched
     served = [c for c in done if "rejected" not in c.metadata]
     rejected = [c for c in done if "rejected" in c.metadata]
     degraded = [c for c in served if "degraded" in c.metadata]
@@ -306,6 +393,10 @@ def replay(
             degraded=sched.stats.degraded - stats0.degraded,
             early_eos=sched.stats.early_eos - stats0.early_eos,
             eos_fastpath=sched.stats.eos_fastpath - stats0.eos_fastpath,
+            # preemptive-policy deltas (0 under FIFO): slots evicted to the
+            # page pool mid-decode and parked snapshots replayed back in
+            preempted=sched.stats.preempted - stats0.preempted,
+            resumed=sched.stats.resumed - stats0.resumed,
             # per-slug reject deltas: "budget_too_small" (infeasible, both
             # arms) vs "slo" (policy sheds, SLO arm only)
             reject_reasons={
@@ -354,13 +445,14 @@ def warm_engine(eng, warmup: Sequence[Request]) -> Tuple[Any, float]:
 BENCH_JSON = "experiments/BENCH_trace.json"
 
 
-def _bench_engine(params, cfg, scfg, tok, cache, *, n_slots, n_pages, slo):
+def _bench_engine(params, cfg, scfg, tok, cache, *, n_slots, n_pages, slo,
+                  policy=None):
     from repro.serving import ServingEngine
 
     return ServingEngine(
         params, cfg, scfg, tok, n_slots=n_slots, max_prompt_len=32,
         constraint_cache=cache, kv_layout="paged", page_size=8,
-        n_pages=n_pages, slo=slo,
+        n_pages=n_pages, slo=slo, policy=policy,
     )
 
 
@@ -418,6 +510,34 @@ def run(quick: bool = True) -> None:
                             slo_target_steps=slo.target_steps)
     fifo, slo_arm = arms["fifo"], arms["slo"]
 
+    # async front-end arm (PR 10): the SAME engine config and arrival
+    # schedule as the fifo arm, driven through AsyncServingEngine — prefill
+    # dispatched ahead of each micro-step, tokens streamed per block. Token-
+    # identical to the sync arm by construction, so the step-domain keys
+    # must MATCH fifo's (gated as a same-run ratio); ttfc/goodput wall
+    # numbers show the overlap and are report-only.
+    eng = _bench_engine(params, cfg, scfg, tok, cache,
+                        n_slots=n_slots, n_pages=n_pages, slo=None)
+    _, step_s = warm_engine(eng, [r for _, r in build_requests(trace)[:8]])
+    async_arm = replay_async(eng, build_requests(trace), prefill_ahead=1,
+                             idle_step_s=step_s,
+                             slo_target_steps=slo.target_steps)
+
+    # preemptive-priority arm (PR 10): every 5th request rides scheduling
+    # class 1; the policy evicts class-0 slots (pages back to the pool, DFA
+    # carry + committed tokens parked host-side) when a class-1 arrival is
+    # blocked, and replays them later. Step-domain preempt/resume counts are
+    # deterministic for the seeded trace and band-gate in CI.
+    eng = _bench_engine(params, cfg, scfg, tok, cache,
+                        n_slots=n_slots, n_pages=n_pages, slo=None,
+                        policy="priority")
+    step, step_s = warm_engine(eng, [r for _, r in build_requests(trace)[:8]])
+    pol_arrivals = build_requests(trace)
+    for k, (_, r) in enumerate(pol_arrivals):
+        r.priority = 1 if k % 5 == 0 else 0
+    policy_arm = replay(eng, pol_arrivals, step_fn=step, idle_step_s=step_s,
+                        slo_target_steps=slo.target_steps)
+
     emit("trace_fifo_goodput", 1e6 / max(fifo["goodput_req_s"], 1e-9),
          f"{fifo['goodput_req_s']:.2f} good req/s of {fifo['req_s']:.2f}, "
          f"p95 {fifo['p95_s']:.2f}s, makespan {fifo['makespan_steps']} steps, "
@@ -427,6 +547,17 @@ def run(quick: bool = True) -> None:
          f"{slo_arm['slo_attainment']:.2f} vs {fifo['slo_attainment']:.2f} "
          f"fifo; {slo_arm['n_rejected']} rejected "
          f"{slo_arm['n_degraded']} degraded")
+    emit("trace_async_goodput", 1e6 / max(async_arm["goodput_req_s"], 1e-9),
+         f"{async_arm['goodput_req_s']:.2f} good req/s async vs "
+         f"{fifo['goodput_req_s']:.2f} sync, ttfc p50 "
+         f"{async_arm['ttfc_p50_s']:.2f}s vs {fifo['ttfc_p50_s']:.2f}s, "
+         f"makespan {async_arm['makespan_steps']} vs "
+         f"{fifo['makespan_steps']} steps")
+    emit("trace_policy_preempt", 1e6 / max(policy_arm["goodput_req_s"], 1e-9),
+         f"{policy_arm['sched']['preempted']} preempted "
+         f"{policy_arm['sched']['resumed']} resumed, makespan "
+         f"{policy_arm['makespan_steps']} steps, "
+         f"{policy_arm['goodput_req_s']:.2f} good req/s")
 
     os.makedirs(os.path.dirname(BENCH_JSON), exist_ok=True)
     with open(BENCH_JSON, "w") as f:
@@ -442,6 +573,8 @@ def run(quick: bool = True) -> None:
             ),
             "fifo": fifo,
             "slo": slo_arm,
+            "async": async_arm,
+            "policy": policy_arm,
             # machine-independent gate keys (benchmarks/ci_compare.py
             # --profile trace): everything here depends only on the seeded
             # trace + scheduler policy, never on runner speed
@@ -458,7 +591,23 @@ def run(quick: bool = True) -> None:
                 "slo_rejected":
                     slo_arm["sched"]["reject_reasons"].get("slo", 0),
                 "slo_degraded": slo_arm["n_degraded"],
+                # async arm (PR 10): token-identical to fifo by construction,
+                # so its step-domain keys must track fifo's exactly — the
+                # same-run makespan ratio gates at ~1.0 (prefill-ahead and
+                # streaming may never cost decode steps)
+                "async_matched_fraction": async_arm["matched_fraction"],
+                "async_makespan_steps": async_arm["makespan_steps"],
+                "async_vs_fifo_makespan_x": (fifo["makespan_steps"]
+                                             / max(1, async_arm["makespan_steps"])),
+                # preemptive-priority arm (PR 10): deterministic step-domain
+                # evict/replay counts for the seeded trace
+                "policy_matched_fraction": policy_arm["matched_fraction"],
+                "policy_makespan_steps": policy_arm["makespan_steps"],
+                "policy_preempted": policy_arm["sched"]["preempted"],
+                "policy_resumed": policy_arm["sched"]["resumed"],
             },
             "fifo_drained_clean": fifo["drained_clean"],
             "slo_drained_clean": slo_arm["drained_clean"],
+            "async_drained_clean": async_arm["drained_clean"],
+            "policy_drained_clean": policy_arm["drained_clean"],
         }, f, indent=1)

@@ -77,12 +77,15 @@ class Config:
         "repro/serving/scheduler.py",
         "repro/serving/slo.py",
         "repro/serving/paged.py",
+        "repro/serving/policy.py",
+        "repro/serving/async_engine.py",
         "repro/constraints/cache.py",
     )
     # serve/decode hot loops scanned by RJ002 (function qualname suffixes)
     hot_loop_functions: Tuple[str, ...] = (
         "ServingEngine.step_block",
         "ServingEngine.step_token",
+        "ServingEngine.micro_step",
         "ServingEngine.serve",
         "DiffusionEngine.generate",
     )

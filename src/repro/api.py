@@ -91,6 +91,11 @@ class Request:
     max_new_tokens: int = 32
     request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
     metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # scheduling class for policy-ordered admission (repro.serving.policy):
+    # higher runs first; a preemptive policy may evict a strictly-lower
+    # priority slot mid-decode to make room. 0 (the default) under the
+    # default FifoPolicy reproduces strict arrival order exactly.
+    priority: int = 0
     # filled by the engine at submit time (host wall-clock, perf_counter domain)
     submit_time_s: Optional[float] = None
     # filled by the scheduler at submit time: its decode-step clock reading,
@@ -140,6 +145,7 @@ class Engine:
         clock: str = "slot",
         force_closure: bool = True,
         slo=None,
+        policy=None,
         seed: int = 0,
         observer=None,
     ):
@@ -164,11 +170,13 @@ class Engine:
         self.last_decode_traces: List[int] = []
         self._seed = seed
         # SLO-aware admission for serve mode (repro.serving.slo.SLO, or None
-        # for the exact FIFO admission of before — the kill-switch)
+        # for the exact FIFO admission of before — the kill-switch).
+        # ``policy`` is a repro.serving.policy.SchedulingPolicy or a factory
+        # name ("fifo" | "priority" | "priority-sjf"); None keeps strict FIFO.
         self._serving_kwargs = dict(
             n_slots=n_slots, max_prompt_len=max_prompt_len,
             kv_layout=kv_layout, page_size=page_size, n_pages=n_pages,
-            clock=clock, slo=slo, observer=observer,
+            clock=clock, slo=slo, policy=policy, observer=observer,
         )
         self._serving = None
 
@@ -361,6 +369,18 @@ class Engine:
         the micro-step a slot's DFA reaches closure or EOS, and queued work
         back-fills freed slots without waiting on neighbours' blocks."""
         return self.serving.serve(requests)
+
+    def serve_async(self, *, prefill_ahead: int = 1):
+        """Asyncio streaming front-end over the same serving core
+        (:class:`repro.serving.async_engine.AsyncServingEngine`): ``submit``
+        returns a handle whose ``async for`` yields the request's tokens as
+        their blocks commit, with an awaitable final Completion; the next
+        queued prompt's prefill is dispatched while the grid decodes
+        (``prefill_ahead`` prompts deep, 0 disables). Token-identical to
+        :meth:`serve` — see docs/API.md for a quickstart."""
+        from repro.serving.async_engine import AsyncServingEngine
+
+        return AsyncServingEngine(self.serving, prefill_ahead=prefill_ahead)
 
     # ---- introspection ----------------------------------------------------
     @property

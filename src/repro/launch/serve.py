@@ -66,6 +66,12 @@ def _report_cache(cache: ConstraintCache) -> str:
 
 def run_server(args, eng: Engine, n_requests: int):
     reqs = _demo_stream(args, n_requests)
+    if getattr(args, "use_async", False):
+        # every 4th request rides a higher scheduling class so a preemptive
+        # --policy has something to reorder/evict in the demo stream
+        for i, r in enumerate(reqs):
+            r.priority = 1 if i % 4 == 0 else 0
+        return run_server_async(args, eng, reqs)
     t0 = time.time()
     for c in eng.serve(reqs):
         print(f"[req {c.request_id}] valid={c.valid} matched={c.matched} "
@@ -73,6 +79,39 @@ def run_server(args, eng: Engine, n_requests: int):
     dt = time.time() - t0
     print(f"{dt:.2f}s total | {len(reqs)/dt:.2f} req/s | "
           f"{eng.serving.blocks_run} blocks | {_report_cache(eng.cache)}")
+
+
+def run_server_async(args, eng: Engine, reqs):
+    """--async demo: drive the asyncio front-end, streaming tokens as their
+    blocks commit (printed per request as '+n tok'), prefilling the next
+    prompt while the grid decodes."""
+    import asyncio
+
+    async def _main():
+        aeng = eng.serve_async()
+        t0 = time.time()
+        handles = [aeng.submit(r) for r in reqs]
+
+        async def _consume(h):
+            n = 0
+            async for _tok in h:
+                n += 1
+            c = await h.completion()
+            print(f"[req {c.request_id}] valid={c.valid} matched={c.matched} "
+                  f"blocks={c.blocks} streamed={n} tok "
+                  f"ttfc={c.metadata.get('ttfc_s', 0.0):.2f}s "
+                  f"latency={c.latency_s:.2f}s -> {c.text!r}")
+
+        consumers = [asyncio.ensure_future(_consume(h)) for h in handles]
+        await aeng.drain()
+        await asyncio.gather(*consumers)
+        return time.time() - t0
+
+    dt = asyncio.run(_main())
+    sstats = eng.serving.stats()["scheduler"]
+    print(f"{dt:.2f}s total | {len(reqs)/dt:.2f} req/s | "
+          f"{eng.serving.blocks_run} blocks | preempted={sstats['preempted']} "
+          f"resumed={sstats['resumed']} | {_report_cache(eng.cache)}")
 
 
 def run_batch(args, eng: Engine):
@@ -124,6 +163,15 @@ def main():
     ap.add_argument("--clock", default="slot", choices=["slot", "block"],
                     help="--server block clock: per-slot (admit/retire on each "
                          "row's own boundary, mid-block) or lockstep grid")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="--server via the asyncio streaming front-end "
+                         "(Engine.serve_async): per-request token streams, "
+                         "next prompt prefilled while the grid decodes")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "priority-sjf"],
+                    help="--server dequeue policy: strict FIFO (default), or "
+                         "priority classes with deadline/SJF ordering and "
+                         "page-aware preemption (repro.serving.policy)")
     ap.add_argument("--no-force-closure", action="store_true",
                     help="batch mode: disable budget-aware end-state forcing "
                          "(classic live-set semantics; completions may not "
@@ -161,6 +209,7 @@ def main():
                  kv_layout="paged" if args.paged else "dense",
                  page_size=args.page_size, clock=args.clock,
                  force_closure=not args.no_force_closure,
+                 policy=args.policy if args.policy != "fifo" else None,
                  observer=observer)
 
     if args.server:

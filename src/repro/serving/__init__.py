@@ -2,14 +2,20 @@
 
 Layers:
 
-    paged      fixed-size KV page allocator (reserve/alloc, trash page 0)
-    slo        SLO-aware admission policy (decode-step projection from the
-               distance-to-accept tables; degrade-before-reject)
-    scheduler  slot-based continuous batching (host-only bookkeeping)
-    tables     device half of slot tables: padded-table LRU + (Q, C)-bucketed
-               grid stacking (SlotTableStacker)
-    engine     serve loop driving make_serve_step; yields completions
-               (kv_layout='dense' per-slot grid or 'paged' shared page pool)
+    paged        fixed-size KV page allocator (reserve/alloc, trash page 0)
+    slo          SLO-aware admission policy (decode-step projection from the
+                 distance-to-accept tables; degrade-before-reject)
+    policy       dequeue/preemption policy objects (FIFO default; priority
+                 classes + deadline/SJF ordering, page-aware preemption)
+    scheduler    slot-based continuous batching (host-only bookkeeping,
+                 parked-state snapshot/restore for preempted requests)
+    tables       device half of slot tables: padded-table LRU + (Q, C)-
+                 bucketed grid stacking (SlotTableStacker)
+    engine       step-driven core (micro_step/StepEvents/prefill_ahead) +
+                 the sync serve() generator over it (kv_layout='dense'
+                 per-slot grid or 'paged' shared page pool)
+    async_engine asyncio streaming front-end: per-request async token
+                 iterators + Completion futures over the same core
 
 The request/constraint surface moved to the unified API (PR 3): build
 ``Request``/``Completion`` from :mod:`repro.api` and ``Constraint`` /
@@ -24,9 +30,16 @@ import warnings
 from repro import api as _api
 from repro import constraints as _constraints
 
-from .engine import ServingEngine
+from .async_engine import AsyncServingEngine, StreamHandle
+from .engine import ServingEngine, StepEvents
 from .paged import PagePool, PagesExhausted, PoolStats
-from .scheduler import ContinuousBatchingScheduler, Slot, qc_bucket
+from .policy import (
+    FifoPolicy,
+    PriorityPolicy,
+    SchedulingPolicy,
+    make_policy,
+)
+from .scheduler import ContinuousBatchingScheduler, ParkedState, Slot, qc_bucket
 from .slo import SLO
 from .tables import SlotTableStacker
 
@@ -47,9 +60,11 @@ _DEPRECATED = {
 }
 
 __all__ = [
-    "ServingEngine", "PagePool", "PagesExhausted", "PoolStats",
-    "ContinuousBatchingScheduler", "SLO", "Slot", "SlotTableStacker",
-    "qc_bucket",
+    "ServingEngine", "StepEvents", "AsyncServingEngine", "StreamHandle",
+    "PagePool", "PagesExhausted", "PoolStats",
+    "SchedulingPolicy", "FifoPolicy", "PriorityPolicy", "make_policy",
+    "ContinuousBatchingScheduler", "ParkedState", "SLO", "Slot",
+    "SlotTableStacker", "qc_bucket",
     *_DEPRECATED,
 ]
 

@@ -1,0 +1,167 @@
+"""Asyncio streaming front-end over the step-driven serving core.
+
+The :class:`~repro.serving.engine.ServingEngine` core is synchronous and
+non-blocking (``micro_step()`` advances the grid one unit of work and returns
+a :class:`~repro.serving.engine.StepEvents` batch); this module is the event
+loop on top:
+
+  * requests arrive at ANY time via :meth:`AsyncServingEngine.submit`, which
+    returns a :class:`StreamHandle` — an async iterator of the request's
+    tokens as they become final (block granularity under diffusion: a
+    position is only final once its whole block commits) plus an awaitable
+    future for the final :class:`~repro.api.Completion`;
+  * each :meth:`AsyncServingEngine.step` first dispatches the next queued
+    prompt's prefill (``engine.prefill_ahead`` — jax async dispatch returns
+    the moment the forward is enqueued, so the device overlaps it with the
+    micro-step's decode), then advances the grid and fans the resulting
+    deltas/completions out to their handles;
+  * :meth:`AsyncServingEngine.run` is the serve-forever loop;
+    :meth:`AsyncServingEngine.serve` is the deterministic inline drive the
+    differential suite pins against the sync generator.
+
+This module is HOST-ONLY (rule RJ003): pure asyncio plumbing, every device
+interaction goes through the engine's own methods. The drive order it
+produces (submit-all, then micro_step until drained) is exactly the sync
+``serve()`` loop's, so completions are token-identical by construction —
+prefill-ahead only *moves* the same prompt forward across the same jitted
+prefill, it never changes its result.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import AsyncIterator, Dict, Iterable
+
+from repro.api import Completion, Request
+
+_DONE = object()     # stream terminator sentinel
+
+
+class StreamHandle:
+    """Per-request streaming view handed back by ``submit``.
+
+    ``async for tok in handle`` yields token ids as they become final;
+    ``await handle.completion()`` resolves to the final Completion (for a
+    rejected request the stream ends immediately and the completion carries
+    ``metadata["rejected"]``). The concatenation of streamed tokens always
+    equals ``completion.tokens`` — the engine streams blocks only when they
+    commit, and any tail the stream has not seen yet is flushed before the
+    terminator."""
+
+    def __init__(self, request: Request, loop: asyncio.AbstractEventLoop):
+        self.request = request
+        self.streamed = 0                      # tokens already pushed
+        self._q: "asyncio.Queue" = asyncio.Queue()
+        self._fut: "asyncio.Future[Completion]" = loop.create_future()
+
+    def __aiter__(self) -> "StreamHandle":
+        return self
+
+    async def __anext__(self) -> int:
+        item = await self._q.get()
+        if item is _DONE:
+            raise StopAsyncIteration
+        return item
+
+    async def completion(self) -> Completion:
+        """Await the final Completion (also consumable after iteration)."""
+        return await self._fut
+
+    @property
+    def done(self) -> bool:
+        return self._fut.done()
+
+
+class AsyncServingEngine:
+    """Asyncio front-end over a :class:`ServingEngine` core.
+
+    Construction flips the core into streaming mode (``engine.stream``), so
+    newly final tokens surface through ``StepEvents.deltas`` and TTFC stamps
+    at the first *streamed* token. One front-end owns its engine — don't
+    drive the same core from both ``serve()`` and here concurrently."""
+
+    def __init__(self, engine, *, prefill_ahead: int = 1,
+                 idle_sleep_s: float = 1e-3):
+        self.engine = engine
+        engine.stream = True
+        self.prefill_ahead = max(0, prefill_ahead)
+        self.idle_sleep_s = idle_sleep_s
+        self._handles: Dict[int, StreamHandle] = {}
+        self._stopped = False
+
+    # ---- intake ----------------------------------------------------------
+    def submit(self, request: Request) -> StreamHandle:
+        """Queue a request on the core (admitted at the next micro-step a
+        slot frees — mid-block under the slot clock) and return its stream
+        handle. Must be called from within a running event loop."""
+        handle = StreamHandle(request, asyncio.get_running_loop())
+        self._handles[request.request_id] = handle
+        self.engine.submit(request)
+        return handle
+
+    @property
+    def pending(self) -> bool:
+        """Work exists: queued, parked, or decoding."""
+        return bool(self.engine.sched.pending or self.engine.sched.busy)
+
+    # ---- event loop ------------------------------------------------------
+    async def step(self):
+        """One unit of work: dispatch the next prompt's prefill ahead,
+        advance the grid one micro-step, fan deltas/completions out to their
+        handles, and yield to the loop so consumers run. Returns the
+        StepEvents batch."""
+        eng = self.engine
+        if self.prefill_ahead:
+            eng.prefill_ahead(self.prefill_ahead)
+        ev = eng.micro_step()
+        for rid, toks in ev.deltas.items():
+            handle = self._handles.get(rid)
+            if handle is not None:
+                for t in toks:
+                    handle._q.put_nowait(t)
+                handle.streamed += len(toks)
+        for comp in ev.completions:
+            handle = self._handles.pop(comp.request_id, None)
+            if handle is not None:
+                # flush any tail the stream has not seen (e.g. the final
+                # block of a lockstep drain), then terminate
+                for t in comp.tokens[handle.streamed:]:
+                    handle._q.put_nowait(t)
+                    handle.streamed += 1
+                handle._q.put_nowait(_DONE)
+                if not handle._fut.done():
+                    handle._fut.set_result(comp)
+        await asyncio.sleep(0)
+        return ev
+
+    async def drain(self) -> None:
+        """Step until the queue and every slot are empty."""
+        while self.pending:
+            await self.step()
+
+    async def run(self) -> None:
+        """Serve forever: step while work exists, sleep briefly when idle,
+        until :meth:`stop`. Launch as a task next to the submitters:
+        ``task = asyncio.create_task(async_eng.run())``."""
+        while not self._stopped:
+            if self.pending:
+                await self.step()
+            else:
+                await asyncio.sleep(self.idle_sleep_s)
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    async def serve(self, requests: Iterable[Request] = (),
+                    ) -> AsyncIterator[Completion]:
+        """Submit ``requests`` and yield final Completions as slots retire —
+        the async analogue of the sync ``serve()`` generator, same drive
+        order, token-identical output."""
+        for r in requests:
+            self.submit(r)
+        while self.pending:
+            ev = await self.step()
+            for c in ev.completions:
+                yield c
+
+
+__all__ = ["AsyncServingEngine", "StreamHandle"]

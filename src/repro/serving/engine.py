@@ -42,13 +42,31 @@ Two KV layouts (``kv_layout``):
     harness in tests/test_paged_equivalence.py pins this); smaller pools
     oversubscribe the grid and park queued requests on page pressure.
 
-``serve()`` is a generator yielding completions as they finish (async-style:
-submit more work between blocks via ``submit()``).
+The engine's public drive surface is layered (PR 10):
+
+  * ``micro_step()`` — the step-driven CORE: advance the grid one unit of
+    work (micro-step / lockstep block), never block, return a
+    :class:`StepEvents` batch (completions, streamed token deltas, admitted
+    ids). ``prefill_ahead()`` dispatches the next queued prompt's prefill via
+    jax async dispatch so the device overlaps it with decode; admission then
+    consumes the memoized row off the critical path.
+  * ``serve()`` — the classic blocking generator, now a thin wrapper over
+    ``micro_step()`` (pinned token-identical).
+  * :class:`repro.serving.async_engine.AsyncServingEngine` — the asyncio
+    front-end over the same core: per-request async token streams + futures.
+
+Scheduling is delegated to a policy object (``repro.serving.policy``): the
+default FifoPolicy reproduces strict FIFO exactly; preemptive policies may
+evict a running slot mid-decode (``_preempt``), returning its pages to the
+pool while the scheduler keeps the DFA carry + committed tokens host-side;
+``_replay`` later re-materializes the KV row bitwise (prompt prefill + one
+batch-1 commit per committed block) when the request resumes.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +91,7 @@ from repro.constraints import ConstraintCache
 from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
+from .policy import SchedulingPolicy, make_policy
 from .scheduler import ContinuousBatchingScheduler, Slot
 from .slo import SLO
 from .tables import SlotTableStacker
@@ -80,6 +99,22 @@ from .tables import SlotTableStacker
 
 def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
+
+
+@dataclasses.dataclass
+class StepEvents:
+    """What one :meth:`ServingEngine.micro_step` did — the step-driven core's
+    event surface, consumed by the async front-end (and any other driver)
+    instead of the blocking generator. ``deltas`` fills only when
+    ``engine.stream`` is on: request_id -> tokens that became FINAL this step
+    (block granularity — a diffusion position is only final once its whole
+    block commits), in order; their concatenation over a request's lifetime
+    equals its final ``Completion.tokens``."""
+
+    completions: List[Completion] = dataclasses.field(default_factory=list)
+    deltas: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    admitted: List[int] = dataclasses.field(default_factory=list)
+    steps: int = 0            # diffusion micro-steps actually run (0: idle)
 
 
 def _select_commit_rows(old, new, commit_mask):
@@ -173,6 +208,7 @@ class ServingEngine:
         clock: str = "slot",
         eos_fastpath: bool = True,
         slo: Optional[SLO] = None,
+        policy: Optional[SchedulingPolicy] = None,
         observer=None,
     ):
         if cfg.frontend is not None:
@@ -232,6 +268,8 @@ class ServingEngine:
             self.cache.observer = self.obs
         self.eos_fastpath = eos_fastpath
         self._commit_deltas = unmask_counts(d, max(1, scfg.diffusion_steps_per_block))
+        if isinstance(policy, str):
+            policy = make_policy(policy)
         self.sched = ContinuousBatchingScheduler(
             n_slots, self.cache, tokenizer,
             block_size=d, decode=scfg.decode, max_blocks=self.max_blocks,
@@ -239,8 +277,19 @@ class ServingEngine:
             prompt_len_fn=self._prompt_len if self.pool is not None else None,
             eos_fastpath=eos_fastpath,
             slo=slo, steps_per_block=len(self._commit_deltas),
+            policy=policy,
             observer=self.obs,
         )
+        # streaming front-end state: when ``stream`` is on, each row's newly
+        # FINAL tokens (its just-recorded block) are collected per micro-step
+        # and drained through StepEvents.deltas by ``micro_step``
+        self.stream = False
+        self._pending_deltas: Dict[int, List[int]] = {}
+        self._admitted_ids: List[int] = []
+        # prefill-ahead memo (the "double buffer"): request_id -> (row, mp,
+        # prefilled batch-1 caches). ``prefill_ahead`` fills it via jax async
+        # dispatch while the grid decodes; ``_admit`` consumes it.
+        self._prefill_memo: Dict[int, tuple] = {}
         # device half of slot tables (the scheduler stays host-only/RJ003):
         # padded-table LRU + (bucket, assignment)-keyed grid stack
         self.stacker = SlotTableStacker(n_slots)
@@ -413,24 +462,60 @@ class ServingEngine:
         return min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
 
     # ---- admission: prompt prefill into the slot's cache row -------------
+    def _prompt_row(self, req: Request) -> Tuple[np.ndarray, int]:
+        """Left-padded (1, mp) prompt row in the prompt-pad bucket;
+        generation starts at mp."""
+        ids = self.tok.encode(req.prompt)
+        mp = min(_round_up(max(1, len(ids)), self.prompt_pad),
+                 self.max_prompt_len)
+        ids = ids[-mp:]
+        row = np.full((1, mp), self.tok.eos_token_id, np.int32)
+        row[0, mp - len(ids):] = ids
+        return row, mp
+
+    def prefill_ahead(self, limit: int = 1) -> int:
+        """Dispatch prompt prefill(s) for the request(s) the policy would
+        admit next, WITHOUT admitting them. jax async dispatch returns as
+        soon as the forward is enqueued, so the device overlaps the prefill
+        with whatever the grid is decoding; the admission that follows
+        consumes the memoized result — keeping prefill off the decode
+        critical path. Returns the number of prefills dispatched."""
+        n = 0
+        for req in self.sched.peek_next(limit):
+            if req.request_id in self._prefill_memo:
+                continue
+            row, mp = self._prompt_row(req)
+            small = init_caches(self.cfg, 1, self.max_len)
+            small = self._prefill1(self.params, small, jnp.asarray(row))
+            self._prefill_memo[req.request_id] = (row, mp, small)
+            n += 1
+            if self.obs.enabled:
+                self.obs.count("serve_prefill_ahead_total")
+        return n
+
     def _admit(self) -> Tuple[List[Slot], List[Completion]]:
         obs = self.obs
         admitted, rejected = self.sched.admit()
         for slot in admitted:
             req = slot.request
+            self._admitted_ids.append(req.request_id)
+            if slot.resume is not None:
+                # a preempted snapshot re-entering: replay, don't prefill
+                self._replay(slot)
+                continue
             tr = self._req_track.get(req.request_id)
             if tr is not None:
                 obs.end(tr, "queue", ts=slot.admit_time_s)
                 obs.begin(tr, "prefill", ts=slot.admit_time_s)
                 obs.begin(self._trk_slot[slot.index], f"req{req.request_id}",
                           ts=slot.admit_time_s)
-            ids = self.tok.encode(req.prompt)
-            mp = min(_round_up(max(1, len(ids)), self.prompt_pad), self.max_prompt_len)
-            ids = ids[-mp:]
-            row = np.full((1, mp), self.tok.eos_token_id, np.int32)
-            row[0, mp - len(ids):] = ids      # left-pad: generation starts at mp
-            small = init_caches(self.cfg, 1, self.max_len)
-            small = self._prefill1(self.params, small, jnp.asarray(row))
+            memo = self._prefill_memo.pop(req.request_id, None)
+            if memo is not None:
+                row, mp, small = memo     # prefill already in flight/done
+            else:
+                row, mp = self._prompt_row(req)
+                small = init_caches(self.cfg, 1, self.max_len)
+                small = self._prefill1(self.params, small, jnp.asarray(row))
             if self.pool is not None:
                 prow = np.zeros((self.pages_per_slot,), np.int32)
                 pages = self.pool.alloc(slot.index, -(-mp // self.page_size))
@@ -458,11 +543,15 @@ class ServingEngine:
         now = time.perf_counter()
         out = []
         for req, reason in rejected:
+            self._prefill_memo.pop(req.request_id, None)
             tr = self._req_track.pop(req.request_id, None)
             if tr is not None:
                 obs.instant(tr, "rejected", reason=reason)
-                obs.end(tr, "queue", ts=now)
-                obs.end(tr, "request", ts=now)
+                # pop every open span: "queue" for a fresh reject, "parked"
+                # (and no "queue") for a preempted request the SLO re-eval
+                # rejected while it waited
+                while obs.trace is not None and obs.trace.open_spans(tr):
+                    obs.end(tr, ts=now)
             queue_s = now - (req.submit_time_s or now)
             out.append(Completion(
                 request_id=req.request_id, text="", tokens=[], valid=False,
@@ -474,6 +563,92 @@ class ServingEngine:
                               blocks=0, decode_steps=0),
             ))
         return admitted, out
+
+    def _replay(self, slot: Slot) -> None:
+        """Resume a preempted snapshot: re-materialize the slot's KV row
+        bitwise by re-running the prompt prefill and ONE batch-1 commit per
+        committed block. Diffusion attention is bidirectional *within* a
+        block but causal at block granularity, so blockwise replay (never a
+        flat prefill over the whole history) reproduces exactly the cache a
+        never-preempted run had — the row-vs-grid commit differential already
+        pins those numerics. The DFA carry and committed tokens come from the
+        host snapshot: no constraint recompute, no decode steps."""
+        obs = self.obs
+        req = slot.request
+        ps = slot.resume
+        d = self.scfg.block_size
+        t0 = time.perf_counter()
+        tr = self._req_track.get(req.request_id)
+        if tr is not None:
+            obs.end(tr, "parked", ts=t0)
+            obs.instant(tr, "resume", blocks_replayed=ps.blocks_done)
+            obs.begin(tr, "decode", ts=t0)
+            obs.begin(tr, f"block{ps.blocks_done}", ts=t0)
+            obs.begin(self._trk_slot[slot.index], f"req{req.request_id}",
+                      ts=t0)
+        row, mp = self._prompt_row(req)
+        small = init_caches(self.cfg, 1, self.max_len)
+        small = self._prefill1(self.params, small, jnp.asarray(row))
+        if self.pool is not None:
+            prow = np.zeros((self.pages_per_slot,), np.int32)
+            pages = self.pool.alloc(slot.index, -(-mp // self.page_size))
+            prow[: len(pages)] = pages
+            self.page_table[slot.index] = prow
+            self.caches = self._scatter_slot_paged(
+                self.caches, small, jnp.asarray(slot.index, jnp.int32),
+                jnp.asarray(prow), jnp.asarray(mp, jnp.int32),
+            )
+        else:
+            self.caches = self._scatter_slot(
+                self.caches, small, jnp.asarray(slot.index, jnp.int32)
+            )
+        slot.pos = mp
+        toks = np.asarray(ps.tokens, np.int32)
+        for k in range(ps.blocks_done):
+            if self.pool is not None:
+                self._ensure_slot_pages(slot)
+            self.caches = self._commit_row(
+                self.params, self.caches,
+                jnp.asarray(toks[k * d:(k + 1) * d][None]),
+                jnp.asarray(slot.pos, jnp.int32),
+                jnp.asarray(slot.index, jnp.int32),
+                jnp.asarray(self.page_table) if self.pool is not None
+                else None,
+            )
+            slot.pos += d
+        slot.resume = None
+        if obs.enabled:
+            obs.count("serve_resume_replays_total")
+            obs.observe("serve_resume_replay_s", time.perf_counter() - t0)
+
+    def _preempt(self) -> None:
+        """Execute the policy's eviction plan: snapshot each victim host-side
+        (``sched.preempt``), return its pages to the pool, and idle its grid
+        row. Runs just before admission so the freed slot is immediately
+        re-fillable by the higher-priority candidate."""
+        sched = self.sched
+        if not sched.policy.preemptive:
+            return
+        victims = sched.plan_preemptions()
+        if not victims:
+            return
+        obs = self.obs
+        now = time.perf_counter()
+        for slot in victims:
+            req = slot.request
+            tr = self._req_track.get(req.request_id)
+            if tr is not None:
+                obs.end(tr, ts=now)              # pop the open block span
+                obs.end(tr, "decode", ts=now)
+                obs.instant(tr, "preempt", blocks_done=slot.blocks_done)
+                obs.begin(tr, "parked", ts=now)
+                obs.end(self._trk_slot[slot.index], f"req{req.request_id}",
+                        ts=now)
+            sched.preempt(slot)
+            if self.pool is not None:
+                self.page_table[slot.index] = 0  # row back to the trash page
+            self._step_idx[slot.index] = -1      # slot clock: the row idles
+        self._grid_ver += 1                      # the grid lost live rows
 
     def _ensure_slot_pages(self, slot: Slot) -> None:
         """Extend ONE slot's page table to cover the block it is about to run.
@@ -497,11 +672,25 @@ class ServingEngine:
         """Time-to-first-commit: stamp every live slot that just ran its first
         decode micro-step (the earliest point tokens of its block exist). One
         clock read + a short host loop per step; idempotent via the 0.0
-        sentinel, which ``_park`` resets."""
+        sentinel, which ``_park`` resets. Under streaming the stamp moves to
+        :meth:`_push_delta` — TTFC then means time-to-first-STREAMED-token,
+        the first moment a consumer could actually see output."""
+        if self.stream:
+            return
         now = time.perf_counter()
         for s in self.sched.active_slots:
             if s.first_commit_t == 0.0:
                 s.first_commit_t = now
+
+    def _push_delta(self, slot: Slot, toks: List[int]) -> None:
+        """Collect a slot's newly FINAL tokens (its just-recorded block) for
+        StepEvents.deltas. The first delta stamps ``first_commit_t``: under
+        streaming, TTFC is stamped at the first token handed to a consumer,
+        not at the device-side first commit."""
+        if slot.first_commit_t == 0.0:
+            slot.first_commit_t = time.perf_counter()
+        rid = slot.request.request_id
+        self._pending_deltas.setdefault(rid, []).extend(toks)
 
     def _advance_block_spans(self, slots) -> None:
         """Trace-mode bookkeeping at a row's own block boundary: close the
@@ -521,6 +710,7 @@ class ServingEngine:
         """Admit, run one diffusion block over every slot, commit, retire."""
         obs = self.obs
         with obs.phase("serve_sched", self._trk_engine):
+            self._preempt()
             _, out = self._admit()
         if not self.sched.busy:
             return out
@@ -560,12 +750,18 @@ class ServingEngine:
         if obs.enabled:
             obs.count("decode_steps_total", len(self._commit_deltas))
             obs.count("blocks_total")
+        blk_np = np.asarray(block_tokens)  # rj: allow RJ002 -- block-barrier retire site: committed tokens leave the device here
         finished = sched.record_block(
-            np.asarray(block_tokens),  # rj: allow RJ002 -- block-barrier retire site: committed tokens leave the device here
+            blk_np,
             np.asarray(valid),  # rj: allow RJ002 -- block-barrier retire site
             np.asarray(qf),  # rj: allow RJ002 -- block-barrier retire site
             steps=len(self._commit_deltas),
         )
+        if self.stream:
+            # every occupied slot ran (and finalized) this block; finished
+            # slots are still occupied until _complete releases them
+            for s in sched.active_slots:
+                self._push_delta(s, blk_np[s.index].tolist())  # rj: allow RJ002 -- blk_np is host numpy (synced above), no device involved
         fin = {s.index for s in finished}
         self._advance_block_spans(
             s for s in sched.active_slots if s.index not in fin
@@ -586,6 +782,7 @@ class ServingEngine:
         sched = self.sched
         obs = self.obs
         with obs.phase("serve_sched", self._trk_engine):
+            self._preempt()
             admitted, out = self._admit()
             for s in admitted:
                 self._step_idx[s.index] = 0
@@ -651,6 +848,11 @@ class ServingEngine:
             np.asarray(qf),  # rj: allow RJ002 -- row-boundary retire site
             steps=t_steps, rows=bnd,
         )
+        if self.stream:
+            # boundary rows just finalized their block (retired rows are
+            # still occupied until _complete releases them)
+            for i in bnd:
+                self._push_delta(sched.slots[i], blk_np[i].tolist())  # rj: allow RJ002 -- blk_np is host numpy (synced above), no device involved
         self.blocks_run += len(bnd)
         if obs.enabled:
             obs.count("blocks_total", len(bnd))
@@ -706,10 +908,19 @@ class ServingEngine:
         else:
             matched = None
         queue_s = slot.admit_time_s - (req.submit_time_s or slot.admit_time_s)
-        decode_s = now - slot.decode_t0
+        latency_s = now - (req.submit_time_s or slot.admit_time_s)
+        # phase accounting rule (docs/SERVING.md "Timing"): queue_s ends at
+        # FIRST admission, prefill_s is the admit -> decode-start gap (≈0
+        # when prefill_ahead pre-dispatched the prompt), and decode_s is the
+        # REMAINDER latency_s - queue_s - prefill_s — so the three phases sum
+        # to latency_s EXACTLY even when prefill overlapped decode or the
+        # request spent wall parked (parked time rides inside decode_s and is
+        # reported separately as metadata["parked_s"])
+        decode_s = latency_s - queue_s - slot.prefill_s
         # time-to-first-commit: submission -> end of the slot's first decode
         # micro-step (queue wait + prefill + one step), the serving-latency
-        # half of goodput the trace bench reports alongside p95
+        # half of goodput the trace bench reports alongside p95. Under
+        # streaming the stamp is the first STREAMED token instead.
         ttfc_s = (slot.first_commit_t or now) - (req.submit_time_s
                                                  or slot.admit_time_s)
         meta = dict(req.metadata, queue_s=queue_s,
@@ -718,6 +929,9 @@ class ServingEngine:
                     ttfc_s=ttfc_s)
         if slot.degraded is not None:
             meta["degraded"] = slot.degraded
+        if slot.n_preempts:
+            meta["preempts"] = slot.n_preempts
+            meta["parked_s"] = slot.parked_s
         out = Completion(
             request_id=req.request_id,
             text=self.tok.decode(tokens),
@@ -730,7 +944,7 @@ class ServingEngine:
             matched=matched,
             blocks=slot.blocks_done,
             steps=slot.steps,
-            latency_s=now - (req.submit_time_s or slot.admit_time_s),
+            latency_s=latency_s,
             queue_s=queue_s,
             cache_hit=slot.cache_hit,
             metadata=meta,
@@ -770,6 +984,7 @@ class ServingEngine:
                 "clock": self.clock,
                 "kv_layout": self.kv_layout,
                 "n_slots": self.n_slots,
+                "policy": self.sched.policy.name,
                 "blocks_run": self.blocks_run,
                 "decode_steps": self.decode_steps,
             },
@@ -786,16 +1001,38 @@ class ServingEngine:
             )
         return out
 
-    # ---- serve loop ------------------------------------------------------
+    # ---- step-driven core / serve loop -----------------------------------
+    def micro_step(self) -> StepEvents:
+        """Advance the serving core by ONE unit of work — a grid micro-step
+        under ``clock="slot"``, a whole lockstep block under ``clock="block"``
+        — and return what happened. Never blocks on the queue: an idle engine
+        (nothing pending, nothing busy) returns an empty event batch
+        immediately. This is the non-blocking surface the async front-end
+        drives; :meth:`serve` is a thin generator over it."""
+        self._admitted_ids = []
+        steps0 = self.decode_steps
+        if self.sched.pending or self.sched.busy:
+            comps = (self.step_token() if self.clock == "slot"
+                     else self.step_block())
+        else:
+            comps = []
+        ev = StepEvents(completions=comps, deltas=self._pending_deltas,
+                        admitted=self._admitted_ids,
+                        steps=self.decode_steps - steps0)
+        self._pending_deltas = {}
+        self._admitted_ids = []
+        return ev
+
     def serve(self, requests: Iterable[Request] = ()) -> Iterator[Completion]:
         """Submit ``requests`` and yield completions as slots retire. Runs
         until the queue and every slot drain; more work may be submitted from
         the consumer between yields. Under ``clock="slot"`` the loop advances
         one micro-step at a time, so submissions between yields are admitted
-        mid-block instead of at the next grid barrier."""
+        mid-block instead of at the next grid barrier. A thin wrapper over
+        :meth:`micro_step` — pinned token-identical to the async front-end by
+        the differential suite."""
         for r in requests:
             self.submit(r)
-        step = self.step_token if self.clock == "slot" else self.step_block
         while self.sched.pending or self.sched.busy:
-            for c in step():
+            for c in self.micro_step().completions:
                 yield c

@@ -1,0 +1,177 @@
+"""Scheduling policy objects for the continuous-batching scheduler.
+
+PR 10 replaces the scheduler's hard-wired strict-FIFO dequeue with a policy
+object. A policy answers two questions, both over *host-side views* (this
+module is HOST-ONLY, rule RJ003 — plain dataclasses and comparisons, no
+device work):
+
+  * **which waiting request runs next** (:meth:`SchedulingPolicy.select`) —
+    the scheduler builds a window of :class:`Candidate` views over its
+    preempted deque and queue head and the policy picks one;
+  * **who gets evicted for it** (:meth:`SchedulingPolicy.victim`) — when the
+    selected candidate is blocked (no free slot, or the page pool cannot
+    honour its reservation), a *preemptive* policy may name a running slot of
+    strictly lower priority to park mid-decode. The scheduler snapshots the
+    victim's DFA carry + committed tokens host-side (``ParkedState``), the
+    engine returns its pages to the :class:`~repro.serving.paged.PagePool`,
+    and the request resumes later by re-reserving pages and replaying its
+    committed blocks — no recompute of committed constraint state.
+
+Policies:
+
+  * :class:`FifoPolicy` — the default; byte-identical to the pre-policy
+    scheduler: strict arrival order, head-of-line parking, never preempts.
+  * :class:`PriorityPolicy` — priority classes (``Request.priority``, higher
+    runs first) with deadline (arrival-step) or SJF ordering inside a class.
+    SJF is keyed on the constraint's **distance-to-accept floor**
+    (``CompiledConstraint.min_tokens`` — the shortest accepting path the
+    DINGO tables already compute), so "shortest job" means provable shortest
+    possible match, not a guess. Preemption is opt-in (``preemptive=True``)
+    and strictly-ordered: a candidate may only evict a victim of *strictly*
+    lower priority, which bounds preemption chains (no thrash cycles at equal
+    priority) and guarantees every parked request eventually resumes or is
+    rejected by the SLO re-evaluation while it waits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.api import Request
+
+SJF = "sjf"
+DEADLINE = "deadline"
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """Host-side admission view of one waiting request (fresh or preempted)."""
+
+    request: Request
+    priority: int                 # Request.priority (0 default; higher first)
+    submit_step: int              # scheduler decode-step clock at submit
+    seq: int                      # arrival tiebreak (parked enumerate first)
+    parked: bool                  # True: a preempted ParkedState resuming
+    src_idx: int                  # index in its source deque (queue/preempted)
+    min_tokens: Optional[int]     # distance-to-accept floor (None: unknown)
+    max_new_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningView:
+    """Host-side view of one occupied slot, for victim selection."""
+
+    index: int                    # slot index
+    priority: int
+    blocks_done: int
+    blocks_total: int
+
+
+class SchedulingPolicy:
+    """Base policy: FIFO select, never preempts. Subclass and override."""
+
+    name = "base"
+    preemptive = False
+    # how deep into the queue the scheduler materializes Candidate views per
+    # selection (preempted states are always all visible); FIFO needs only
+    # the head, ordering policies need a window — O(window) host work per
+    # admission attempt, deterministic for a fixed stream
+    window = 1
+    # whether select() keys on min_tokens — when False the scheduler skips
+    # compiling queued constraints just to build candidate views
+    needs_floor = False
+
+    def select(self, candidates: Sequence[Candidate]) -> int:
+        """Index (into ``candidates``) of the request to admit next.
+        Candidates arrive ordered preempted-first then queue order, so 0 is
+        exact FIFO-with-resume-priority."""
+        return 0
+
+    def victim(self, cand: Candidate,
+               running: Sequence[RunningView]) -> Optional[int]:
+        """Slot index to preempt so ``cand`` can run, or None. Only called
+        when ``cand`` is blocked and only honoured for strictly-lower
+        priority victims."""
+        return None
+
+
+class FifoPolicy(SchedulingPolicy):
+    """Strict arrival order; preempted states (none ever exist under pure
+    FIFO) would resume first. Byte-identical to the pre-policy scheduler."""
+
+    name = "fifo"
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Priority classes + deadline/SJF ordering + optional preemption.
+
+    Ordering key (ascending): ``(-priority, order_key, seq)`` where
+    ``order_key`` is the submit step (``order="deadline"``, earliest-arrival
+    within a class) or the distance-to-accept floor (``order="sjf"``,
+    provably-shortest job within a class; unconstrained requests key on
+    their token budget). Parked (preempted) candidates sort before fresh
+    ones at equal keys — a resume holds committed progress.
+    """
+
+    name = "priority"
+    needs_floor = True
+
+    def __init__(self, *, order: str = DEADLINE, preemptive: bool = False,
+                 window: int = 64):
+        if order not in (SJF, DEADLINE):
+            raise ValueError(f"order must be '{SJF}' or '{DEADLINE}', "
+                             f"got {order!r}")
+        self.order = order
+        self.preemptive = preemptive
+        self.window = max(1, window)
+
+    def _key(self, c: Candidate):
+        if self.order == SJF:
+            k = c.min_tokens if c.min_tokens is not None else c.max_new_tokens
+        else:
+            k = c.submit_step
+        return (-c.priority, k, c.seq)
+
+    def select(self, candidates: Sequence[Candidate]) -> int:
+        return min(range(len(candidates)),
+                   key=lambda i: self._key(candidates[i]))
+
+    def victim(self, cand: Candidate,
+               running: Sequence[RunningView]) -> Optional[int]:
+        """Lowest-priority running slot strictly below the candidate; ties
+        broken by least progress (fewest committed blocks — the cheapest
+        resume replay), then highest slot index (deterministic)."""
+        below = [r for r in running if r.priority < cand.priority]
+        if not below:
+            return None
+        pick = min(below, key=lambda r: (r.priority, r.blocks_done, -r.index))
+        return pick.index
+
+
+def make_policy(name: str) -> SchedulingPolicy:
+    """Policy factory for the ``--policy`` launcher flag / string configs:
+    ``fifo`` | ``priority`` (deadline order, preemptive) |
+    ``priority-sjf`` (SJF order, preemptive)."""
+    if name == "fifo":
+        return FifoPolicy()
+    if name == "priority":
+        return PriorityPolicy(order=DEADLINE, preemptive=True)
+    if name == "priority-sjf":
+        return PriorityPolicy(order=SJF, preemptive=True)
+    raise ValueError(
+        f"unknown policy {name!r} (know 'fifo', 'priority', 'priority-sjf')")
+
+
+POLICY_NAMES = ("fifo", "priority", "priority-sjf")
+
+__all__ = [
+    "Candidate",
+    "RunningView",
+    "SchedulingPolicy",
+    "FifoPolicy",
+    "PriorityPolicy",
+    "make_policy",
+    "POLICY_NAMES",
+    "SJF",
+    "DEADLINE",
+]

@@ -51,6 +51,7 @@ from repro.core.dingo import NEG_INF
 from repro.obs import NULL_OBSERVER
 
 from .paged import PagePool
+from .policy import Candidate, FifoPolicy, RunningView, SchedulingPolicy
 from .slo import DEGRADE, REJECT, SLO, min_feasible_blocks
 
 
@@ -68,6 +69,8 @@ class SchedStats:
     retired: int = 0
     early_eos: int = 0         # whole-block EOS padding from an accepting state
     eos_fastpath: int = 0      # forced-EOS instant retirement (skipped blocks)
+    preempted: int = 0         # slots evicted mid-decode by a preemptive policy
+    resumed: int = 0           # preempted requests re-admitted (replayed)
     reject_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
@@ -94,10 +97,54 @@ class Slot:
     prefill_s: float = 0.0        # prompt prefill wall (engine stamps at admit)
     decode_t0: float = 0.0        # perf_counter at prefill end (decode start)
     first_commit_t: float = 0.0   # perf_counter after the slot's first step
+    # preemption lifecycle (repro.serving.policy): set when this admission is
+    # a RESUME — the engine must replay the snapshot's committed blocks into
+    # the cache row instead of a plain prompt prefill, then clear it
+    resume: Optional["ParkedState"] = None
+    n_preempts: int = 0           # times this request has been evicted
+    parked_s: float = 0.0         # accumulated wall spent parked (evicted)
 
     @property
     def free(self) -> bool:
         return self.request is None
+
+
+@dataclasses.dataclass
+class ParkedState:
+    """Host-side snapshot of a preempted slot: everything needed to resume
+    the request later with **zero recompute of committed constraint state**.
+
+    The scheduler only advances a slot's DFA carry (``q_state`` / ``reach``),
+    token list, position, and block counters at block boundaries
+    (:meth:`ContinuousBatchingScheduler.record_block`), so at any micro-step
+    the Slot's host state IS the committed-blocks snapshot — preempting
+    mid-block simply abandons the in-flight partial block, which a
+    deterministic remask strategy re-decodes identically on resume. The KV
+    cache is NOT snapshotted: the engine re-materializes it bitwise by
+    re-running the prompt prefill and one per-row commit per committed block
+    (cheap: ``blocks_done + 1`` batch-1 forwards, no decode steps)."""
+
+    request: Request
+    entry: CompiledConstraint
+    cache_hit: bool
+    constrained: bool
+    q_state: int
+    reach: Optional[np.ndarray]
+    tokens: List[int]
+    blocks_done: int
+    blocks_total: int
+    steps: int
+    valid: bool
+    degraded: Optional[str]
+    prompt_len: int               # padded prompt length (pos - blocks_done*d)
+    admit_time_s: float
+    prefill_s: float
+    decode_t0: float
+    first_commit_t: float
+    n_preempts: int
+    parked_s: float               # parked wall accumulated BEFORE this park
+    park_step: int = 0            # scheduler step_clock at eviction
+    park_t: float = 0.0           # perf_counter at eviction
 
 
 class ContinuousBatchingScheduler:
@@ -115,6 +162,7 @@ class ContinuousBatchingScheduler:
         eos_fastpath: bool = True,
         slo: Optional[SLO] = None,
         steps_per_block: int = 1,
+        policy: Optional[SchedulingPolicy] = None,
         observer=NULL_OBSERVER,
     ):
         if n_slots < 1:
@@ -122,6 +170,9 @@ class ContinuousBatchingScheduler:
         if page_pool is not None and prompt_len_fn is None:
             raise ValueError("page_pool admission needs a prompt_len_fn")
         self.eos_fastpath = eos_fastpath
+        # dequeue/preemption policy (repro.serving.policy); the default
+        # FifoPolicy reproduces the pre-policy strict-FIFO scheduler exactly
+        self.policy = policy if policy is not None else FifoPolicy()
         # SLO-aware admission (repro.serving.slo). slo=None is the
         # kill-switch: FIFO admission exactly as before. step_clock counts
         # decode steps actually run — the engine advances it (+1 per
@@ -145,6 +196,10 @@ class ContinuousBatchingScheduler:
         self.page_pool = page_pool
         self.prompt_len_fn = prompt_len_fn
         self.queue: "deque[Request]" = deque()
+        # preempted mid-decode by a preemptive policy; resumes from here take
+        # precedence over fresh queue items at equal policy keys (a resume
+        # holds committed progress — see repro.serving.policy)
+        self.preempted: "deque[ParkedState]" = deque()
         self.slots = [Slot(index=i) for i in range(n_slots)]
         # the match-anything constraint free slots (and unconstrained requests
         # under a constrained decode method) are parked on
@@ -167,7 +222,9 @@ class ContinuousBatchingScheduler:
 
     @property
     def pending(self) -> int:
-        return len(self.queue)
+        # parked (preempted) requests are pending work too: the drain loop
+        # must not exit while a snapshot still waits to resume or reject
+        return len(self.queue) + len(self.preempted)
 
     @property
     def active_slots(self) -> List[Slot]:
@@ -178,18 +235,92 @@ class ContinuousBatchingScheduler:
         return len(self.active_slots)
 
     # ---- admission -------------------------------------------------------
+    def _floor_tokens(self, entry: CompiledConstraint, q_state: Optional[int],
+                      constrained: bool) -> int:
+        """Shortest accepting continuation (tokens) from ``q_state`` — the
+        distance-to-accept table the DINGO compile already built. ``None``
+        q_state means "from the start state" (a fresh request)."""
+        if not constrained:
+            return 0
+        if q_state is None:
+            return entry.min_tokens
+        if 0 <= q_state < entry.dist.shape[0]:
+            return int(entry.dist[q_state])
+        return 0
+
+    def _candidates(self) -> List[Candidate]:
+        """Host-side admission views the policy orders: every preempted
+        snapshot first (seq ascending — a resume wins FIFO ties), then the
+        first ``policy.window`` queue items. Constraint floors are only
+        compiled when the policy keys on them (``needs_floor``); the compile
+        is memoized by the ConstraintCache so the later admit hit is free."""
+        cands: List[Candidate] = []
+        seq = 0
+        for j, ps in enumerate(self.preempted):
+            rem = max(1, ps.blocks_total - ps.blocks_done)
+            cands.append(Candidate(
+                request=ps.request, priority=ps.request.priority,
+                submit_step=ps.request.submit_step or 0, seq=seq,
+                parked=True, src_idx=j,
+                min_tokens=(self._floor_tokens(ps.entry, ps.q_state,
+                                               ps.constrained)
+                            if self.policy.needs_floor else None),
+                max_new_tokens=rem * self.block_size))
+            seq += 1
+        for j, req in enumerate(self.queue):
+            if j >= self.policy.window:
+                break
+            mt = None
+            if self.policy.needs_floor:
+                entry, _ = self._compile(req.constraint)
+                mt = self._floor_tokens(entry, None,
+                                        req.constraint.constrained)
+            cands.append(Candidate(
+                request=req, priority=req.priority,
+                submit_step=req.submit_step or 0, seq=seq,
+                parked=False, src_idx=j, min_tokens=mt,
+                max_new_tokens=req.max_new_tokens))
+            seq += 1
+        return cands
+
+    def peek_next(self, limit: int = 1) -> List[Request]:
+        """Up to ``limit`` fresh requests the policy would admit next, in
+        policy order, without mutating any queue. The async front-end uses
+        this to dispatch prompt prefills off the decode critical path; parked
+        resumes are skipped (their admission replays committed blocks — there
+        is no prompt prefill to run ahead)."""
+        out: List[Request] = []
+        cands = self._candidates()
+        taken: set = set()
+        while len(out) < limit:
+            live = [i for i in range(len(cands)) if i not in taken]
+            if not live:
+                break
+            sub = [cands[i] for i in live]
+            k = live[self.policy.select(sub)]
+            taken.add(k)
+            if not cands[k].parked:
+                out.append(cands[k].request)
+        return out
+
     def admit(self) -> Tuple[List[Slot], List[Tuple[Request, str]]]:
-        """Fill free slots from the queue (FIFO). Returns (admitted, rejected)
-        where rejected items carry a human-readable reason; the engine must
-        prefill each admitted slot's prompt before the next block runs.
+        """Fill free slots in policy order (default :class:`FifoPolicy` =
+        strict arrival order, byte-identical to the pre-policy scheduler).
+        Returns (admitted, rejected) where rejected items carry a
+        human-readable reason; the engine must prefill each admitted slot's
+        prompt — or, when ``slot.resume`` is set, replay the snapshot's
+        committed blocks — before the next block runs.
 
         Two up-front rejections: a constraint whose shortest possible match
         exceeds the token budget (the DFA can never close), and — under paged
         KV — a request whose worst-case page span exceeds the whole pool. A
         request that merely cannot get pages *right now* is **parked**: pushed
-        back to the queue head (FIFO preserved) until a retiring slot frees
-        pages. Parking requires a non-idle pool (someone must eventually
-        free), so it cannot deadlock."""
+        back to its source position (FIFO preserved) until a retiring slot
+        frees pages. Parking requires a non-idle pool (someone must
+        eventually free), so it cannot deadlock. Preempted snapshots re-enter
+        through here too: they are re-checked against the SLO (time parked
+        counts against their deadline) and must re-reserve their full page
+        span before the engine re-materializes their KV."""
         admitted: List[Slot] = []
         rejected: List[Tuple[Request, str]] = []
         d = self.block_size
@@ -206,8 +337,64 @@ class ContinuousBatchingScheduler:
         for slot in (s for s in self.slots if s.free):
             if parked:
                 break
-            while self.queue:
-                req = self.queue.popleft()
+            while self.queue or self.preempted:
+                cands = self._candidates()
+                if not cands:
+                    break
+                c = cands[self.policy.select(cands)]
+                if c.parked:
+                    ps = self.preempted[c.src_idx]
+                    del self.preempted[c.src_idx]
+                    req = ps.request
+                    blocks_rem = max(1, ps.blocks_total - ps.blocks_done)
+                    degraded = ps.degraded
+                    if self.slo is not None:
+                        # re-evaluate the parked request against the SLO:
+                        # wall spent evicted counts against its deadline, and
+                        # the projection uses the REMAINING distance-to-accept
+                        # from its carry, not the start-state floor
+                        waited = self.step_clock - (req.submit_step or 0)
+                        floor = (min_feasible_blocks(
+                            self._floor_tokens(ps.entry, ps.q_state,
+                                               ps.constrained), d)
+                            if ps.constrained else 1)
+                        dec = self.slo.decide(
+                            waited_steps=waited, blocks=blocks_rem,
+                            floor_blocks=min(max(1, floor), blocks_rem),
+                            steps_per_block=self.steps_per_block)
+                        if dec.action == REJECT:
+                            _reject(req, dec.reason, "slo")
+                            continue
+                        if dec.action == DEGRADE:
+                            blocks_rem = dec.blocks
+                            degraded = dec.reason
+                            self.stats.degraded += 1
+                            self.observer.count("sched_degraded_total")
+                    blocks_total = ps.blocks_done + blocks_rem
+                    if pool is not None:
+                        # full span again: KV for committed blocks is
+                        # re-materialized, so the old reservation's shape
+                        # (minus any degrade shrink) is needed back
+                        need = -(-(ps.prompt_len + blocks_total * d)
+                                 // pool.page_size)
+                        if not pool.reserve(slot.index, need):
+                            if pool.idle:
+                                _reject(req, f"needs {need} KV pages, "
+                                        f"{pool.available()} available in "
+                                        "an idle pool", "idle_pool")
+                                continue
+                            self.preempted.insert(c.src_idx, ps)
+                            parked = True
+                            self.stats.parked += 1
+                            self.observer.count("sched_parked_total",
+                                                reason="page_pressure")
+                            break
+                    self._restore(slot, ps, blocks_total=blocks_total,
+                                  degraded=degraded)
+                    admitted.append(slot)
+                    break
+                req = self.queue[c.src_idx]
+                del self.queue[c.src_idx]
                 entry, hit = self._compile(req.constraint)
                 blocks = min(self.max_blocks, max(1, -(-req.max_new_tokens // d)))
                 if req.constraint.constrained and entry.min_tokens > blocks * d:
@@ -246,7 +433,7 @@ class ContinuousBatchingScheduler:
                                     f"{pool.available()} available in "
                                     "an idle pool", "idle_pool")
                             continue
-                        self.queue.appendleft(req)   # park at the head
+                        self.queue.insert(c.src_idx, req)  # park in place
                         parked = True
                         self.stats.parked += 1
                         self.observer.count("sched_parked_total",
@@ -278,6 +465,109 @@ class ContinuousBatchingScheduler:
             self.observer.count("sched_admitted_total", len(admitted))
         return admitted, rejected
 
+    def _restore(self, slot: Slot, ps: ParkedState, *, blocks_total: int,
+                 degraded: Optional[str]) -> None:
+        """Re-admit a preempted snapshot into a free slot. ``slot.resume``
+        stays set until the engine replays the prompt prefill + committed
+        blocks into the slot's cache row (then the engine clears it and sets
+        ``slot.pos``); the DFA carry and token list come straight from the
+        snapshot — zero recompute of committed constraint state."""
+        slot.request = ps.request
+        slot.entry = ps.entry
+        slot.cache_hit = ps.cache_hit
+        slot.constrained = ps.constrained
+        slot.q_state = ps.q_state
+        slot.reach = None if ps.reach is None else ps.reach.copy()
+        slot.pos = 0                  # engine sets after the replay
+        slot.blocks_done = ps.blocks_done
+        slot.blocks_total = blocks_total
+        slot.steps = ps.steps
+        slot.tokens = list(ps.tokens)
+        slot.valid = ps.valid
+        slot.degraded = degraded
+        slot.admit_time_s = ps.admit_time_s
+        slot.prefill_s = ps.prefill_s
+        slot.decode_t0 = ps.decode_t0
+        slot.first_commit_t = ps.first_commit_t
+        slot.resume = ps
+        slot.n_preempts = ps.n_preempts
+        slot.parked_s = ps.parked_s + (time.perf_counter() - ps.park_t)
+        self.stats.resumed += 1
+        self.observer.count("sched_resumed_total")
+
+    # ---- preemption ------------------------------------------------------
+    def plan_preemptions(self) -> List[Slot]:
+        """Slots a preemptive policy wants evicted so its top candidate can
+        run. The engine calls this at block boundaries BEFORE :meth:`admit`
+        and executes each eviction via :meth:`preempt` (the snapshot/park
+        itself). Empty unless the policy is preemptive, the top candidate is
+        actually blocked (no free slot, or the pool cannot cover its page
+        span), a strictly-lower-priority victim exists, and evicting that
+        victim would genuinely make room."""
+        if not self.policy.preemptive:
+            return []
+        cands = self._candidates()
+        if not cands:
+            return []
+        c = cands[self.policy.select(cands)]
+        pool = self.page_pool
+        d = self.block_size
+        if c.parked:
+            ps = self.preempted[c.src_idx]
+            span = ps.prompt_len + ps.blocks_total * d
+        else:
+            blocks = min(self.max_blocks,
+                         max(1, -(-c.request.max_new_tokens // d)))
+            span = ((self.prompt_len_fn(c.request) if self.prompt_len_fn
+                     else 0) + blocks * d)
+        need = -(-span // pool.page_size) if pool is not None else 0
+        blocked_pages = pool is not None and need > pool.available()
+        if any(s.free for s in self.slots) and not blocked_pages:
+            return []
+        running = [RunningView(index=s.index, priority=s.request.priority,
+                               blocks_done=s.blocks_done,
+                               blocks_total=s.blocks_total)
+                   for s in self.slots if not s.free]
+        if not running:
+            return []
+        vi = self.policy.victim(c, running)
+        if vi is None:
+            return []
+        victim = self.slots[vi]
+        if victim.free or victim.request.priority >= c.priority:
+            return []   # only strictly-lower priority may be evicted
+        if blocked_pages:
+            freed = len(pool.pages(vi)) + pool.reservation(vi)
+            if need > pool.available() + freed:
+                return []   # eviction still would not make room
+        return [victim]
+
+    def preempt(self, slot: Slot) -> ParkedState:
+        """Evict a running slot mid-decode: snapshot its host state, return
+        its KV pages (and unexercised reservation) to the pool, and park the
+        slot. The in-flight partial block is simply abandoned — committed
+        state lives entirely in the host snapshot, and a deterministic remask
+        strategy re-decodes the abandoned block identically on resume."""
+        ps = ParkedState(
+            request=slot.request, entry=slot.entry, cache_hit=slot.cache_hit,
+            constrained=slot.constrained, q_state=slot.q_state,
+            reach=None if slot.reach is None else slot.reach.copy(),
+            tokens=list(slot.tokens), blocks_done=slot.blocks_done,
+            blocks_total=slot.blocks_total, steps=slot.steps,
+            valid=slot.valid, degraded=slot.degraded,
+            prompt_len=slot.pos - slot.blocks_done * self.block_size,
+            admit_time_s=slot.admit_time_s, prefill_s=slot.prefill_s,
+            decode_t0=slot.decode_t0, first_commit_t=slot.first_commit_t,
+            n_preempts=slot.n_preempts + 1, parked_s=slot.parked_s,
+            park_step=self.step_clock, park_t=time.perf_counter())
+        if self.page_pool is not None:
+            self.page_pool.free(slot.index)
+        self._park(slot)
+        self.preempted.append(ps)
+        self.stats.preempted += 1
+        self.observer.count("sched_preempted_total")
+        return ps
+
     def _compile(self, constraint: Constraint) -> Tuple[CompiledConstraint, bool]:
         if not constraint.constrained:
             # run under the placeholder automaton (valid for every string)
@@ -300,6 +590,9 @@ class ContinuousBatchingScheduler:
         slot.valid = True
         slot.degraded = None
         slot.first_commit_t = 0.0
+        slot.resume = None
+        slot.n_preempts = 0
+        slot.parked_s = 0.0
 
     # ---- batched tables / DP carry --------------------------------------
     def bucket(self) -> Tuple[int, int]:

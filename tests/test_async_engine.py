@@ -1,0 +1,215 @@
+"""Async streaming front-end differential (PR 10 acceptance).
+
+The asyncio front-end (`AsyncServingEngine`) is a pure driver over the sync
+step core (`ServingEngine.micro_step`): overlapped prefill and per-request
+token streams may change WHEN work is dispatched but never WHAT is generated.
+These tests pin that, per request, the async path is token/validity-identical
+to the blocking ``serve()`` wrapper across both block clocks and both KV
+layouts, that each stream's concatenated deltas equal the final completion
+tokens, that the timing metadata obeys the documented accounting rule
+(docs/SERVING.md "Timing"), and that a preempt -> park -> resume round trip
+under the priority policy replays to the exact tokens of a never-preempted
+run (no pytest-asyncio here: async tests drive their own loop via
+``asyncio.run`` inside sync functions).
+"""
+import asyncio
+import dataclasses
+
+import jax
+import pytest
+
+from repro.api import Constraint, Request
+from repro.config import ServeConfig
+from repro.configs.llada_repro import e2e_config
+from repro.constraints import ConstraintCache, schema_for_fields
+from repro.data import synthetic
+from repro.models import init_model
+from repro.serving import AsyncServingEngine, ServingEngine
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+@pytest.fixture(scope="module")
+def setup(tok):
+    cfg = dataclasses.replace(e2e_config(tok.vocab_size), num_layers=2)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(gen_len=32, block_size=8, diffusion_steps_per_block=4,
+                       decode="dingo")
+    return cfg, params, scfg
+
+
+def _mixed_requests():
+    """Mixed 8-request stream: 4 constraint kinds, heterogeneous budgets,
+    a couple of elevated priority classes (inert under the default FIFO)."""
+    js0 = schema_for_fields(synthetic.JSON_SCHEMAS[0][0])
+    specs = [
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 8),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 8),
+        (Constraint.json_schema(js0), 32),
+        (Constraint.regex(r"(ab|ba)+"), 16),
+        (Constraint.choice(["yes", "no", "maybe"]), 8),
+        (Constraint.none(), 16),
+    ]
+    return [Request(f"prompt {i}: ", c, max_new_tokens=m,
+                    priority=1 if i % 4 == 0 else 0)
+            for i, (c, m) in enumerate(specs)]
+
+
+def _mk_engine(setup, tok, *, clock="slot", kv="dense", policy=None,
+               n_slots=3):
+    cfg, params, scfg = setup
+    return ServingEngine(params, cfg, scfg, tok, n_slots=n_slots,
+                         max_prompt_len=32, constraint_cache=ConstraintCache(),
+                         seed=0, clock=clock, kv_layout=kv, page_size=8,
+                         policy=policy)
+
+
+def _run_async(eng, reqs):
+    """Drive the asyncio front-end with concurrent per-request consumers;
+    returns ({order-index: completion}, {order-index: streamed tokens})."""
+    order = {r.request_id: i for i, r in enumerate(reqs)}
+
+    async def _main():
+        aeng = AsyncServingEngine(eng, prefill_ahead=1)
+        handles = [aeng.submit(r) for r in reqs]
+        streams = {order[h.request.request_id]: [] for h in handles}
+
+        async def _consume(h):
+            async for t in h:
+                streams[order[h.request.request_id]].append(t)
+            return await h.completion()
+
+        consumers = [asyncio.ensure_future(_consume(h)) for h in handles]
+        await aeng.drain()
+        comps = await asyncio.gather(*consumers)
+        return {order[c.request_id]: c for c in comps}, streams
+
+    return asyncio.run(_main())
+
+
+@pytest.mark.parametrize("kv", ["dense", "paged"])
+@pytest.mark.parametrize("clock", ["slot", "block"])
+def test_async_vs_sync_token_identical(tok, setup, clock, kv):
+    """ISSUE acceptance: per request, the async front-end is token- and
+    validity-identical to sync serve() on the mixed 8-request stream, for
+    every clock x KV-layout combination."""
+    sync_eng = _mk_engine(setup, tok, clock=clock, kv=kv)
+    sreqs = _mixed_requests()
+    sorder = {r.request_id: i for i, r in enumerate(sreqs)}
+    sync = {sorder[c.request_id]: c for c in sync_eng.serve(sreqs)}
+
+    async_eng = _mk_engine(setup, tok, clock=clock, kv=kv)
+    areqs = _mixed_requests()
+    acomps, streams = _run_async(async_eng, areqs)
+
+    assert set(sync) == set(acomps) == set(range(len(sreqs)))
+    for i in sorted(sync):
+        cs, ca = sync[i], acomps[i]
+        assert cs.tokens == ca.tokens, f"request #{i} diverged sync vs async"
+        assert cs.text == ca.text
+        assert (cs.valid, cs.matched, cs.blocks) == \
+            (ca.valid, ca.matched, ca.blocks)
+        # the stream IS the completion: concatenated deltas, no gaps/dupes
+        assert streams[i] == ca.tokens
+
+    if kv == "paged":
+        assert async_eng.pool.in_use == 0
+        assert async_eng.pool.available() == async_eng.pool.capacity
+
+
+def test_async_timing_metadata_accounting(tok, setup):
+    """queue_s + prefill_s + decode_s == latency_s exactly (decode_s is the
+    defined remainder — docs/SERVING.md "Timing"), and ttfc_s stamps at the
+    first *streamed* token: between admission and completion."""
+    eng = _mk_engine(setup, tok, clock="slot", kv="dense")
+    comps, streams = _run_async(eng, _mixed_requests())
+    assert streams and all(len(s) > 0 for s in streams.values())
+    for c in comps.values():
+        m = c.metadata
+        assert m["queue_s"] >= 0.0 and m["prefill_s"] >= 0.0
+        assert m["decode_s"] >= 0.0
+        assert m["queue_s"] + m["prefill_s"] + m["decode_s"] == \
+            pytest.approx(c.latency_s, abs=1e-9)
+        assert 0.0 < m["ttfc_s"] <= c.latency_s
+        assert m["queue_s"] <= m["ttfc_s"]
+
+
+def test_sync_serve_is_a_thin_wrapper_over_micro_step(tok, setup):
+    """The blocking surface survives the refactor pinned token-identical:
+    hand-driving micro_step() reproduces serve() exactly, and StepEvents
+    deltas only appear when streaming is enabled."""
+    eng = _mk_engine(setup, tok)
+    reqs = _mixed_requests()
+    order = {r.request_id: i for i, r in enumerate(reqs)}
+    base = {order[c.request_id]: c for c in eng.serve(reqs)}
+
+    eng2 = _mk_engine(setup, tok)
+    reqs2 = _mixed_requests()
+    order2 = {r.request_id: i for i, r in enumerate(reqs2)}
+    for r in reqs2:
+        eng2.submit(r)
+    manual = {}
+    while eng2.sched.pending or eng2.sched.busy:
+        ev = eng2.micro_step()
+        assert ev.deltas == {}            # stream off -> no delta collection
+        for c in ev.completions:
+            manual[order2[c.request_id]] = c
+    assert set(manual) == set(base)
+    for i in base:
+        assert base[i].tokens == manual[i].tokens
+        assert base[i].valid == manual[i].valid
+
+
+def test_preempt_resume_round_trip_token_identical(tok, setup):
+    """ISSUE acceptance: a request preempted mid-decode (pages evicted, DFA
+    carry + committed tokens retained host-side) resumes via replay to the
+    EXACT tokens of a never-preempted run."""
+    mk_victim = lambda: Request("victim: ", Constraint.regex(r"(ab|ba)+"),
+                                max_new_tokens=32, priority=0)
+
+    solo_eng = _mk_engine(setup, tok, kv="paged", n_slots=1)
+    (solo,) = list(solo_eng.serve([mk_victim()]))
+
+    eng = _mk_engine(setup, tok, kv="paged", n_slots=1, policy="priority")
+    victim = mk_victim()
+    eng.submit(victim)
+    # let the victim commit its first block, then spring a higher class on it
+    while not any(s.blocks_done >= 1 for s in eng.sched.active_slots):
+        assert eng.micro_step().completions == []
+    hi = Request("hi: ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=8,
+                 priority=1)
+    eng.submit(hi)
+    done = {}
+    while eng.sched.pending or eng.sched.busy:
+        for c in eng.micro_step().completions:
+            done[c.request_id] = c
+
+    assert eng.sched.stats.preempted >= 1
+    assert eng.sched.stats.resumed >= 1
+    assert set(done) == {victim.request_id, hi.request_id}
+    cv = done[victim.request_id]
+    assert cv.metadata["preempts"] >= 1
+    assert cv.metadata["parked_s"] >= 0.0
+    # the interloper ran to completion while the victim was parked
+    assert done[hi.request_id].valid and done[hi.request_id].matched
+    # round trip: replayed KV + carried DFA state converge on the solo run
+    assert cv.tokens == solo.tokens
+    assert cv.text == solo.text
+    assert (cv.valid, cv.matched, cv.blocks) == \
+        (solo.valid, solo.matched, solo.blocks)
+    # eviction returned every page; resume re-reserved and drained clean
+    assert eng.pool.in_use == 0
+    assert eng.pool.available() == eng.pool.capacity
+
+
+def test_async_submit_requires_running_loop(tok, setup):
+    eng = _mk_engine(setup, tok)
+    aeng = AsyncServingEngine(eng)
+    with pytest.raises(RuntimeError):
+        aeng.submit(_mixed_requests()[0])

@@ -1,0 +1,254 @@
+"""repro.serving.policy + scheduler preemption mechanics (PR 10).
+
+Host-only tests: policy ordering/victim selection on synthetic views, and the
+scheduler's preempt -> park -> resume lifecycle driven with synthetic blocks
+(no model, no device). The engine-level replay/token-identity differential
+lives in tests/test_async_engine.py.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Request
+from repro.constraints import Constraint, ConstraintCache
+from repro.serving import ContinuousBatchingScheduler
+from repro.serving.policy import (
+    Candidate,
+    FifoPolicy,
+    PriorityPolicy,
+    RunningView,
+    make_policy,
+)
+from repro.tokenizer import default_tokenizer
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def _cand(priority=0, submit_step=0, seq=0, parked=False, src_idx=0,
+          min_tokens=None, max_new_tokens=8):
+    return Candidate(request=None, priority=priority, submit_step=submit_step,
+                     seq=seq, parked=parked, src_idx=src_idx,
+                     min_tokens=min_tokens, max_new_tokens=max_new_tokens)
+
+
+# ---------------------------------------------------------------------------
+# policy objects
+# ---------------------------------------------------------------------------
+def test_fifo_policy_selects_head():
+    p = FifoPolicy()
+    cands = [_cand(priority=0, seq=0), _cand(priority=9, seq=1)]
+    assert p.select(cands) == 0          # arrival order, priority ignored
+    assert p.victim(cands[1], [RunningView(0, 0, 1, 4)]) is None
+    assert not p.preemptive and p.window == 1 and not p.needs_floor
+
+
+def test_priority_policy_deadline_order():
+    p = PriorityPolicy(order="deadline")
+    cands = [
+        _cand(priority=0, submit_step=0, seq=0),
+        _cand(priority=2, submit_step=9, seq=1),
+        _cand(priority=2, submit_step=3, seq=2),
+        _cand(priority=1, submit_step=1, seq=3),
+    ]
+    # highest class first; earliest arrival within the class
+    assert p.select(cands) == 2
+
+
+def test_priority_policy_sjf_order_uses_floor():
+    p = PriorityPolicy(order="sjf")
+    cands = [
+        _cand(priority=0, min_tokens=12, seq=0),
+        _cand(priority=0, min_tokens=2, seq=1),
+        _cand(priority=0, min_tokens=None, max_new_tokens=32, seq=2),
+    ]
+    # provably-shortest job first; unconstrained keys on its token budget
+    assert p.select(cands) == 1
+
+
+def test_priority_policy_seq_tiebreak_prefers_parked():
+    p = PriorityPolicy(order="deadline")
+    # identical keys: the parked candidate was enumerated first (lower seq)
+    cands = [_cand(priority=1, submit_step=5, seq=0, parked=True),
+             _cand(priority=1, submit_step=5, seq=1)]
+    assert p.select(cands) == 0
+
+
+def test_priority_policy_victim_strictly_lower():
+    p = PriorityPolicy(order="deadline", preemptive=True)
+    cand = _cand(priority=1)
+    running = [RunningView(index=0, priority=1, blocks_done=0, blocks_total=4),
+               RunningView(index=1, priority=2, blocks_done=0, blocks_total=4)]
+    assert p.victim(cand, running) is None       # nothing strictly below
+    running.append(RunningView(index=2, priority=0, blocks_done=3,
+                               blocks_total=4))
+    running.append(RunningView(index=3, priority=0, blocks_done=1,
+                               blocks_total=4))
+    # lowest class, least committed progress (cheapest replay) wins
+    assert p.victim(cand, running) == 3
+
+
+def test_make_policy_factory():
+    assert make_policy("fifo").name == "fifo"
+    pr = make_policy("priority")
+    assert pr.name == "priority" and pr.preemptive and pr.order == "deadline"
+    sj = make_policy("priority-sjf")
+    assert sj.order == "sjf" and sj.preemptive
+    with pytest.raises(ValueError):
+        make_policy("lifo")
+    with pytest.raises(ValueError):
+        PriorityPolicy(order="random")
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+def _mk_sched(tok, policy=None, n_slots=1, block_size=4, max_blocks=4):
+    return ContinuousBatchingScheduler(
+        n_slots, ConstraintCache(), tok, block_size=block_size,
+        decode="dingo", max_blocks=max_blocks, policy=policy,
+    )
+
+
+def _commit_block(sched, text="abab"):
+    """Record one synthetic committed block on every occupied slot."""
+    tok = sched.tok
+    d = sched.block_size
+    block = np.zeros((sched.n_slots, d), np.int32)
+    qf = np.zeros(sched.n_slots, np.int32)
+    for s in sched.active_slots:
+        row = (tok.encode(text) * d)[:d]
+        block[s.index] = row
+        qf[s.index] = s.entry.tokendfa.run(row, s.q_state)
+    return sched.record_block(block, np.ones(sched.n_slots, bool), qf, steps=2)
+
+
+def test_scheduler_default_policy_is_exact_fifo(tok):
+    """policy=None == FifoPolicy(): priorities ignored, arrival order kept."""
+    for policy in (None, FifoPolicy()):
+        sched = _mk_sched(tok, policy=policy, n_slots=2)
+        reqs = [Request(f"p{i} ", Constraint.regex(r"(ab|ba)+"),
+                        max_new_tokens=4, priority=3 - i) for i in range(3)]
+        for r in reqs:
+            sched.submit(r)
+        admitted, _ = sched.admit()
+        assert [s.request.request_id for s in admitted] == \
+            [reqs[0].request_id, reqs[1].request_id]
+        assert sched.policy.name == "fifo"
+        assert sched.plan_preemptions() == []      # fifo never preempts
+
+
+def test_scheduler_priority_order_and_window(tok):
+    sched = _mk_sched(tok, policy=make_policy("priority"), n_slots=1)
+    reqs = [Request(f"p{i} ", Constraint.regex(r"(ab|ba)+"),
+                    max_new_tokens=4, priority=p)
+            for i, p in enumerate([0, 2, 1])]
+    for r in reqs:
+        sched.submit(r)
+    order = []
+    while sched.pending or sched.busy:
+        admitted, _ = sched.admit()
+        for s in admitted:
+            order.append(s.request.request_id)
+            sched.release(s)
+    assert order == [reqs[1].request_id, reqs[2].request_id, reqs[0].request_id]
+
+
+def test_scheduler_sjf_orders_by_distance_floor(tok):
+    sched = _mk_sched(tok, policy=make_policy("priority-sjf"), n_slots=1,
+                      block_size=8, max_blocks=4)
+    long_r = Request("p ", Constraint.regex(r"[x]{20}"), max_new_tokens=32)
+    short_r = Request("q ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=32)
+    sched.submit(long_r), sched.submit(short_r)
+    admitted, _ = sched.admit()
+    # the (ab|ba)+ floor (2 tokens) beats [x]{20} (20 tokens) despite arrival
+    assert admitted[0].request.request_id == short_r.request_id
+
+
+def test_scheduler_preempt_park_resume_lifecycle(tok):
+    sched = _mk_sched(tok, policy=make_policy("priority"), n_slots=1)
+    low = Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16,
+                  priority=0)
+    sched.submit(low)
+    (slot,), _ = sched.admit()
+    slot.pos = 8                        # engine would set after prefill
+    _commit_block(sched)                # one committed block
+    assert slot.blocks_done == 1 and slot.pos == 12
+    committed = list(slot.tokens)
+    q_carry = slot.q_state
+
+    # nothing to preempt for: no waiting candidate
+    assert sched.plan_preemptions() == []
+
+    high = Request("q ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=4,
+                   priority=1)
+    sched.submit(high)
+    victims = sched.plan_preemptions()
+    assert victims == [slot]
+    ps = sched.preempt(slot)
+    assert slot.free and sched.stats.preempted == 1
+    assert ps.blocks_done == 1 and ps.tokens == committed
+    assert ps.q_state == q_carry and ps.prompt_len == 8
+    assert ps.n_preempts == 1
+    assert sched.pending == 2           # parked snapshot + queued high
+
+    # the high-priority request takes the freed slot; the snapshot waits
+    (hslot,), _ = sched.admit()
+    assert hslot.request.request_id == high.request_id
+    assert hslot.resume is None
+    # no preemption chain: the parked pri-0 snapshot cannot evict pri-1
+    assert sched.plan_preemptions() == []
+    _commit_block(sched)                # high's single block -> retires
+    for s in list(sched.active_slots):
+        if s.blocks_done >= s.blocks_total:
+            sched.release(s)
+
+    # resume: the snapshot re-enters through admit with slot.resume set
+    (rslot,), _ = sched.admit()
+    assert rslot.request.request_id == low.request_id
+    assert rslot.resume is ps
+    assert rslot.blocks_done == 1 and rslot.tokens == committed
+    assert rslot.q_state == q_carry
+    assert sched.stats.resumed == 1 and len(sched.preempted) == 0
+    assert rslot.pos == 0               # engine replays and sets pos
+
+    # engine replay happened; finish the remaining budget
+    rslot.resume = None
+    rslot.pos = 8 + rslot.blocks_done * sched.block_size
+    while rslot.blocks_done < rslot.blocks_total:
+        _commit_block(sched)
+    sched.release(rslot)
+    assert sched.busy == 0 and sched.pending == 0
+
+
+def test_scheduler_preempt_page_guard(tok):
+    """No eviction when freeing the victim's pages still can't fit the
+    candidate — pointless preemptions are planned away, not executed."""
+    from repro.serving import PagePool
+
+    pool = PagePool(7, 8)
+    sched = ContinuousBatchingScheduler(
+        1, ConstraintCache(), tok, block_size=8, decode="dingo", max_blocks=8,
+        page_pool=pool, prompt_len_fn=lambda r: 16,
+        policy=make_policy("priority"),
+    )
+    low = Request("p ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16,
+                  priority=0)           # span 16+16 -> 2 blocks, 4 pages
+    sched.submit(low)
+    (slot,), _ = sched.admit()
+    slot.pos = 16
+    pool.alloc(slot.index, 2)           # 5 pages left in the pool
+    # top candidate spans 16 + 8*8 = 80 tokens -> 10 pages; evicting the
+    # victim frees only its 2, still short of 10 -> the planner declines
+    big = Request("q ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=64,
+                  priority=1)
+    sched.submit(big)
+    assert sched.plan_preemptions() == []
+    # a candidate that DOES fit once the victim's pages return gets one:
+    # 16 + 2*8 = 32 tokens -> 4 pages <= 5 available (slot shortage, not
+    # page shortage, is what blocks it)
+    fit = Request("r ", Constraint.regex(r"(ab|ba)+"), max_new_tokens=16,
+                  priority=2)
+    sched.submit(fit)
+    assert sched.plan_preemptions() == [slot]

@@ -469,6 +469,130 @@ def test_scheduler_soak_1000_requests_16_slots(tok):
                        for r in rejected.values())
 
 
+def test_scheduler_soak_preemption_1000_requests(tok):
+    """PR 10 soak: the 1000-request bursty trace under the preemptive
+    priority policy (every 5th request rides class 1), sized so the SLOTS
+    are the contended resource (the page-pressure regime is the previous
+    soak's job), with the driver executing plan_preemptions() -> preempt()
+    before each admit and simulating the engine's replay on resume. Two
+    arms: no SLO (every snapshot must resume) and an SLO whose parked-time
+    re-evaluation genuinely kills a snapshot. Invariants: the grid drains
+    with zero slot/page leaks, preemption and resume both happened, and
+    every parked snapshot deterministically either resumed (and retired) or
+    was rejected — none left parked, none ran twice, none vanished."""
+    from benchmarks.trace import TraceConfig, build_requests, gen_trace
+    from repro.serving import SLO, PagePool
+    from repro.serving.policy import make_policy
+
+    trace = gen_trace(TraceConfig(n_requests=1000, seed=3, rate=3.0,
+                                  burstiness=6.0))
+    cache = ConstraintCache()
+    eos = tok.eos_token_id
+    d, T = 8, 2
+
+    def oracle_row(s):
+        td, dist = s.entry.tokendfa, s.entry.dist
+        q, row = s.q_state, []
+        for _ in range(d):
+            if dist[q] == 0:
+                row.append(eos)
+            else:
+                t = int(np.argmin(dist[np.asarray(td.trans[q])]))
+                row.append(t)
+                q = int(td.trans[q, t])
+        return row, q
+
+    for slo, n_slots, n_pages in ((None, 4, 30),
+                                  (SLO(target_steps=12), 3, 25)):
+        arrivals = []
+        for k, (step, r) in enumerate(build_requests(trace)):
+            r.priority = 1 if k % 5 == 0 else 0
+            arrivals.append((step, r))
+        all_ids = {r.request_id for _, r in arrivals}
+
+        pool = PagePool(n_pages, 8)
+        sched = ContinuousBatchingScheduler(
+            n_slots, cache, tok, block_size=d, decode="dingo", max_blocks=4,
+            page_pool=pool, prompt_len_fn=lambda r: 16,
+            slo=slo, steps_per_block=T, policy=make_policy("priority"),
+        )
+        i = 0
+        retired, admitted_ids = [], set()
+        rejected = {}
+        parked_open = set()                     # snapshots awaiting a verdict
+        iters = 0
+        while i < len(arrivals) or sched.pending or sched.busy:
+            iters += 1
+            assert iters < 30_000, "preemption soak failed to drain"
+            while i < len(arrivals) and sched.step_clock >= arrivals[i][0]:
+                sched.submit(arrivals[i][1])
+                i += 1
+            for victim in sched.plan_preemptions():    # engine step order
+                rid = victim.request.request_id
+                sched.preempt(victim)
+                parked_open.add(rid)
+            admitted, rej = sched.admit()
+            rejected.update((r.request_id, reason) for r, reason in rej)
+            parked_open -= rejected.keys()      # SLO re-eval killed a snapshot
+            for s in admitted:
+                rid = s.request.request_id
+                if s.resume is not None:        # simulate the engine replay
+                    assert rid in parked_open, "resume without a preempt"
+                    parked_open.discard(rid)
+                    s.pos = 16 + s.blocks_done * d
+                    pool.alloc(s.index, -(-s.pos // 8))
+                    s.resume = None
+                else:
+                    assert rid not in admitted_ids, "slot reuse"
+                    admitted_ids.add(rid)
+                    s.pos = 16
+                    pool.alloc(s.index, 2)
+            if not sched.busy:
+                sched.step_clock += 1
+                continue
+            for s in sched.active_slots:
+                need = -(-(s.pos + d) // 8)
+                have = len(pool.pages(s.index))
+                if need > have:
+                    pool.alloc(s.index, need - have)
+            block = np.zeros((n_slots, d), np.int32)
+            qf = np.zeros(n_slots, np.int32)
+            for s in sched.active_slots:
+                row, q = oracle_row(s)
+                block[s.index] = row
+                qf[s.index] = q
+            for s in sched.record_block(block, np.ones(n_slots, bool), qf,
+                                        steps=T):
+                retired.append(s.request.request_id)
+                sched.release(s)
+            sched.step_clock += T
+
+        # preemption genuinely exercised, and conserved: every preempt event
+        # was answered by exactly one resume or one parked-snapshot reject
+        assert sched.stats.preempted > 0
+        assert not parked_open, "snapshots left parked after drain"
+        parked_rejects = admitted_ids & rejected.keys()
+        assert sched.stats.resumed + len(parked_rejects) >= \
+            sched.stats.preempted
+        # lifecycle: everything retired exactly once or rejected; a request
+        # appears on both sides only via the preempt -> SLO-reject path
+        assert sorted(retired) == sorted(admitted_ids - rejected.keys())
+        assert admitted_ids | rejected.keys() == all_ids
+        if slo is None:
+            assert not parked_rejects           # nothing to kill a snapshot
+            assert sched.stats.resumed == sched.stats.preempted > 0
+        else:
+            # the SLO re-evaluation rejected at least one parked snapshot:
+            # the deterministic non-resume exit from the parked state
+            assert parked_rejects
+            assert sched.stats.degraded > 0
+        # zero slot leak, zero page leak
+        assert sched.busy == 0 and sched.pending == 0
+        assert all(s.free for s in sched.slots)
+        assert pool.in_use == 0 and pool.idle
+        assert pool.available() == pool.capacity
+
+
 # ---------------------------------------------------------------------------
 # end-to-end acceptance: mixed stream through the serving engine
 # ---------------------------------------------------------------------------
